@@ -1,0 +1,87 @@
+"""Kernel-level benchmark: wall time of the jitted scoring paths on
+this host (CPU; TPU numbers come from the dry-run roofline) plus the
+analytic HBM-traffic comparison fused-vs-unfused that motivates the
+decompress_maxsim kernel (the TPU adaptation of "don't materialise the
+index")."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save
+from repro.kernels.decompress_maxsim.ops import decompress_maxsim_scores
+from repro.kernels.maxsim.ops import maxsim_scores
+from repro.kernels.splade_score.ops import splade_block_scores
+
+
+def _time(fn, *args, iters=20):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def hbm_model(C, Ld, d, nbits, Lq):
+    """Per-candidate HBM bytes: fused reads packed codes + cid; the
+    unfused pipeline additionally writes+reads the fp32 embeddings."""
+    packed = Ld * d * nbits // 8 + Ld * 4
+    fp32 = Ld * d * 4
+    return {"fused_bytes": C * packed,
+            "unfused_bytes": C * (packed + 2 * fp32),
+            "traffic_ratio": (packed + 2 * fp32) / packed}
+
+
+def main(quick: bool = False):
+    out = {}
+    k = jax.random.PRNGKey(0)
+    C, Ld, Lq, d, nbits = (256 if quick else 1024), 96, 32, 128, 4
+
+    q = jax.random.normal(k, (Lq, d))
+    docs = jax.random.normal(jax.random.fold_in(k, 1), (C, Ld, d))
+    valid = jnp.ones((C, Ld), bool)
+    t_maxsim = _time(lambda a, b, c: maxsim_scores(a, b, c, impl="ref"),
+                     q, docs, valid)
+
+    packed = jax.random.randint(jax.random.fold_in(k, 2),
+                                (C, Ld, d * nbits // 8), 0, 256
+                                ).astype(jnp.uint8)
+    cids = jax.random.randint(jax.random.fold_in(k, 3), (C, Ld), 0, 4096)
+    cent = jax.random.normal(jax.random.fold_in(k, 4), (4096, d))
+    bw = jnp.linspace(-0.2, 0.2, 16)
+    t_fused = _time(lambda *a: decompress_maxsim_scores(
+        *a, nbits=nbits, impl="ref"), q, packed, cids, valid, cent, bw)
+
+    pids = jax.random.randint(jax.random.fold_in(k, 5), (32, 512), -1,
+                              100_000, jnp.int32)
+    imps = jax.random.uniform(jax.random.fold_in(k, 6), (32, 512))
+    w = jax.random.uniform(jax.random.fold_in(k, 7), (32,))
+    t_splade = _time(lambda *a: splade_block_scores(
+        *a, n_docs=100_000, impl="ref"), pids, imps, w)
+
+    model = hbm_model(C, Ld, d, nbits, Lq)
+    out.update({
+        "maxsim_ms": t_maxsim * 1e3,
+        "decompress_maxsim_ms": t_fused * 1e3,
+        "splade_score_ms": t_splade * 1e3,
+        "candidates": C, "doc_maxlen": Ld,
+        **model,
+    })
+    print(f"maxsim({C}x{Ld})           {t_maxsim * 1e3:8.2f} ms")
+    print(f"decompress_maxsim({C}x{Ld}) {t_fused * 1e3:8.2f} ms")
+    print(f"splade_score(32x512)      {t_splade * 1e3:8.2f} ms")
+    print(f"fused vs unfused HBM traffic: {model['traffic_ratio']:.1f}x "
+          f"less for the fused kernel")
+    assert model["traffic_ratio"] > 10
+    save("kernels", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Table 2: retrieval quality of ColBERTv2 / SPLADEv2 / Rerank / Hybrid
+on the in-domain set (α tuned there) and two OOD sets, reporting
+MRR@10, R@5, R@50, S@5 and Δ% vs full ColBERTv2."""
+
+from __future__ import annotations
+
+from benchmarks.common import DATASETS, dataset, run_all_queries, save
+from repro.eval import metrics
+
+METHODS = ["colbert", "splade", "rerank", "hybrid"]
+
+
+def evaluate(name: str, alpha: float = 0.3):
+    corpus, _, _, retr = dataset(name)
+    qrels = corpus["qrels"]
+    out = {}
+    for m in METHODS:
+        ranked, _ = run_all_queries(retr, corpus, m, alpha=alpha)
+        out[m] = {
+            "MRR@10": metrics.mrr_at_k(ranked, qrels, 10),
+            "R@5": metrics.recall_at_k(ranked, qrels, 5),
+            "R@50": metrics.recall_at_k(ranked, qrels, 50),
+            "S@5": metrics.success_at_k(ranked, qrels, 5),
+        }
+    return out
+
+
+def main(quick: bool = False):
+    names = ["marco"] if quick else list(DATASETS)
+    table = {}
+    for name in names:
+        res = evaluate(name)
+        table[name] = res
+        base = res["colbert"]["S@5"]
+        print(f"\n== {name} ==")
+        print(f"{'method':10s} MRR@10  R@5    R@50   S@5    ΔS@5")
+        for m in METHODS:
+            r = res[m]
+            delta = 100 * (r["S@5"] - base) / max(base, 1e-9)
+            print(f"{m:10s} {r['MRR@10']:.4f} {r['R@5']:.4f} "
+                  f"{r['R@50']:.4f} {r['S@5']:.4f} {delta:+.1f}%")
+        # paper-shape assertions (trend checks, not absolute numbers)
+        assert res["hybrid"]["MRR@10"] >= res["rerank"]["MRR@10"] - 0.01
+        assert res["hybrid"]["MRR@10"] > res["splade"]["MRR@10"]
+        assert res["colbert"]["MRR@10"] > res["splade"]["MRR@10"]
+    save("quality_table2", table)
+    return table
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Shared benchmark fixtures: three synthetic datasets standing in for
+the paper's MS MARCO (in-domain), Wikipedia/NQ (OOD, large), and LoTTE
+Lifestyle (OOD, small), with noise profiles that mirror each setting."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.multistage import MultiStageParams, MultiStageRetriever
+from repro.core.plaid import PLAIDSearcher, PlaidParams
+from repro.data.synth import SynthCfg, make_corpus
+from repro.index.builder import ColBERTIndex, build_colbert_index
+from repro.index.splade_index import build_splade_index
+
+RESULTS = pathlib.Path(__file__).resolve().parent.parent / "results" / "bench"
+
+# dataset profiles: in-domain has mild noise (α tuned here); the OOD
+# sets skew the semantic/lexical error balance like the paper's
+# Wikipedia (ColBERT generalises better) and LoTTE (lexical helps).
+DATASETS = {
+    "marco": SynthCfg(n_docs=4000, n_queries=300, n_topics=96, seed=11),
+    "wiki": SynthCfg(n_docs=8000, n_queries=250, n_topics=128,
+                     sem_noise=1.7, lex_gap=0.45, lex_drop=0.30, seed=23),
+    "lotte": SynthCfg(n_docs=1200, n_queries=200, n_topics=48,
+                      sem_noise=1.35, confuser=0.5, lex_gap=0.30,
+                      lex_drop=0.18, seed=37),
+}
+
+_CACHE: dict = {}
+
+
+def dataset(name: str, mode: str = "mmap"):
+    """(corpus, ColBERTIndex, SpladeIndex, MultiStageRetriever)."""
+    key = (name, mode)
+    if key in _CACHE:
+        return _CACHE[key]
+    cfg = DATASETS[name]
+    corpus = make_corpus(cfg)
+    d = pathlib.Path(tempfile.mkdtemp(prefix=f"bench_{name}_"))
+    build_colbert_index(d, corpus["doc_embs"], corpus["doc_lens"],
+                        nbits=4, kmeans_iters=6)
+    index = ColBERTIndex(d, mode=mode)
+    sidx = build_splade_index(corpus["doc_term_ids"],
+                              corpus["doc_term_weights"], cfg.vocab,
+                              cfg.n_docs)
+    searcher = PLAIDSearcher(index, PlaidParams(nprobe=4,
+                                                candidate_cap=1024,
+                                                ndocs=256, k=100))
+    retr = MultiStageRetriever(sidx, searcher,
+                               MultiStageParams(first_k=200, k=100,
+                                                alpha=0.3))
+    out = (corpus, index, sidx, retr)
+    _CACHE[key] = out
+    return out
+
+
+def run_all_queries(retr, corpus, method: str, n_queries=None, alpha=None,
+                    k=100):
+    n = n_queries or len(corpus["qrels"])
+    ranked, lat = [], []
+    for qi in range(n):
+        t0 = time.perf_counter()
+        pids, _ = retr.search(method, q_emb=corpus["q_embs"][qi],
+                              term_ids=corpus["q_term_ids"][qi],
+                              term_weights=corpus["q_term_weights"][qi],
+                              alpha=alpha, k=k)
+        lat.append(time.perf_counter() - t0)
+        ranked.append(pids)
+    return np.stack(ranked), np.asarray(lat)
+
+
+def save(name: str, payload: dict):
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / f"{name}.json").write_text(json.dumps(payload, indent=1))
+    return payload

@@ -1,0 +1,59 @@
+"""Benchmark driver: one module per paper table/figure + kernel and
+roofline summaries. ``python -m benchmarks.run [--quick]``."""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="single dataset, fewer queries")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (bench_alpha, bench_kernels, bench_latency,
+                            bench_quality, bench_ram)
+    suites = [
+        ("quality_table2", bench_quality.main),
+        ("alpha_table3", bench_alpha.main),
+        ("ram_table1", bench_ram.main),
+        ("latency_fig12", bench_latency.main),
+        ("kernels", bench_kernels.main),
+    ]
+    failures = []
+    for name, fn in suites:
+        if args.only and args.only != name:
+            continue
+        print(f"\n########## {name} ##########")
+        t0 = time.time()
+        try:
+            fn(quick=args.quick)
+            print(f"[{name}] OK in {time.time() - t0:.1f}s")
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+            print(f"[{name}] FAILED after {time.time() - t0:.1f}s")
+
+    # roofline summary from the dry-run artefacts, if present
+    try:
+        import pathlib
+
+        from repro.launch.roofline import table
+        d = pathlib.Path("results/dryrun")
+        if any(d.glob("*.json")):
+            print("\n########## roofline (single-pod, from dry-run) ##########")
+            print(table(d, "single"))
+    except Exception:
+        traceback.print_exc()
+
+    print(f"\nbenchmarks done; failures: {failures or 'none'}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

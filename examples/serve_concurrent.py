@@ -1,0 +1,109 @@
+"""End-to-end serving driver (the paper's deployment scenario):
+
+    PYTHONPATH=src python examples/serve_concurrent.py [--tcp]
+
+Brings up the concurrent retrieval server over a memory-mapped index,
+drives it with Poisson traffic at several offered loads (batched
+concurrent clients), and reports client-observed p50/p95/p99 — the
+paper's Fig 1/2 methodology. --tcp also exercises the newline-JSON TCP
+front with a real socket client.
+"""
+
+import argparse
+import pathlib
+import sys
+import tempfile
+import threading
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))
+
+import numpy as np
+
+from repro.core.multistage import MultiStageParams, MultiStageRetriever
+from repro.core.plaid import PLAIDSearcher, PlaidParams
+from repro.data.synth import SynthCfg, make_corpus
+from repro.index.builder import ColBERTIndex, build_colbert_index
+from repro.index.splade_index import build_splade_index
+from repro.serving.engine import Request, ServeEngine
+from repro.serving.loadgen import run_poisson_load
+from repro.serving.server import (RetrievalServer, TCPRetrievalServer,
+                                  tcp_query)
+
+
+def build_stack():
+    cfg = SynthCfg(n_docs=2500, n_queries=200, seed=3)
+    corpus = make_corpus(cfg)
+    d = tempfile.mkdtemp(prefix="serve_")
+    build_colbert_index(d, corpus["doc_embs"], corpus["doc_lens"],
+                        nbits=4, n_centroids=256, kmeans_iters=4)
+    index = ColBERTIndex(d, mode="mmap")
+    sidx = build_splade_index(corpus["doc_term_ids"],
+                              corpus["doc_term_weights"], cfg.vocab,
+                              cfg.n_docs)
+    searcher = PLAIDSearcher(index, PlaidParams(nprobe=4,
+                                                candidate_cap=1024,
+                                                ndocs=256))
+    retr = MultiStageRetriever(sidx, searcher,
+                               MultiStageParams(first_k=200, alpha=0.3))
+    return corpus, retr
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tcp", action="store_true")
+    ap.add_argument("--method", default="hybrid")
+    ap.add_argument("--n", type=int, default=50)
+    ap.add_argument("--threads", type=int, default=1)
+    args = ap.parse_args()
+
+    print("building index + retriever ...")
+    corpus, retr = build_stack()
+    server = RetrievalServer(ServeEngine(retr), n_threads=args.threads)
+    server.start()
+
+    def reqs(n):
+        return [Request(qid=i, method=args.method,
+                        q_emb=corpus["q_embs"][i % 200],
+                        term_ids=corpus["q_term_ids"][i % 200],
+                        term_weights=corpus["q_term_weights"][i % 200],
+                        k=20) for i in range(n)]
+
+    # warm up + measure capacity
+    for r in reqs(8):
+        server.submit(r).result(timeout=120)
+    svc = np.mean([server.submit(r).result(timeout=120).service_time
+                   for r in reqs(8)])
+    cap = 1.0 / svc
+    print(f"service time {svc * 1e3:.1f} ms → capacity ≈ {cap:.1f} QPS "
+          f"({args.threads} thread(s))\n")
+    print(f"{'offered':>10s} {'p50':>9s} {'p95':>9s} {'p99':>9s} "
+          f"{'achieved':>9s}")
+    for frac in (0.3, 0.6, 0.9, 1.5):
+        res = run_poisson_load(server, reqs(args.n), qps=cap * frac,
+                               seed=0)
+        s = res.summary()
+        print(f"{s['offered_qps']:8.1f}/s {s['p50'] * 1e3:7.1f}ms "
+              f"{s['p95'] * 1e3:7.1f}ms {s['p99'] * 1e3:7.1f}ms "
+              f"{s['achieved_qps']:7.1f}/s")
+    print("\nhealth:", server.health())
+
+    if args.tcp:
+        tcp = TCPRetrievalServer(("127.0.0.1", 0), server)
+        port = tcp.server_address[1]
+        threading.Thread(target=tcp.serve_forever, daemon=True).start()
+        print(f"\nTCP front on :{port}; sending one JSON query ...")
+        out = tcp_query("127.0.0.1", port, {
+            "qid": 0, "method": args.method,
+            "q_emb": corpus["q_embs"][0].tolist(),
+            "term_ids": corpus["q_term_ids"][0].tolist(),
+            "term_weights": corpus["q_term_weights"][0].tolist(), "k": 5})
+        print("response:", {k: out[k] for k in ("qid", "pids", "latency")})
+        tcp.shutdown()
+
+    server.drain()
+    server.stop()
+    print("drained + stopped cleanly.")
+
+
+if __name__ == "__main__":
+    main()

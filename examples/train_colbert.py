@@ -1,0 +1,101 @@
+"""Train a ColBERT encoder contrastively (in-batch negatives) with the
+fault-tolerant loop, then build an index from it and check retrieval.
+
+    PYTHONPATH=src python examples/train_colbert.py [--steps 300]
+
+Demonstrates: synthetic token corpus → contrastive training (AdamW,
+checkpoint every 50 steps, resumable — re-run the command and it
+continues) → corpus encoding → index build → MaxSim retrieval quality
+before vs after training.
+"""
+
+import argparse
+import pathlib
+import sys
+import tempfile
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.colbert_serve import smoke_cfg
+from repro.data.synth import make_token_corpus
+from repro.models import colbert as CB
+from repro.training.optimizer import AdamWCfg
+from repro.training.train_loop import LoopCfg, SeekableData, run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    ccfg = smoke_cfg().colbert
+    rng = np.random.default_rng(0)
+    n_docs = 256
+    doc_toks, doc_lens = make_token_corpus(rng, n_docs, ccfg.encoder.vocab,
+                                           ccfg.doc_maxlen)
+
+    # queries = noisy prefixes of their target docs
+    def make_batch(step):
+        r = np.random.default_rng(step)
+        idx = r.integers(0, n_docs, args.batch)
+        q = doc_toks[idx, :ccfg.query_maxlen].copy()
+        noise = r.random(q.shape) < 0.15
+        q[noise] = r.integers(4, ccfg.encoder.vocab, noise.sum())
+        return {
+            "q_tokens": jnp.asarray(q),
+            "q_lens": jnp.full((args.batch,), ccfg.query_maxlen, jnp.int32),
+            "d_tokens": jnp.asarray(doc_toks[idx]),
+            "d_lens": jnp.asarray(doc_lens[idx]),
+        }
+
+    def loss_fn(params, batch):
+        q = CB.encode_queries(params, ccfg, batch["q_tokens"],
+                              batch["q_lens"])
+        d, dv = CB.encode_docs(params, ccfg, batch["d_tokens"],
+                               batch["d_lens"])
+        s = jnp.einsum("qik,bjk->qbij", q, d)
+        s = jnp.where(dv[None, :, None, :], s, -1e30)
+        scores = jnp.sum(jnp.maximum(jnp.max(s, -1), 0.0), -1)
+        logp = jax.nn.log_softmax(scores.astype(jnp.float32), axis=-1)
+        nll = -jnp.mean(jnp.diag(logp))
+        acc = jnp.mean(jnp.argmax(scores, -1) == jnp.arange(args.batch))
+        return nll, {"nll": nll, "acc": acc}
+
+    params = CB.init(jax.random.PRNGKey(0), ccfg)
+
+    def retrieval_accuracy(p):
+        d_emb, d_valid = CB.encode_docs(p, ccfg, jnp.asarray(doc_toks),
+                                        jnp.asarray(doc_lens))
+        hits = 0
+        for i in range(0, 64):
+            q = CB.encode_queries(
+                p, ccfg, jnp.asarray(doc_toks[i:i + 1, :ccfg.query_maxlen]),
+                jnp.asarray([ccfg.query_maxlen]))[0]
+            s = CB.maxsim(q, d_emb, d_valid)
+            hits += int(jnp.argmax(s)) == i
+        return hits / 64
+
+    print(f"pre-training retrieval accuracy : {retrieval_accuracy(params):.3f}")
+    ckpt = args.ckpt or tempfile.mkdtemp(prefix="colbert_ckpt_")
+    opt = AdamWCfg(lr=2e-3, weight_decay=0.01, warmup_steps=20,
+                   total_steps=args.steps)
+    params, _, report = run(
+        loss_fn, params, SeekableData(make_batch), opt,
+        LoopCfg(total_steps=args.steps, ckpt_every=50, ckpt_dir=ckpt,
+                log_every=20))
+    if report.resumed_from:
+        print(f"(resumed from checkpointed step {report.resumed_from})")
+    print(f"loss: {report.losses[0]:.3f} → {report.losses[-1]:.3f} "
+          f"over {len(report.losses)} steps")
+    print(f"post-training retrieval accuracy: {retrieval_accuracy(params):.3f}")
+    print(f"checkpoints in {ckpt} (re-run with --ckpt {ckpt} to resume)")
+
+
+if __name__ == "__main__":
+    main()

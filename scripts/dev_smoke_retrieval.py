@@ -1,0 +1,66 @@
+"""Dev scratch: end-to-end retrieval — synth corpus → index → 4 systems →
+quality ordering + mmap accounting."""
+import tempfile
+
+import numpy as np
+
+from repro.core.multistage import MultiStageParams, MultiStageRetriever
+from repro.core.plaid import PLAIDSearcher, PlaidParams
+from repro.core.store import rss_bytes
+from repro.data.synth import SynthCfg, make_corpus
+from repro.eval import metrics
+from repro.index.builder import ColBERTIndex, build_colbert_index
+from repro.index.splade_index import build_splade_index
+
+cfg = SynthCfg(n_docs=1500, n_queries=120, seed=0)
+corpus = make_corpus(cfg)
+
+tmp = tempfile.mkdtemp()
+build_colbert_index(tmp, corpus["doc_embs"], corpus["doc_lens"], nbits=4,
+                    n_centroids=256, kmeans_iters=6)
+index = ColBERTIndex(tmp, mode="mmap")
+print("index: tokens", index.store.n_tokens, "centroids", index.n_centroids,
+      "bytes", index.store.total_bytes())
+
+sidx = build_splade_index(corpus["doc_term_ids"], corpus["doc_term_weights"],
+                          cfg.vocab, cfg.n_docs)
+searcher = PLAIDSearcher(index, PlaidParams(nprobe=4, candidate_cap=1024,
+                                            ndocs=256, k=100))
+retr = MultiStageRetriever(sidx, searcher,
+                           MultiStageParams(first_k=200, k=100, alpha=0.3))
+
+methods = ["colbert", "splade", "rerank", "hybrid"]
+ranked = {m: [] for m in methods}
+index.store.stats.reset()
+for qi in range(cfg.n_queries):
+    for m in methods:
+        pids, scores = retr.search(
+            m, q_emb=corpus["q_embs"][qi],
+            term_ids=corpus["q_term_ids"][qi],
+            term_weights=corpus["q_term_weights"][qi])
+        ranked[m].append(pids)
+
+qrels = corpus["qrels"]
+for m in methods:
+    r = np.stack(ranked[m])
+    print(f"{m:8s} MRR@10={metrics.mrr_at_k(r, qrels, 10):.4f} "
+          f"R@5={metrics.recall_at_k(r, qrels, 5):.4f} "
+          f"R@50={metrics.recall_at_k(r, qrels, 50):.4f} "
+          f"S@5={metrics.success_at_k(r, qrels, 5):.4f}")
+
+print("store pages touched:", index.store.stats.pages_touched,
+      "unique:", len(index.store.stats.unique_pages),
+      "resident frac:", f"{index.store.resident_fraction_estimate():.3f}")
+print("rss MB:", rss_bytes() / 1e6)
+
+# alpha sweep shape
+for alpha in [0.0, 0.3, 0.6, 1.0]:
+    rr = []
+    for qi in range(60):
+        pids, _ = retr.search("hybrid", q_emb=corpus["q_embs"][qi],
+                              term_ids=corpus["q_term_ids"][qi],
+                              term_weights=corpus["q_term_weights"][qi],
+                              alpha=alpha)
+        rr.append(pids)
+    print(f"alpha={alpha}: MRR@10={metrics.mrr_at_k(np.stack(rr), qrels[:60], 10):.4f}")
+print("OK")

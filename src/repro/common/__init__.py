@@ -1,0 +1,17 @@
+from repro.common.utils import (
+    PRNGSeq,
+    count_params,
+    param_bytes,
+    tree_shapes,
+    cdiv,
+    round_up,
+)
+
+__all__ = [
+    "PRNGSeq",
+    "count_params",
+    "param_bytes",
+    "tree_shapes",
+    "cdiv",
+    "round_up",
+]

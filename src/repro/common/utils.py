@@ -1,0 +1,90 @@
+"""Small shared utilities: PRNG sequencing, tree accounting, rounding."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class PRNGSeq:
+    """An iterator of fresh PRNG keys split from a root seed.
+
+    Usage::
+
+        keys = PRNGSeq(0)
+        w = init(next(keys), ...)
+    """
+
+    def __init__(self, seed_or_key):
+        if isinstance(seed_or_key, int):
+            self._key = jax.random.PRNGKey(seed_or_key)
+        else:
+            self._key = seed_or_key
+
+    def __next__(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def __iter__(self):
+        return self
+
+    def take(self, n: int):
+        self._key, *subs = jax.random.split(self._key, n + 1)
+        return subs
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b
+
+
+def _leaf_size(x) -> int:
+    if hasattr(x, "size"):
+        return int(x.size)
+    return 0
+
+
+def _leaf_nbytes(x) -> int:
+    if hasattr(x, "size") and hasattr(x, "dtype"):
+        return int(x.size) * np.dtype(x.dtype).itemsize
+    return 0
+
+
+def count_params(tree) -> int:
+    """Total element count across a pytree (works on ShapeDtypeStruct too)."""
+    return sum(_leaf_size(x) for x in jax.tree_util.tree_leaves(tree))
+
+
+def param_bytes(tree) -> int:
+    """Total byte count across a pytree (works on ShapeDtypeStruct too)."""
+    return sum(_leaf_nbytes(x) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_shapes(tree):
+    """Map a pytree to a readable {path: (shape, dtype)} dict."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        name = "/".join(str(p) for p in path)
+        out[name] = (tuple(getattr(leaf, "shape", ())), str(getattr(leaf, "dtype", "?")))
+    return out
+
+
+def assert_no_nans(tree, where: str = ""):
+    """Host-side NaN check over a pytree of concrete arrays."""
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        arr = np.asarray(leaf)
+        if np.issubdtype(arr.dtype, np.floating) and not np.isfinite(arr).all():
+            name = "/".join(str(p) for p in path)
+            raise AssertionError(f"non-finite values at {name} {where}")
+
+
+def shape_struct(shape, dtype=jnp.float32, sharding=None):
+    """Convenience ShapeDtypeStruct builder."""
+    if sharding is not None:
+        return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+    return jax.ShapeDtypeStruct(shape, dtype)

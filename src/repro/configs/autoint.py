@@ -1,0 +1,40 @@
+"""autoint [arXiv:1810.11921; paper]: 39 sparse fields, embed_dim 16,
+3 self-attention interacting layers, 2 heads, d_attn 32. Field
+vocabularies follow a Criteo-like power-law mix (3×10M hashed heavy
+fields down to 1k-row tail fields, ~38M table rows total)."""
+
+from __future__ import annotations
+
+from repro.configs.base import ArchDef, ShapeDef
+from repro.models.recsys import embedding as EB
+from repro.models.recsys.autoint import AutoIntCfg
+
+VOCABS = tuple([10_000_000] * 3 + [1_000_000] * 7 + [100_000] * 9
+               + [10_000] * 10 + [1_000] * 10)     # 39 fields, ~38M rows
+ITEM_FIELD = 3          # the candidate-item field for retrieval_cand
+
+
+def full_cfg() -> AutoIntCfg:
+    return AutoIntCfg(fields=EB.FieldSpec(VOCABS), embed_dim=16,
+                      n_attn_layers=3, n_heads=2, d_attn=32)
+
+
+def smoke_cfg() -> AutoIntCfg:
+    return AutoIntCfg(fields=EB.FieldSpec(tuple([64] * 8)), embed_dim=8,
+                      n_attn_layers=2, n_heads=2, d_attn=16)
+
+
+SHAPES = {
+    "train_batch": ShapeDef("train", {"batch": 65536}),
+    "serve_p99": ShapeDef("serve", {"batch": 512}),
+    "serve_bulk": ShapeDef("serve", {"batch": 262144}),
+    "retrieval_cand": ShapeDef("retrieval",
+                               {"batch": 1, "n_candidates": 1_048_576}),
+}
+
+ARCH = ArchDef(
+    name="autoint", family="recsys",
+    full_cfg=full_cfg, smoke_cfg=smoke_cfg, shapes=SHAPES,
+    notes="self-attn field interaction; packed 38M-row table",
+    extra={"item_field": ITEM_FIELD},
+)

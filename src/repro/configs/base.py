@@ -1,0 +1,52 @@
+"""Architecture/shape registry plumbing.
+
+Each assigned architecture module exposes an ``ArchDef``:
+
+* ``full_cfg()``  — the exact published configuration (dry-run only;
+  parameters are never materialised, everything goes through
+  ``jax.eval_shape``),
+* ``smoke_cfg()`` — a reduced same-family configuration that runs a real
+  forward/train step on one CPU device (per-arch smoke tests),
+* ``shapes``      — the assigned input-shape set; each entry carries the
+  step ``kind`` (train | prefill | decode | serve | retrieval) and its
+  dimensions. ``skip`` marks assigned-but-inapplicable cells (e.g.
+  ``long_500k`` for pure full-attention archs) with the reason recorded
+  in DESIGN.md §Arch-applicability.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeDef:
+    kind: str                      # train | prefill | decode | serve | retrieval
+    dims: dict
+    skip: Optional[str] = None     # reason, if this cell is skipped
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchDef:
+    name: str
+    family: str                    # lm | gnn | recsys
+    full_cfg: Callable[[], Any]
+    smoke_cfg: Callable[[], Any]
+    shapes: dict[str, ShapeDef]
+    notes: str = ""
+    # family-specific extras (e.g. recsys model module)
+    extra: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class CellSpec:
+    """One lowered dry-run cell: jit(fn).lower(*args)."""
+    arch: str
+    shape: str
+    kind: str
+    fn: Callable
+    args: tuple                    # ShapeDtypeStructs with shardings attached
+    donate_argnums: tuple = ()
+    static_argnums: tuple = ()
+    note: str = ""

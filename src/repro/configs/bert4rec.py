@@ -1,0 +1,35 @@
+"""bert4rec [arXiv:1904.06690; paper]: embed_dim 64, 2 blocks, 2 heads,
+seq_len 200, bidirectional Cloze training. 10M-item vocabulary (padded to 10,000,384 = 512·19532 rows so the table shards over the full mesh) with
+sampled-softmax (256 shared negatives). Encoder-only — all four shapes
+are forward scoring (no autoregressive decode)."""
+
+from __future__ import annotations
+
+from repro.configs.base import ArchDef, ShapeDef
+from repro.models.recsys.bert4rec import BERT4RecCfg
+
+
+def full_cfg() -> BERT4RecCfg:
+    return BERT4RecCfg(n_items=10_000_384, embed_dim=64, n_blocks=2,
+                       n_heads=2, seq_len=200, n_masked=30,
+                       n_negatives=256)
+
+
+def smoke_cfg() -> BERT4RecCfg:
+    return BERT4RecCfg(n_items=500, embed_dim=16, n_blocks=2, n_heads=2,
+                       seq_len=12, n_masked=3, n_negatives=8)
+
+
+SHAPES = {
+    "train_batch": ShapeDef("train", {"batch": 65536}),
+    "serve_p99": ShapeDef("serve", {"batch": 512, "n_cand": 100}),
+    "serve_bulk": ShapeDef("serve", {"batch": 262144, "n_cand": 100}),
+    "retrieval_cand": ShapeDef("retrieval",
+                               {"batch": 1, "n_candidates": 1_048_576}),
+}
+
+ARCH = ArchDef(
+    name="bert4rec", family="recsys",
+    full_cfg=full_cfg, smoke_cfg=smoke_cfg, shapes=SHAPES,
+    notes="bidirectional seq rec; sampled-softmax Cloze",
+)

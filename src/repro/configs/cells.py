@@ -1,0 +1,563 @@
+"""Cell builders: (architecture × input shape × mesh) → a CellSpec
+holding the step function and fully-sharded ShapeDtypeStruct inputs.
+
+``jax.jit(cell.fn, donate_argnums=...).lower(*cell.args)`` is the whole
+dry-run contract; nothing here allocates device memory for the full
+configs (parameters come from ``jax.eval_shape``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchDef, CellSpec
+from repro.distributed import sharding as S
+from repro.models import transformer as T
+from repro.training.optimizer import AdamWCfg, adamw_init, adamw_update
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+def _param_sds(abs_params, mesh, rules):
+    specs = S.make_param_specs(abs_params, rules)
+    shard = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs)
+    return S.attach(abs_params, shard), specs
+
+
+def _opt_sds(params_sds, pspecs, mesh, opt_cfg):
+    opt_abs = jax.eval_shape(
+        functools.partial(adamw_init, cfg=opt_cfg), params_sds)
+    opt_sh = S.opt_state_shardings(mesh, pspecs, opt_abs)
+    return S.attach(opt_abs, opt_sh)
+
+
+def _flat_axes(mesh) -> tuple:
+    return tuple(mesh.axis_names)
+
+
+def _data_ways(mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return functools.reduce(
+        lambda a, b: a * b, (sizes[ax] for ax in S.batch_axes(mesh)), 1)
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+def _lm_has_moe(cfg: T.LMCfg) -> bool:
+    return any(b.ffn_kind == "moe" for blocks, _ in cfg.segments
+               for b in blocks)
+
+
+def _lm_opt_cfg(arch: ArchDef) -> AdamWCfg:
+    return AdamWCfg(quantize_state=bool(
+        arch.extra.get("quantize_opt_state", False)))
+
+
+def build_lm_cell(arch: ArchDef, shape_name: str, mesh,
+                  cfg: Optional[T.LMCfg] = None,
+                  dims: Optional[dict] = None) -> CellSpec:
+    sd = arch.shapes[shape_name]
+    cfg = cfg or arch.full_cfg()
+    dims = dims or sd.dims
+    B, L = dims["global_batch"], dims["seq"]
+    ba = S.batch_axes(mesh)
+    ep = "model" if _lm_has_moe(cfg) else None
+    dp = "data" if ep else None
+
+    params_sds, pspecs = _param_sds(T.abstract_init(cfg), mesh, S.LM_RULES)
+
+    if sd.kind == "train":
+        opt_cfg = _lm_opt_cfg(arch)
+        opt_sds = _opt_sds(params_sds, pspecs, mesh, opt_cfg)
+        tokens = S.sds((B, L), jnp.int32, mesh, P(ba, None))
+        labels = S.sds((B, L), jnp.int32, mesh, P(ba, None))
+
+        def train_step(params, opt_state, batch):
+            def loss(p):
+                return T.lm_loss(p, cfg, batch["tokens"], batch["labels"],
+                                 ep_axis=ep, dp_axis=dp)
+            (l, metrics), grads = jax.value_and_grad(
+                loss, has_aux=True)(params)
+            params, opt_state, om = adamw_update(grads, opt_state, params,
+                                                 opt_cfg)
+            return params, opt_state, {**metrics, **om}
+
+        return CellSpec(arch.name, shape_name, "train", train_step,
+                        (params_sds, opt_sds,
+                         {"tokens": tokens, "labels": labels}),
+                        donate_argnums=(0, 1))
+
+    if sd.kind == "prefill":
+        tokens = S.sds((B, L), jnp.int32, mesh, P(ba, None))
+
+        def prefill_step(params, tokens):
+            return T.prefill(params, cfg, tokens)
+
+        return CellSpec(arch.name, shape_name, "prefill", prefill_step,
+                        (params_sds, tokens))
+
+    if sd.kind == "decode":
+        cache_abs = T.abstract_cache(cfg, B, L)
+        cache_sh = S.make_cache_shardings(mesh, cache_abs, batch=B)
+        cache_sds = S.attach(cache_abs, cache_sh)
+        bspec = P(ba, None) if B >= _data_ways(mesh) else P(None, None)
+        token = S.sds((B, 1), jnp.int32, mesh, bspec)
+        pos = S.sds((B, 1), jnp.int32, mesh, bspec)
+
+        def decode(params, token, pos, caches):
+            return T.decode_step(params, cfg, token, pos, caches)
+
+        return CellSpec(arch.name, shape_name, "decode", decode,
+                        (params_sds, token, pos, cache_sds),
+                        donate_argnums=(3,))
+
+    raise ValueError(sd.kind)
+
+
+# ---------------------------------------------------------------------------
+# GNN family (MACE)
+# ---------------------------------------------------------------------------
+
+def build_gnn_cell(arch: ArchDef, shape_name: str, mesh,
+                   cfg=None, dims: Optional[dict] = None) -> CellSpec:
+    from repro.models.gnn import mace as M
+    sd = arch.shapes[shape_name]
+    base = cfg or arch.full_cfg()
+    dims = dims or sd.dims
+    N, E = dims["n_nodes"], dims["n_edges"]
+    readout = dims.get("readout", "node")
+    n_out = dims.get("n_classes", 1) if readout == "node" else 1
+    mcfg = dataclasses.replace(base, d_in=dims["d_feat"], n_out=n_out,
+                               readout=readout)
+    ba = S.batch_axes(mesh)
+    fa = _flat_axes(mesh)
+
+    abs_params = jax.eval_shape(
+        lambda: M.init(jax.random.PRNGKey(0), mcfg))
+    params_sds, pspecs = _param_sds(abs_params, mesh, S.GNN_RULES)
+    opt_cfg = AdamWCfg()
+    opt_sds = _opt_sds(params_sds, pspecs, mesh, opt_cfg)
+
+    batch_sds = {
+        "feats": S.sds((N, dims["d_feat"]), jnp.float32, mesh, P(ba, None)),
+        "pos": S.sds((N, 3), jnp.float32, mesh, P(ba, None)),
+        "senders": S.sds((E,), jnp.int32, mesh, P(fa)),
+        "receivers": S.sds((E,), jnp.int32, mesh, P(fa)),
+    }
+    n_graphs = dims.get("n_graphs", 1)
+    if readout == "graph":
+        batch_sds["graph_ids"] = S.sds((N,), jnp.int32, mesh, P(ba))
+        batch_sds["targets"] = S.sds((n_graphs,), jnp.float32, mesh, P(ba))
+    else:
+        batch_sds["labels"] = S.sds((N,), jnp.int32, mesh, P(ba))
+        batch_sds["label_mask"] = S.sds((N,), jnp.float32, mesh, P(ba))
+
+    def train_step(params, opt_state, batch):
+        if readout == "graph":
+            batch = dict(batch, n_graphs=n_graphs)
+        (l, metrics), grads = jax.value_and_grad(
+            lambda p: M.loss_fn(p, mcfg, batch), has_aux=True)(params)
+        params, opt_state, om = adamw_update(grads, opt_state, params,
+                                             opt_cfg)
+        return params, opt_state, {**metrics, **om}
+
+    return CellSpec(arch.name, shape_name, "train", train_step,
+                    (params_sds, opt_sds, batch_sds), donate_argnums=(0, 1))
+
+
+# ---------------------------------------------------------------------------
+# RecSys family
+# ---------------------------------------------------------------------------
+
+def _recsys_module(arch_name: str):
+    from repro.models.recsys import autoint, bert4rec, dien, sasrec
+    return {"autoint": autoint, "dien": dien, "bert4rec": bert4rec,
+            "sasrec": sasrec}[arch_name]
+
+
+def _recsys_batch_sds(arch: ArchDef, cfg, kind: str, dims, mesh):
+    ba = S.batch_axes(mesh)
+    fa = _flat_axes(mesh)
+    B = dims.get("batch", 1)
+    i32, f32 = jnp.int32, jnp.float32
+
+    def b(shape, dtype=i32, spec=None):
+        return S.sds(shape, dtype, mesh,
+                     spec if spec is not None else P(ba, *([None] * (len(shape) - 1))))
+
+    name = arch.name
+    if name == "autoint":
+        batch = {"fields": b((B, cfg.n_fields))}
+        if kind == "train":
+            batch["label"] = b((B,), f32)
+        if kind == "retrieval":
+            return {"user_fields": S.sds((cfg.n_fields,), i32, mesh, P()),
+                    "cand_ids": S.sds((dims["n_candidates"],), i32, mesh,
+                                      P(fa))}
+        return batch
+    if name == "dien":
+        Lh = cfg.seq_len
+        if kind == "retrieval":
+            return {
+                "query": {
+                    "user": S.sds((), i32, mesh, P()),
+                    "hist_items": S.sds((Lh,), i32, mesh, P()),
+                    "hist_cates": S.sds((Lh,), i32, mesh, P()),
+                    "hist_len": S.sds((), i32, mesh, P()),
+                },
+                "cand_items": S.sds((dims["n_candidates"],), i32, mesh,
+                                    P(fa)),
+                "cand_cates": S.sds((dims["n_candidates"],), i32, mesh,
+                                    P(fa)),
+            }
+        batch = {"user": b((B,)), "target_item": b((B,)),
+                 "target_cate": b((B,)), "hist_items": b((B, Lh)),
+                 "hist_cates": b((B, Lh)), "hist_len": b((B,))}
+        if kind == "train":
+            batch["label"] = b((B,), f32)
+        return batch
+    if name in ("sasrec", "bert4rec"):
+        Lh = cfg.seq_len
+        if kind == "retrieval":
+            return {
+                "query": {"items": S.sds((Lh,), i32, mesh, P()),
+                          "length": S.sds((), i32, mesh, P())},
+                "cand_ids": S.sds((dims["n_candidates"],), i32, mesh,
+                                  P(fa)),
+            }
+        if kind == "serve":
+            return {"items": b((B, Lh)), "lengths": b((B,)),
+                    "cand": b((B, dims.get("n_cand", 100)))}
+        if name == "sasrec":
+            return {"items": b((B, Lh)), "pos_labels": b((B, Lh)),
+                    "neg_labels": b((B, Lh)),
+                    "valid": b((B, Lh), jnp.bool_)}
+        return {"items": b((B, Lh)), "valid": b((B, Lh), jnp.bool_),
+                "mask_positions": b((B, cfg.n_masked)),
+                "mask_labels": b((B, cfg.n_masked)),
+                "negatives": S.sds((cfg.n_negatives,), i32, mesh, P())}
+    raise ValueError(name)
+
+
+def build_recsys_cell(arch: ArchDef, shape_name: str, mesh,
+                      cfg=None, dims: Optional[dict] = None) -> CellSpec:
+    mod = _recsys_module(arch.name)
+    sd = arch.shapes[shape_name]
+    cfg = cfg or arch.full_cfg()
+    dims = dims or sd.dims
+    shard_axis = "model"
+
+    abs_params = jax.eval_shape(lambda: mod.init(jax.random.PRNGKey(0), cfg))
+    params_sds, pspecs = _param_sds(abs_params, mesh, S.RECSYS_RULES)
+    batch_sds = _recsys_batch_sds(arch, cfg, sd.kind, dims, mesh)
+
+    if sd.kind == "train":
+        opt_cfg = AdamWCfg()
+        opt_sds = _opt_sds(params_sds, pspecs, mesh, opt_cfg)
+
+        def train_step(params, opt_state, batch):
+            (l, metrics), grads = jax.value_and_grad(
+                lambda p: mod.loss_fn(p, cfg, batch,
+                                      shard_axis=shard_axis),
+                has_aux=True)(params)
+            params, opt_state, om = adamw_update(grads, opt_state, params,
+                                                 opt_cfg)
+            return params, opt_state, {**metrics, **om}
+
+        return CellSpec(arch.name, shape_name, "train", train_step,
+                        (params_sds, opt_sds, batch_sds),
+                        donate_argnums=(0, 1))
+
+    if sd.kind == "serve":
+        def serve_step(params, batch):
+            return mod.serve_score(params, cfg, batch,
+                                   shard_axis=shard_axis)
+        return CellSpec(arch.name, shape_name, "serve", serve_step,
+                        (params_sds, batch_sds))
+
+    # retrieval: 1 query × n_candidates, multi-stage where the exact
+    # model is expensive (the paper's candidate-narrowing transplanted)
+    if arch.name == "autoint":
+        from repro.models.recsys import embedding as EB
+        from repro.models.recsys.retrieval import (TwoStageParams,
+                                                   two_stage_retrieve)
+        item_field = arch.extra["item_field"]
+        offsets = cfg.fields.offsets()
+
+        def retrieval_step(params, batch):
+            user_fields, cand_ids = batch["user_fields"], batch["cand_ids"]
+            table = params["tables"]["packed"]
+            urows = EB.pack_field_ids(cfg.fields, user_fields)
+            u = jnp.sum(EB.lookup(table, urows, shard_axis=shard_axis),
+                        axis=0)                              # (d,)
+            crows = cand_ids + int(offsets[item_field])
+            e = EB.lookup(table, crows, shard_axis=shard_axis)  # (N, d)
+            coarse = e @ u
+            exact = lambda ids: mod.retrieval_scores(
+                params, cfg, user_fields, ids, item_field,
+                shard_axis=shard_axis)
+            return two_stage_retrieve(coarse, exact, cand_ids,
+                                      TwoStageParams(first_k=200, k=100))
+
+        return CellSpec(arch.name, shape_name, "retrieval", retrieval_step,
+                        (params_sds, batch_sds))
+
+    if arch.name == "dien":
+        from repro.core import hybrid as H
+        from repro.models.recsys import embedding as EB
+
+        def retrieval_step(params, batch):
+            q = batch["query"]
+            eh = EB.lookup(params["tables"]["item"], q["hist_items"],
+                           shard_axis=shard_axis)            # (L, d)
+            m = (jnp.arange(cfg.seq_len) < q["hist_len"])[:, None]
+            u = jnp.sum(eh * m, axis=0) / jnp.maximum(q["hist_len"], 1)
+            e = EB.lookup(params["tables"]["item"], batch["cand_items"],
+                          shard_axis=shard_axis)             # (N, d)
+            coarse = e @ u
+            s1, keep = jax.lax.top_k(coarse, 200)
+            ids = batch["cand_items"][keep]
+            cates = batch["cand_cates"][keep]
+            s2 = mod.retrieval_scores(params, cfg, q, ids, cates,
+                                      shard_axis=shard_axis, chunk=200)
+            mask = jnp.ones_like(s1, bool)
+            fused = H.hybrid_scores(s1, s2, mask, alpha=0.3)
+            top, idx = jax.lax.top_k(fused, 100)
+            return ids[idx], top
+
+        return CellSpec(arch.name, shape_name, "retrieval", retrieval_step,
+                        (params_sds, batch_sds))
+
+    # sasrec / bert4rec: the exact model IS a dot product — single-stage
+    def retrieval_step(params, batch):
+        scores = mod.retrieval_scores(params, cfg, batch["query"],
+                                      batch["cand_ids"],
+                                      shard_axis=shard_axis)
+        top, idx = jax.lax.top_k(scores, 100)
+        return batch["cand_ids"][idx], top
+
+    return CellSpec(arch.name, shape_name, "retrieval", retrieval_step,
+                    (params_sds, batch_sds))
+
+
+# ---------------------------------------------------------------------------
+# colbert-serve (the paper's system)
+# ---------------------------------------------------------------------------
+
+def _index_sds(icfg, mesh):
+    """Device-resident compressed pool, document-sharded over 'model'."""
+    return {
+        "codes": S.sds((icfg.n_tokens,), jnp.int32, mesh, P("model")),
+        "residuals": S.sds((icfg.n_tokens, icfg.packed_dim), jnp.uint8,
+                           mesh, P("model", None)),
+        "centroids": S.sds((icfg.n_centroids, icfg.dim), jnp.float32,
+                           mesh, P()),
+        "bucket_weights": S.sds((2 ** icfg.nbits,), jnp.float32, mesh, P()),
+        "doc_offsets": S.sds((icfg.n_docs,), jnp.int32, mesh, P()),
+        "doclens": S.sds((icfg.n_docs,), jnp.int32, mesh, P()),
+    }
+
+
+def _gather_decompress(index, icfg, pids):
+    """pids (..., C) → decompressed doc embeddings + valid masks."""
+    from repro.index.residual import unpack_codes
+    safe = jnp.clip(pids, 0, icfg.n_docs - 1)
+    starts = index["doc_offsets"][safe]                      # (..., C)
+    tok = starts[..., None] + jnp.arange(icfg.doc_maxlen)
+    tok = jnp.minimum(tok, icfg.n_tokens - 1)
+    cids = index["codes"][tok]                               # (..., C, Ld)
+    packed = index["residuals"][tok]                         # (..., C, Ld, pd)
+    codes = unpack_codes(packed, icfg.nbits)
+    emb = (index["centroids"][cids]
+           + index["bucket_weights"][codes.astype(jnp.int32)])
+    valid = (jnp.arange(icfg.doc_maxlen) <
+             index["doclens"][safe][..., None]) & (pids >= 0)[..., None]
+    return emb * valid[..., None], valid
+
+
+def _batched_maxsim(q_emb, emb, valid):
+    """q_emb (B, Lq, d); emb (B, C, Ld, d); valid (B, C, Ld) → (B, C)."""
+    s = jnp.einsum("bqd,bcld->bcql", q_emb, emb,
+                   preferred_element_type=jnp.float32)
+    s = jnp.where(valid[:, :, None, :], s, -1e30)
+    per_q = jnp.max(s, axis=-1)
+    per_q = jnp.where(per_q <= -1e29, 0.0, per_q)
+    return jnp.sum(per_q, axis=-1)
+
+
+def build_retrieval_cell(arch: ArchDef, shape_name: str, mesh,
+                         cfg=None, dims: Optional[dict] = None) -> CellSpec:
+    from repro.models import colbert as CB
+    sd = arch.shapes[shape_name]
+    cfg = cfg or arch.full_cfg()
+    dims = dims or sd.dims
+    ccfg, icfg = cfg.colbert, cfg.index
+    ba = S.batch_axes(mesh)
+    B = dims["batch"]
+
+    if shape_name == "train_contrastive":
+        abs_params = jax.eval_shape(
+            lambda: CB.init(jax.random.PRNGKey(0), ccfg))
+        params_sds, pspecs = _param_sds(abs_params, mesh, S.LM_RULES)
+        opt_cfg = AdamWCfg()
+        opt_sds = _opt_sds(params_sds, pspecs, mesh, opt_cfg)
+        batch_sds = {
+            "q_tokens": S.sds((B, ccfg.query_maxlen), jnp.int32, mesh,
+                              P(ba, None)),
+            "q_lens": S.sds((B,), jnp.int32, mesh, P(ba)),
+            "d_tokens": S.sds((B, ccfg.doc_maxlen), jnp.int32, mesh,
+                              P(ba, None)),
+            "d_lens": S.sds((B,), jnp.int32, mesh, P(ba)),
+        }
+
+        def loss_fn(params, batch):
+            q = CB.encode_queries(params, ccfg, batch["q_tokens"],
+                                  batch["q_lens"])           # (B, Lq, d)
+            d, dv = CB.encode_docs(params, ccfg, batch["d_tokens"],
+                                   batch["d_lens"])          # (B, Ld, d)
+
+            # all-pairs MaxSim, scanned over doc chunks to bound memory
+            CH = min(64, B)
+            dch = d.reshape(B // CH, CH, *d.shape[1:])
+            vch = dv.reshape(B // CH, CH, *dv.shape[1:])
+
+            def chunk_scores(_, xs):
+                dc, vc = xs                                  # (CH, Ld, d)
+                s = jnp.einsum("bqd,cld->bcql", q, dc,
+                               preferred_element_type=jnp.float32)
+                s = jnp.where(vc[None, :, None, :], s, -1e30)
+                m = jnp.max(s, axis=-1)
+                m = jnp.where(m <= -1e29, 0.0, m)
+                return None, jnp.sum(m, axis=-1)             # (B, CH)
+
+            _, sc = jax.lax.scan(chunk_scores, None, (dch, vch))
+            scores = jnp.concatenate(jnp.unstack(sc, axis=0), axis=-1)
+            labels = jnp.arange(B)
+            logp = jax.nn.log_softmax(scores.astype(jnp.float32), axis=-1)
+            loss = -jnp.mean(jnp.take_along_axis(
+                logp, labels[:, None], axis=-1))
+            return loss, {"nll": loss}
+
+        def train_step(params, opt_state, batch):
+            (l, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            params, opt_state, om = adamw_update(grads, opt_state, params,
+                                                 opt_cfg)
+            return params, opt_state, {**metrics, **om}
+
+        return CellSpec(arch.name, shape_name, "train", train_step,
+                        (params_sds, opt_sds, batch_sds),
+                        donate_argnums=(0, 1))
+
+    if shape_name == "encode_corpus":
+        abs_params = jax.eval_shape(
+            lambda: CB.init(jax.random.PRNGKey(0), ccfg))
+        params_sds, _ = _param_sds(abs_params, mesh, S.LM_RULES)
+        toks = S.sds((B, ccfg.doc_maxlen), jnp.int32, mesh, P(ba, None))
+        lens = S.sds((B,), jnp.int32, mesh, P(ba))
+
+        def encode_step(params, tokens, lengths):
+            return CB.encode_docs(params, ccfg, tokens, lengths)
+
+        return CellSpec(arch.name, shape_name, "serve", encode_step,
+                        (params_sds, toks, lens))
+
+    if shape_name == "serve_rerank":
+        index_sds = _index_sds(icfg, mesh)
+        K = dims["first_k"]
+        q_emb = S.sds((B, icfg.query_maxlen, icfg.dim), jnp.float32,
+                      mesh, P(ba, None, None))
+        pids = S.sds((B, K), jnp.int32, mesh, P(ba, None))
+        s_scores = S.sds((B, K), jnp.float32, mesh, P(ba, None))
+
+        def rerank_step(index, q_emb, pids, splade_scores):
+            from repro.core import hybrid as H
+            emb, valid = _gather_decompress(index, icfg, pids)
+            c_scores = _batched_maxsim(q_emb, emb, valid)    # (B, K)
+            mask = pids >= 0
+            fused = H.hybrid_scores(splade_scores, c_scores, mask,
+                                    alpha=0.3)
+            top, idx = jax.lax.top_k(fused, 100)
+            return jnp.take_along_axis(pids, idx, axis=1), top
+
+        return CellSpec(arch.name, shape_name, "serve", rerank_step,
+                        (index_sds, q_emb, pids, s_scores))
+
+    if shape_name == "serve_plaid":
+        index_sds = dict(_index_sds(icfg, mesh))
+        index_sds["ivf"] = S.sds((icfg.n_centroids, icfg.ivf_pad),
+                                 jnp.int32, mesh, P())
+        nprobe, cap, ndocs = (dims["nprobe"], dims["candidate_cap"],
+                              dims["ndocs"])
+        q_emb = S.sds((B, icfg.query_maxlen, icfg.dim), jnp.float32,
+                      mesh, P(ba, None, None))
+
+        def plaid_step(index, q_emb):
+            # stage 1: centroid probe (batched over queries)
+            sc = jnp.einsum("bqd,kd->bqk", q_emb, index["centroids"],
+                            preferred_element_type=jnp.float32)
+            _, cids = jax.lax.top_k(sc, nprobe)              # (B, Lq, np)
+
+            def per_query(scores_c, cid):
+                cand = index["ivf"][cid.reshape(-1)].reshape(-1)
+                uniq = jnp.unique(cand, size=cap, fill_value=-1)
+                safe = jnp.clip(uniq, 0, icfg.n_docs - 1)
+                starts = index["doc_offsets"][safe]
+                tok = starts[:, None] + jnp.arange(icfg.doc_maxlen)
+                tok = jnp.minimum(tok, icfg.n_tokens - 1)
+                codes = index["codes"][tok]                  # (cap, Ld)
+                valid = (jnp.arange(icfg.doc_maxlen) <
+                         index["doclens"][safe][:, None]) & \
+                    (uniq >= 0)[:, None]
+                s = scores_c[:, codes]                       # (Lq, cap, Ld)
+                s = jnp.where(valid[None], s, -1e30)
+                approx = jnp.sum(jnp.where(
+                    jnp.max(s, -1) <= -1e29, 0.0, jnp.max(s, -1)), axis=0)
+                approx = jnp.where(uniq >= 0, approx, -jnp.inf)
+                _, keep = jax.lax.top_k(approx, ndocs)
+                return uniq[keep]
+
+            final_pids = jax.vmap(per_query)(sc, cids)       # (B, ndocs)
+            emb, valid = _gather_decompress(index, icfg, final_pids)
+            exact = _batched_maxsim(q_emb, emb, valid)
+            exact = jnp.where(final_pids >= 0, exact, -jnp.inf)
+            top, idx = jax.lax.top_k(exact, 100)
+            return jnp.take_along_axis(final_pids, idx, axis=1), top
+
+        return CellSpec(arch.name, shape_name, "serve", plaid_step,
+                        (index_sds, q_emb))
+
+    raise ValueError(shape_name)
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+_BUILDERS = {"lm": build_lm_cell, "gnn": build_gnn_cell,
+             "recsys": build_recsys_cell, "retrieval": build_retrieval_cell}
+
+
+def build_cell(arch: ArchDef, shape_name: str, mesh, *, cfg=None,
+               dims=None) -> CellSpec:
+    sd = arch.shapes[shape_name]
+    if sd.skip:
+        raise ValueError(
+            f"cell {arch.name}×{shape_name} is skipped: {sd.skip}")
+    return _BUILDERS[arch.family](arch, shape_name, mesh, cfg=cfg,
+                                  dims=dims)
+
+
+def input_specs(arch: ArchDef, shape_name: str, mesh, **kw):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    return build_cell(arch, shape_name, mesh, **kw).args

@@ -1,0 +1,85 @@
+"""colbert-serve — the paper's own system as an architecture config.
+
+Encoder: BERT-base-class bidirectional encoder (~110M params) with the
+ColBERT 128-d projection head. Index: MS MARCO-scale compressed pool
+(8.84M passages, ~592M tokens, 4-bit residuals, 2^17 centroids).
+
+Shapes (the serving workloads the paper evaluates):
+  * train_contrastive — in-batch-negative ColBERT training (the
+    end-to-end driver scale: ~110M model)
+  * encode_corpus     — bulk document encoding (index build stage)
+  * serve_rerank      — the paper's Rerank/Hybrid path: exact scoring
+    of SPLADE's top-200 per query from the compressed pool
+  * serve_plaid       — full PLAID stages 1-4 (in-memory baseline)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ArchDef, ShapeDef
+from repro.models import encoder as E
+from repro.models.colbert import ColBERTCfg
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeIndexCfg:
+    n_docs: int = 8_841_823          # MS MARCO passage count
+    avg_doclen: int = 67
+    doc_maxlen: int = 180
+    query_maxlen: int = 32
+    dim: int = 128
+    nbits: int = 4
+    n_centroids: int = 131_072       # 2^17 (~16·sqrt(120·N) heuristic)
+    ivf_pad: int = 32
+
+    @property
+    def n_tokens(self) -> int:
+        raw = self.n_docs * self.avg_doclen
+        return -(-raw // 512) * 512     # pad: pool rows shard 16/512-way
+
+    @property
+    def packed_dim(self) -> int:
+        return self.dim * self.nbits // 8
+
+
+@dataclasses.dataclass(frozen=True)
+class ColbertServeCfg:
+    colbert: ColBERTCfg
+    index: ServeIndexCfg
+
+
+def full_cfg() -> ColbertServeCfg:
+    # vocab padded 30522 → 30720 so the (V, D) embedding shards 16-way
+    enc = E.EncoderCfg(name="bert-base", vocab=30720, d_model=768,
+                       n_layers=12, n_heads=12, d_ff=3072, max_len=512)
+    return ColbertServeCfg(
+        colbert=ColBERTCfg(encoder=enc, dim=128, query_maxlen=32,
+                           doc_maxlen=180),
+        index=ServeIndexCfg())
+
+
+def smoke_cfg() -> ColbertServeCfg:
+    enc = E.EncoderCfg(name="bert-smoke", vocab=512, d_model=64,
+                       n_layers=2, n_heads=4, d_ff=128, max_len=64)
+    return ColbertServeCfg(
+        colbert=ColBERTCfg(encoder=enc, dim=32, query_maxlen=8,
+                           doc_maxlen=24),
+        index=ServeIndexCfg(n_docs=512, avg_doclen=16, doc_maxlen=24,
+                            query_maxlen=8, dim=32, n_centroids=64,
+                            ivf_pad=16))
+
+
+SHAPES = {
+    "train_contrastive": ShapeDef("train", {"batch": 512}),
+    "encode_corpus": ShapeDef("serve", {"batch": 4096}),
+    "serve_rerank": ShapeDef("serve", {"batch": 32, "first_k": 200}),
+    "serve_plaid": ShapeDef("serve", {"batch": 32, "nprobe": 4,
+                                      "candidate_cap": 4096, "ndocs": 256}),
+}
+
+ARCH = ArchDef(
+    name="colbert-serve", family="retrieval",
+    full_cfg=full_cfg, smoke_cfg=smoke_cfg, shapes=SHAPES,
+    notes="the paper's system: memory-mapped multi-stage late interaction",
+)

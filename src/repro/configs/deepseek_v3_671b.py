@@ -1,0 +1,54 @@
+"""deepseek-v3-671b [arXiv:2412.19437; hf]: 61L, d_model 7168, 128-head
+MLA (q_lora 1536, kv_lora 512, qk_nope 128, qk_rope 64, v 128); first 3
+layers dense (d_ff 18432), remaining 58 MoE with 1 shared + 256 routed
+experts, top-8, expert d_ff 2048, sigmoid router with aux-loss-free
+bias; vocab 129280; multi-token prediction (MTP depth 1).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs import lm_common as C
+from repro.configs.base import ArchDef
+from repro.models import layers as L
+from repro.models import transformer as T
+
+D, V = 7168, 129280
+
+
+def _cfg(d, n_heads, q_lora, kv_lora, nope, rope, vh, ff_dense, ff_exp,
+         n_exp, top_k, n_dense, n_moe, vocab, dtype, use_mtp, remat,
+         attn_chunk):
+    mla = L.MLACfg(d_model=d, n_heads=n_heads, q_lora_rank=q_lora,
+                   kv_lora_rank=kv_lora, qk_nope_head_dim=nope,
+                   qk_rope_head_dim=rope, v_head_dim=vh)
+    moe = L.MoECfg(d_model=d, d_ff_expert=ff_exp, n_experts=n_exp,
+                   top_k=top_k, n_shared=1, d_ff_shared=ff_exp,
+                   sigmoid_router=True)
+    return T.LMCfg(
+        name="deepseek-v3-671b", d_model=d, vocab=vocab,
+        segments=(
+            ((C.mla_block(mla, ffn_kind="dense", d_ff=ff_dense),), n_dense),
+            ((C.mla_block(mla, ffn_kind="moe", moe=moe),), n_moe),
+        ),
+        use_mtp=use_mtp, remat=remat, attn_chunk=attn_chunk, dtype=dtype)
+
+
+def full_cfg() -> T.LMCfg:
+    return _cfg(D, 128, 1536, 512, 128, 64, 128, 18432, 2048, 256, 8,
+                3, 58, V, jnp.bfloat16, True, "full", 1024)
+
+
+def smoke_cfg() -> T.LMCfg:
+    return _cfg(64, 4, 32, 16, 16, 8, 16, 128, 32, 8, 2,
+                1, 2, 512, jnp.float32, True, "none", 16)
+
+
+ARCH = ArchDef(
+    name="deepseek-v3-671b", family="lm",
+    full_cfg=full_cfg, smoke_cfg=smoke_cfg,
+    shapes=C.lm_shapes(long_skip_reason=C.FULL_ATTN_SKIP),
+    notes="MLA latent KV, fine-grained MoE 1s+256r top-8, MTP",
+    extra={"quantize_opt_state": True},
+)

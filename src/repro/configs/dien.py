@@ -1,0 +1,35 @@
+"""dien [arXiv:1809.03672; unverified]: embed_dim 18, behaviour
+seq_len 100, GRU/AUGRU hidden 108, MLP 200-80 with Dice, auxiliary
+loss. 10M items / 10M users / 10k categories."""
+
+from __future__ import annotations
+
+from repro.configs.base import ArchDef, ShapeDef
+from repro.models.recsys.dien import DIENCfg
+
+
+def full_cfg() -> DIENCfg:
+    return DIENCfg(n_users=10_000_000, n_items=10_000_000, n_cates=10_000,
+                   embed_dim=18, seq_len=100, gru_dim=108,
+                   mlp_dims=(200, 80), use_aux_loss=True)
+
+
+def smoke_cfg() -> DIENCfg:
+    return DIENCfg(n_users=100, n_items=200, n_cates=20, embed_dim=6,
+                   seq_len=12, gru_dim=16, mlp_dims=(20, 8),
+                   use_aux_loss=True)
+
+
+SHAPES = {
+    "train_batch": ShapeDef("train", {"batch": 65536}),
+    "serve_p99": ShapeDef("serve", {"batch": 512}),
+    "serve_bulk": ShapeDef("serve", {"batch": 262144}),
+    "retrieval_cand": ShapeDef("retrieval",
+                               {"batch": 1, "n_candidates": 1_048_576}),
+}
+
+ARCH = ArchDef(
+    name="dien", family="recsys",
+    full_cfg=full_cfg, smoke_cfg=smoke_cfg, shapes=SHAPES,
+    notes="AUGRU interest evolution; aux loss; Dice MLP",
+)

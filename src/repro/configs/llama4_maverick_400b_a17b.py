@@ -1,0 +1,58 @@
+"""llama4-maverick-400b-a17b [hf:meta-llama/Llama-4-Scout-17B-16E;
+unverified]: 48L, d_model 5120, 40 q heads / 8 kv heads (GQA), dense
+d_ff 8192, vocab 202048, MoE 128 routed experts top-1 + 1 shared expert
+on alternating layers; iRoPE — 3 of 4 layers use chunked-local (8192)
+attention with RoPE, every 4th layer is global with NoPE.
+
+Tagged [moe], early fusion: the multimodal frontend is out of scope for
+the LM backbone cells (text tokens in, per the assignment's stub rule).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs import lm_common as C
+from repro.configs.base import ArchDef
+from repro.models import layers as L
+from repro.models import transformer as T
+
+D, H, KV, HD, FF, V = 5120, 40, 8, 128, 8192, 202048
+WINDOW = 8192
+
+
+def _segments(d, h, kv, hd, ff, n_exp, window, n_repeat):
+    moe = L.MoECfg(d_model=d, d_ff_expert=ff, n_experts=n_exp, top_k=1,
+                   n_shared=1, d_ff_shared=ff)
+    blocks = (
+        C.gqa_block(d, h, kv, hd, ff, window=window),
+        C.gqa_moe_block(d, h, kv, hd, moe, window=window),
+        C.gqa_block(d, h, kv, hd, ff, window=window),
+        C.gqa_moe_block(d, h, kv, hd, moe, window=0, use_rope=False),
+    )
+    return ((blocks, n_repeat),)
+
+
+def full_cfg() -> T.LMCfg:
+    return T.LMCfg(
+        name="llama4-maverick-400b-a17b", d_model=D, vocab=V,
+        segments=_segments(D, H, KV, HD, FF, 128, WINDOW, 12),
+        remat="full", attn_chunk=1024, dtype=jnp.bfloat16)
+
+
+def smoke_cfg() -> T.LMCfg:
+    return T.LMCfg(
+        name="llama4-smoke", d_model=64, vocab=512,
+        segments=_segments(64, 4, 2, 16, 128, 8, 16, 1),
+        remat="none", attn_chunk=16, dtype=jnp.float32)
+
+
+ARCH = ArchDef(
+    name="llama4-maverick-400b-a17b", family="lm",
+    full_cfg=full_cfg, smoke_cfg=smoke_cfg,
+    # chunked-local attention (3/4 of layers) makes long-context decode
+    # sub-quadratic → long_500k RUNS for this arch.
+    shapes=C.lm_shapes(long_skip_reason=None),
+    notes="MoE top-1 interleave, iRoPE chunked-local attention",
+    extra={"quantize_opt_state": True},
+)

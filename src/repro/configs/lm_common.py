@@ -1,0 +1,56 @@
+"""Shared builders for the LM-family architecture configs."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ShapeDef
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+def gqa_block(d_model, n_heads, kv_heads, head_dim, d_ff, *,
+              qkv_bias=False, qk_norm=False, window=0, use_rope=True,
+              rope_theta=1e4) -> T.BlockCfg:
+    return T.BlockCfg(
+        attn_kind="gqa", ffn_kind="dense", d_ff=d_ff,
+        attn=L.AttnCfg(d_model=d_model, n_heads=n_heads, kv_heads=kv_heads,
+                       head_dim=head_dim, qkv_bias=qkv_bias, qk_norm=qk_norm,
+                       window=window, use_rope=use_rope,
+                       rope_theta=rope_theta))
+
+
+def gqa_moe_block(d_model, n_heads, kv_heads, head_dim, moe: L.MoECfg, *,
+                  window=0, use_rope=True, rope_theta=1e4) -> T.BlockCfg:
+    return T.BlockCfg(
+        attn_kind="gqa", ffn_kind="moe", moe=moe,
+        attn=L.AttnCfg(d_model=d_model, n_heads=n_heads, kv_heads=kv_heads,
+                       head_dim=head_dim, window=window, use_rope=use_rope,
+                       rope_theta=rope_theta))
+
+
+def mla_block(mla: L.MLACfg, *, ffn_kind="dense", d_ff=0,
+              moe: L.MoECfg | None = None) -> T.BlockCfg:
+    return T.BlockCfg(attn_kind="mla", ffn_kind=ffn_kind, mla=mla,
+                      d_ff=d_ff, moe=moe)
+
+
+# The assigned LM shape set (identical across the five LM archs).
+def lm_shapes(*, long_skip_reason: str | None) -> dict[str, ShapeDef]:
+    return {
+        "train_4k": ShapeDef("train", {"seq": 4096, "global_batch": 256}),
+        "prefill_32k": ShapeDef("prefill", {"seq": 32768,
+                                            "global_batch": 32}),
+        "decode_32k": ShapeDef("decode", {"seq": 32768,
+                                          "global_batch": 128}),
+        "long_500k": ShapeDef("decode", {"seq": 524288, "global_batch": 1},
+                              skip=long_skip_reason),
+    }
+
+
+FULL_ATTN_SKIP = ("pure full-attention architecture: O(L^2) attention at "
+                  "524k context; assignment rule runs long_500k only for "
+                  "sub-quadratic (SSM/hybrid/linear/chunked-local) archs — "
+                  "see DESIGN.md §Arch-applicability")
+
+SMOKE_DTYPE = jnp.float32

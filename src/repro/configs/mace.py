@@ -1,0 +1,56 @@
+"""mace [arXiv:2206.07697; paper]: 2-layer E(3)-equivariant higher-order
+message passing, d_hidden 128 channels, l_max 2, correlation order 3,
+8 radial Bessel functions.
+
+The assigned shape set spans citation graphs (cora, ogbn-products),
+sampled Reddit minibatches, and batched molecules. Citation graphs have
+no 3-D geometry — nodes get synthetic unit positions and features enter
+through the channel embedding (DESIGN.md §Arch-applicability)."""
+
+from __future__ import annotations
+
+from repro.configs.base import ArchDef, ShapeDef
+from repro.models.gnn.mace import MACECfg
+
+
+def full_cfg() -> MACECfg:          # d_in / n_out are per-shape (dataset)
+    return MACECfg(n_layers=2, d_hidden=128, l_max=2, correlation=3,
+                   n_rbf=8)
+
+
+def smoke_cfg() -> MACECfg:
+    return MACECfg(n_layers=2, d_hidden=16, l_max=2, correlation=3,
+                   n_rbf=4)
+
+
+# Node counts are padded to multiples of 32 (the widest batch-axis
+# product) and edge counts to multiples of 512 (the full mesh) so input
+# shards divide evenly; pad nodes are masked, pad edges are 0→0 self
+# loops that the zero-length-edge mask eliminates. Raw sizes kept below.
+SHAPES = {
+    # cora: full-batch node classification (raw 2708 / 10556)
+    "full_graph_sm": ShapeDef("train", {
+        "n_nodes": 2720, "n_edges": 10752, "d_feat": 1433, "n_classes": 7,
+        "readout": "node", "raw_n_nodes": 2708, "raw_n_edges": 10556}),
+    # reddit, fanout 15-10 from 1024 seeds → fixed-size padded subgraph
+    "minibatch_lg": ShapeDef("train", {
+        "n_nodes": 172032, "n_edges": 169984, "d_feat": 602,
+        "n_classes": 41, "readout": "node",
+        "graph_nodes": 232965, "graph_edges": 114615892,
+        "batch_nodes": 1024, "fanout": (15, 10)}),
+    # ogbn-products: full-batch large (raw 2449029 / 61859140)
+    "ogb_products": ShapeDef("train", {
+        "n_nodes": 2449056, "n_edges": 61860352, "d_feat": 100,
+        "n_classes": 47, "readout": "node",
+        "raw_n_nodes": 2449029, "raw_n_edges": 61859140}),
+    # batched small molecules: 128 graphs × 30 nodes / 64 edges
+    "molecule": ShapeDef("train", {
+        "n_nodes": 3840, "n_edges": 8192, "d_feat": 16, "n_graphs": 128,
+        "readout": "graph"}),
+}
+
+ARCH = ArchDef(
+    name="mace", family="gnn",
+    full_cfg=full_cfg, smoke_cfg=smoke_cfg, shapes=SHAPES,
+    notes="E(3)-ACE equivariant message passing; segment_sum scatter",
+)

@@ -1,0 +1,34 @@
+"""qwen2.5-32b [hf:Qwen/Qwen2.5 family; hf]: dense 64L, d_model 5120,
+40 q heads / 8 kv heads (GQA) with QKV bias, head_dim 128,
+d_ff 27648 (SwiGLU), vocab 152064, RoPE theta 1e6."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs import lm_common as C
+from repro.configs.base import ArchDef
+from repro.models import transformer as T
+
+
+def full_cfg() -> T.LMCfg:
+    blk = C.gqa_block(5120, 40, 8, 128, 27648, qkv_bias=True,
+                      rope_theta=1e6)
+    return T.LMCfg(name="qwen2.5-32b", d_model=5120, vocab=152064,
+                   segments=(((blk,), 64),), remat="full",
+                   attn_chunk=1024, dtype=jnp.bfloat16)
+
+
+def smoke_cfg() -> T.LMCfg:
+    blk = C.gqa_block(64, 4, 2, 16, 160, qkv_bias=True)
+    return T.LMCfg(name="qwen2.5-smoke", d_model=64, vocab=512,
+                   segments=(((blk,), 2),), remat="none",
+                   attn_chunk=16, dtype=jnp.float32)
+
+
+ARCH = ArchDef(
+    name="qwen2.5-32b", family="lm",
+    full_cfg=full_cfg, smoke_cfg=smoke_cfg,
+    shapes=C.lm_shapes(long_skip_reason=C.FULL_ATTN_SKIP),
+    notes="dense GQA with QKV bias",
+)

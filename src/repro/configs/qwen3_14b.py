@@ -1,0 +1,34 @@
+"""qwen3-14b [hf:Qwen/Qwen3-8B family; hf]: dense 40L, d_model 5120,
+40 q heads / 8 kv heads (GQA) with per-head qk-norm, head_dim 128,
+d_ff 17408 (SwiGLU), vocab 151936, RoPE theta 1e6."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs import lm_common as C
+from repro.configs.base import ArchDef
+from repro.models import transformer as T
+
+
+def full_cfg() -> T.LMCfg:
+    blk = C.gqa_block(5120, 40, 8, 128, 17408, qk_norm=True,
+                      rope_theta=1e6)
+    return T.LMCfg(name="qwen3-14b", d_model=5120, vocab=151936,
+                   segments=(((blk,), 40),), remat="full",
+                   attn_chunk=1024, dtype=jnp.bfloat16)
+
+
+def smoke_cfg() -> T.LMCfg:
+    blk = C.gqa_block(64, 4, 2, 16, 128, qk_norm=True)
+    return T.LMCfg(name="qwen3-smoke", d_model=64, vocab=512,
+                   segments=(((blk,), 2),), remat="none",
+                   attn_chunk=16, dtype=jnp.float32)
+
+
+ARCH = ArchDef(
+    name="qwen3-14b", family="lm",
+    full_cfg=full_cfg, smoke_cfg=smoke_cfg,
+    shapes=C.lm_shapes(long_skip_reason=C.FULL_ATTN_SKIP),
+    notes="dense GQA with qk_norm",
+)

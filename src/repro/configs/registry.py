@@ -1,0 +1,35 @@
+"""--arch registry: every assigned architecture + the paper's own."""
+
+from __future__ import annotations
+
+from repro.configs import (autoint, bert4rec, colbert_serve,
+                           deepseek_v3_671b, dien, llama4_maverick_400b_a17b,
+                           mace, qwen2_5_32b, qwen3_14b, sasrec, yi_34b)
+from repro.configs.base import ArchDef
+
+_MODULES = [llama4_maverick_400b_a17b, deepseek_v3_671b, qwen3_14b,
+            yi_34b, qwen2_5_32b, mace, autoint, dien, bert4rec, sasrec,
+            colbert_serve]
+
+ARCHS: dict[str, ArchDef] = {m.ARCH.name: m.ARCH for m in _MODULES}
+
+ASSIGNED = [m.ARCH.name for m in _MODULES[:-1]]   # the 10 assigned archs
+
+
+def get_arch(name: str) -> ArchDef:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def all_cells(*, include_paper: bool = True, include_skipped: bool = False):
+    """→ [(arch_name, shape_name, ShapeDef)] in registry order."""
+    out = []
+    for name, arch in ARCHS.items():
+        if not include_paper and arch.family == "retrieval":
+            continue
+        for shape_name, sd in arch.shapes.items():
+            if sd.skip and not include_skipped:
+                continue
+            out.append((name, shape_name, sd))
+    return out

@@ -1,0 +1,33 @@
+"""sasrec [arXiv:1808.09781; paper]: embed_dim 50, 2 blocks, 1 head,
+seq_len 50, causal self-attention; binary CE with one sampled negative
+per position. 10M-item vocabulary (padded to 10,000,384 rows for 512-way sharding)."""
+
+from __future__ import annotations
+
+from repro.configs.base import ArchDef, ShapeDef
+from repro.models.recsys.sasrec import SASRecCfg
+
+
+def full_cfg() -> SASRecCfg:
+    return SASRecCfg(n_items=10_000_384, embed_dim=50, n_blocks=2,
+                     n_heads=1, seq_len=50)
+
+
+def smoke_cfg() -> SASRecCfg:
+    return SASRecCfg(n_items=500, embed_dim=16, n_blocks=2, n_heads=1,
+                     seq_len=10)
+
+
+SHAPES = {
+    "train_batch": ShapeDef("train", {"batch": 65536}),
+    "serve_p99": ShapeDef("serve", {"batch": 512, "n_cand": 100}),
+    "serve_bulk": ShapeDef("serve", {"batch": 262144, "n_cand": 100}),
+    "retrieval_cand": ShapeDef("retrieval",
+                               {"batch": 1, "n_candidates": 1_048_576}),
+}
+
+ARCH = ArchDef(
+    name="sasrec", family="recsys",
+    full_cfg=full_cfg, smoke_cfg=smoke_cfg, shapes=SHAPES,
+    notes="causal self-attn seq rec",
+)

@@ -1,0 +1,33 @@
+"""yi-34b [arXiv:2403.04652; hf]: llama-architecture dense 60L,
+d_model 7168, 56 q heads / 8 kv heads (GQA), head_dim 128,
+d_ff 20480 (SwiGLU), vocab 64000."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs import lm_common as C
+from repro.configs.base import ArchDef
+from repro.models import transformer as T
+
+
+def full_cfg() -> T.LMCfg:
+    blk = C.gqa_block(7168, 56, 8, 128, 20480, rope_theta=5e6)
+    return T.LMCfg(name="yi-34b", d_model=7168, vocab=64000,
+                   segments=(((blk,), 60),), remat="full",
+                   attn_chunk=1024, dtype=jnp.bfloat16)
+
+
+def smoke_cfg() -> T.LMCfg:
+    blk = C.gqa_block(64, 4, 2, 16, 192)
+    return T.LMCfg(name="yi-smoke", d_model=64, vocab=512,
+                   segments=(((blk,), 2),), remat="none",
+                   attn_chunk=16, dtype=jnp.float32)
+
+
+ARCH = ArchDef(
+    name="yi-34b", family="lm",
+    full_cfg=full_cfg, smoke_cfg=smoke_cfg,
+    shapes=C.lm_shapes(long_skip_reason=C.FULL_ATTN_SKIP),
+    notes="llama-arch dense GQA",
+)

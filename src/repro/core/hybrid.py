@@ -1,0 +1,54 @@
+"""Hybrid scoring: S = α·N(S_SPLADE) + (1−α)·N(S_ColBERT).
+
+The paper compares three normalisers N and selects per-query z-norm.
+All operate per query over the candidate list; padding entries
+(score mask False) are excluded from the statistics.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_EPS = 1e-9
+
+
+def _masked_stats(x, mask):
+    m = mask.astype(jnp.float32)
+    n = jnp.maximum(jnp.sum(m, axis=-1, keepdims=True), 1.0)
+    mean = jnp.sum(x * m, axis=-1, keepdims=True) / n
+    var = jnp.sum(jnp.square(x - mean) * m, axis=-1, keepdims=True) / n
+    return mean, jnp.sqrt(var)
+
+
+def znorm(x, mask):
+    """Per-query z-normalisation (the paper's pick)."""
+    mean, std = _masked_stats(x, mask)
+    return (x - mean) / jnp.maximum(std, _EPS)
+
+
+def minmax_norm(x, mask):
+    big = jnp.where(mask, x, jnp.inf)
+    small = jnp.where(mask, x, -jnp.inf)
+    lo = jnp.min(big, axis=-1, keepdims=True)
+    hi = jnp.max(small, axis=-1, keepdims=True)
+    return (x - lo) / jnp.maximum(hi - lo, _EPS)
+
+
+def linear_scale(x, mask):
+    """Map to [0, 1] by dividing by the per-query max magnitude."""
+    hi = jnp.max(jnp.where(mask, jnp.abs(x), 0.0), axis=-1, keepdims=True)
+    return x / jnp.maximum(hi, _EPS)
+
+
+NORMALIZERS = {"znorm": znorm, "minmax": minmax_norm, "linear": linear_scale}
+
+
+def hybrid_scores(splade_scores, colbert_scores, mask, *, alpha: float,
+                  normalizer: str = "znorm"):
+    """Both score arrays: (..., C) aligned on the same candidate list.
+    α = 0 → pure Rerank (ColBERT order); α = 1 → pure SPLADE."""
+    norm = NORMALIZERS[normalizer]
+    ns = norm(splade_scores, mask)
+    nc = norm(colbert_scores, mask)
+    out = alpha * ns + (1.0 - alpha) * nc
+    return jnp.where(mask, out, -jnp.inf)

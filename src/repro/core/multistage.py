@@ -1,0 +1,75 @@
+"""ColBERT-serve's multi-stage retrieval pipeline.
+
+Four systems, exactly as the paper's evaluation defines them:
+
+  * ``colbert``  — full PLAID end-to-end (in-memory or MMAP per store mode)
+  * ``splade``   — SPLADEv2 w/ PISA-style impact index only
+  * ``rerank``   — SPLADE top-``first_k`` → MMAP ColBERT exact rescoring
+  * ``hybrid``   — rerank + α-interpolated z-normed score fusion
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hybrid as hybrid_mod
+from repro.core.plaid import PLAIDSearcher
+from repro.index.splade_index import SpladeIndex
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiStageParams:
+    first_k: int = 200            # SPLADE candidates (paper: top-200)
+    k: int = 100                  # final depth
+    alpha: float = 0.3            # paper's MS MARCO-tuned value
+    normalizer: str = "znorm"
+
+
+class MultiStageRetriever:
+    def __init__(self, splade_index: SpladeIndex, searcher: PLAIDSearcher,
+                 params: MultiStageParams = MultiStageParams()):
+        self.splade = splade_index
+        self.searcher = searcher
+        self.params = params
+
+    # ------------------------------------------------------------------
+    def run_splade(self, term_ids, term_weights, k: Optional[int] = None):
+        return self.splade.score_host(np.asarray(term_ids),
+                                      np.asarray(term_weights),
+                                      k or self.params.first_k)
+
+    # ------------------------------------------------------------------
+    def search(self, method: str, q_emb=None, term_ids=None,
+               term_weights=None, alpha: Optional[float] = None,
+               k: Optional[int] = None):
+        """Returns (pids (k,), scores (k,)), -1 padded, descending."""
+        p = self.params
+        k = k or p.k
+        alpha = p.alpha if alpha is None else alpha
+
+        if method == "colbert":
+            pids, scores, _ = self.searcher.search(q_emb, k=k)
+            return pids, scores
+
+        pids, s_scores = self.run_splade(term_ids, term_weights, p.first_k)
+        if method == "splade":
+            return pids[:k], s_scores[:k]
+
+        c_scores = self.searcher.rerank(q_emb, pids)
+        mask = pids >= 0
+        if method == "rerank":
+            final = np.where(mask, c_scores, -np.inf)
+        elif method == "hybrid":
+            final = np.asarray(hybrid_mod.hybrid_scores(
+                jnp.asarray(s_scores), jnp.asarray(c_scores),
+                jnp.asarray(mask), alpha=alpha, normalizer=p.normalizer))
+        else:
+            raise ValueError(method)
+
+        order = np.argsort(-final, kind="stable")[:k]
+        out_pids = np.where(final[order] > -np.inf, pids[order], -1)
+        return out_pids, final[order]

@@ -1,0 +1,185 @@
+"""PLAID multi-stage search over the compressed ColBERTv2 index.
+
+Stages (Santhanam et al., CIKM'22):
+  1. centroid scoring:   S_c = Q · C^T, top-``nprobe`` centroids/q-token
+  2. candidate generation from the IVF
+  3. approximate scoring by centroid interaction (codes only — cheap,
+     *no residual access*)
+  4. residual decompression + exact MaxSim for the surviving ``ndocs``
+
+The class orchestrates jitted device stages with host gathers through
+the PagedStore (mmap tier), mirroring the paper's Python↔C++ split.
+``device_resident=True`` instead keeps the whole pool in device memory
+and exposes a single jitted ``serve_step`` — that path is what the
+multi-pod dry-run lowers, with the pool sharded over the 'model' axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.index.builder import ColBERTIndex
+from repro.index.residual import unpack_codes
+from repro.models.colbert import maxsim
+
+
+@dataclasses.dataclass(frozen=True)
+class PlaidParams:
+    nprobe: int = 4
+    candidate_cap: int = 4096    # max candidate pids after stage 2
+    ndocs: int = 256             # survivors entering exact scoring
+    k: int = 100                 # final results
+
+
+# --------------------------------------------------------------------------
+# jitted stage kernels (shapes static per index)
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("nprobe",))
+def stage1_centroid_probe(q_emb, centroids, nprobe: int):
+    """q_emb (Lq, d), centroids (K, d) → (scores_c (Lq, K), top cids)."""
+    s = jnp.einsum("qd,kd->qk", q_emb, centroids,
+                   preferred_element_type=jnp.float32)
+    _, cids = jax.lax.top_k(s, nprobe)
+    return s, cids.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("cap",))
+def stage2_candidates(ivf_padded, cids, cap: int):
+    """ivf_padded (K, P) int32 (−1 fill); cids (Lq, nprobe) →
+    unique candidate pids (cap,) (−1 fill)."""
+    cand = ivf_padded[cids.reshape(-1)].reshape(-1)      # (Lq*nprobe*P,)
+    # unique with static size; -1 fill sorts first so drop via where
+    uniq = jnp.unique(cand, size=cap + 1, fill_value=-1)
+    uniq = jnp.where(uniq >= 0, uniq, -1)
+    # compact: move -1s to the back (sort by (is_pad, value))
+    order = jnp.argsort(jnp.where(uniq >= 0, 0, 1), stable=True)
+    return uniq[order][:cap]
+
+
+@jax.jit
+def stage3_approx_score(scores_c, cand_codes, cand_valid, q_valid=None):
+    """Centroid-interaction approximation.
+
+    scores_c: (Lq, K); cand_codes: (C, Ld) int32 centroid ids;
+    cand_valid: (C, Ld) → approx scores (C,)."""
+    s = scores_c[:, cand_codes]                  # (Lq, C, Ld)
+    s = jnp.where(cand_valid[None], s, -1e30)
+    per_q = jnp.max(s, axis=-1)                  # (Lq, C)
+    per_q = jnp.where(per_q <= -1e29, 0.0, per_q)
+    if q_valid is not None:
+        per_q = per_q * q_valid[:, None]
+    return jnp.sum(per_q, axis=0)                # (C,)
+
+
+@functools.partial(jax.jit, static_argnames=("nbits",))
+def stage4_exact_score(q_emb, packed, cids, valid, centroids,
+                       bucket_weights, nbits: int):
+    """Decompress-and-MaxSim: packed (C, Ld, pd) uint8, cids (C, Ld)."""
+    codes = unpack_codes(packed, nbits)
+    emb = centroids[cids] + bucket_weights[codes.astype(jnp.int32)]
+    emb = emb * valid[..., None]
+    return maxsim(q_emb, emb, valid)
+
+
+# --------------------------------------------------------------------------
+# Orchestrator
+# --------------------------------------------------------------------------
+
+class PLAIDSearcher:
+    def __init__(self, index: ColBERTIndex, params: PlaidParams = PlaidParams(),
+                 device_resident: bool = False, ivf_pad: Optional[int] = None):
+        self.index = index
+        self.params = params
+        self.centroids = jnp.asarray(index.centroids)
+        self.bucket_weights = jnp.asarray(index.bucket_weights)
+        self.ivf_padded = jnp.asarray(index.ivf.as_padded(ivf_pad))
+        self.device_resident = device_resident
+        if device_resident:
+            # whole pool in device memory (the in-memory ColBERTv2 baseline
+            # or the TPU serve path with the pool sharded over 'model')
+            self.dev_codes = jnp.asarray(np.asarray(index.store.codes))
+            self.dev_residuals = jnp.asarray(np.asarray(index.store.residuals))
+            self.dev_offsets = jnp.asarray(index.doc_offsets)
+            self.dev_doclens = jnp.asarray(index.doclens)
+
+    # -- full PLAID (stages 1-4) ------------------------------------------
+    def search(self, q_emb: np.ndarray, k: Optional[int] = None):
+        """q_emb: (Lq, dim). Returns (pids (k,), scores (k,)) desc."""
+        p = self.params
+        k = k or p.k
+        q = jnp.asarray(q_emb)
+        scores_c, cids = stage1_centroid_probe(q, self.centroids, p.nprobe)
+        cand = stage2_candidates(self.ivf_padded, cids, p.candidate_cap)
+
+        cand_np = np.asarray(cand)
+        n_real = int((cand_np >= 0).sum())
+        if self.device_resident:
+            codes, packed, valid = self._gather_device(cand)
+        else:
+            codes_np, packed_np, valid_np = \
+                self.index.gather_doc_tokens(cand_np)
+            codes, valid = jnp.asarray(codes_np), jnp.asarray(valid_np)
+
+        approx = stage3_approx_score(scores_c, codes, valid)
+        approx = jnp.where(cand >= 0, approx, -jnp.inf)
+        ndocs = min(p.ndocs, p.candidate_cap)
+        _, keep = jax.lax.top_k(approx, ndocs)
+        final_pids = cand[keep]
+
+        if self.device_resident:
+            f_codes, f_packed, f_valid = self._gather_device(final_pids)
+        else:
+            # Stage 4 is the only residual access — this is where the
+            # mmap pages get touched.
+            c_np, r_np, v_np = self.index.gather_doc_tokens(
+                np.asarray(final_pids))
+            f_codes, f_packed, f_valid = (jnp.asarray(c_np),
+                                          jnp.asarray(r_np),
+                                          jnp.asarray(v_np))
+
+        exact = stage4_exact_score(q, f_packed, f_codes, f_valid,
+                                   self.centroids, self.bucket_weights,
+                                   self.index.nbits)
+        exact = jnp.where(final_pids >= 0, exact, -jnp.inf)
+        k_eff = min(k, ndocs)
+        top_s, idx = jax.lax.top_k(exact, k_eff)
+        out_pids = np.full(k, -1, np.int64)
+        out_scores = np.full(k, -np.inf, np.float32)
+        out_pids[:k_eff] = np.asarray(final_pids[idx])
+        out_scores[:k_eff] = np.asarray(top_s)
+        return out_pids, out_scores, {"candidates": n_real}
+
+    # -- rerank-only (stage 4 on external candidates) ----------------------
+    def rerank(self, q_emb: np.ndarray, pids: np.ndarray):
+        """Exact MaxSim for given candidates (the paper's Rerank path).
+        pids: (C,) (−1 pad). Returns scores (C,) aligned with pids."""
+        q = jnp.asarray(q_emb)
+        if self.device_resident:
+            codes, packed, valid = self._gather_device(jnp.asarray(pids))
+        else:
+            c_np, r_np, v_np = self.index.gather_doc_tokens(np.asarray(pids))
+            codes, packed, valid = (jnp.asarray(c_np), jnp.asarray(r_np),
+                                    jnp.asarray(v_np))
+        scores = stage4_exact_score(q, packed, codes, valid, self.centroids,
+                                    self.bucket_weights, self.index.nbits)
+        return np.asarray(jnp.where(jnp.asarray(pids) >= 0, scores, -jnp.inf))
+
+    # -- device-resident gather --------------------------------------------
+    def _gather_device(self, pids):
+        idx = self.index
+        safe = jnp.clip(pids, 0, idx.n_docs - 1)
+        starts = self.dev_offsets[safe]
+        tok = starts[:, None] + jnp.arange(idx.doc_maxlen)[None, :]
+        tok = jnp.minimum(tok, idx.store.n_tokens - 1)
+        codes = self.dev_codes[tok]
+        packed = self.dev_residuals[tok]
+        valid = (jnp.arange(idx.doc_maxlen)[None, :] <
+                 self.dev_doclens[safe][:, None]) & (pids >= 0)[:, None]
+        return codes, packed, valid

@@ -1,0 +1,94 @@
+"""GPipe-style pipeline parallelism over a mesh axis.
+
+The multi-pod meshes in this framework use the 'pod' axis as outer data
+parallelism by default; this module provides the alternative — running
+layer *stages* across an axis with microbatched execution and
+``ppermute`` hand-offs — for models whose per-layer weights exceed a
+pod's memory even fully sharded (the 1000+-node regime in DESIGN.md §6).
+
+Schedule: classic GPipe fill-drain. With S stages and M microbatches
+the loop runs M + S − 1 ticks; at tick t, stage s computes microbatch
+t − s (when in range) and hands its activation to stage s+1. Bubble
+fraction = (S−1)/(M+S−1); choose M ≥ 4·S to keep it under ~20 %.
+
+``pipeline_apply`` is written for use inside ``shard_map`` where the
+stage axis is a real mesh axis; every device executes every tick
+(inactive ticks compute on garbage and are masked), which is exactly
+how a static SPMD pipeline runs on hardware.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+
+def pipeline_apply(stage_fn: Callable, params_local, xs, *,
+                   axis: str, n_stages: int):
+    """Run inside shard_map. params_local: this stage's params (leading
+    stage axis of size 1 already sliced off by shard_map).
+    xs: (M, mb, ...) microbatches — meaningful on stage 0, ignored
+    elsewhere. Returns (M, mb, ...) outputs valid on the LAST stage and
+    psum-broadcast so every stage holds them."""
+    s_idx = jax.lax.axis_index(axis)
+    M = xs.shape[0]
+    S = n_stages
+    zero = jnp.zeros_like(xs[0])
+
+    def tick(t, carry):
+        outputs, cur = carry
+        # stage 0 injects microbatch t (while in fill range)
+        mb_in = jax.lax.dynamic_index_in_dim(
+            xs, jnp.clip(t, 0, M - 1), axis=0, keepdims=False)
+        cur = jnp.where((s_idx == 0) & (t < M), mb_in, cur)
+        y = stage_fn(params_local, cur)
+        # last stage commits microbatch t − (S−1)
+        out_t = t - (S - 1)
+        commit = (s_idx == S - 1) & (out_t >= 0)
+        outputs = jax.lax.dynamic_update_index_in_dim(
+            outputs,
+            jnp.where(commit, y,
+                      jax.lax.dynamic_index_in_dim(
+                          outputs, jnp.clip(out_t, 0, M - 1), 0,
+                          keepdims=False)),
+            jnp.clip(out_t, 0, M - 1), 0)
+        # hand activations down the pipe
+        y_next = jax.lax.ppermute(
+            y, axis, [(i, i + 1) for i in range(S - 1)])
+        return outputs, y_next
+
+    outputs0 = jnp.zeros_like(xs)
+    outputs, _ = jax.lax.fori_loop(0, M + S - 1, tick, (outputs0, zero))
+    # broadcast the last stage's outputs to every stage
+    mask = (s_idx == S - 1).astype(outputs.dtype)
+    return jax.lax.psum(outputs * mask, axis)
+
+
+def make_pipelined_fn(stage_fn: Callable, mesh, *, axis: str = "pipe",
+                      n_stages: int):
+    """jit-able pipelined apply: (params_stacked (S, ...), xs (M, mb, …))
+    → (M, mb, …). Params are stage-sharded over ``axis``; inputs and
+    outputs replicated (shard the mb axis over 'data' outside)."""
+    fn = shard_map(
+        partial(_pipeline_entry, stage_fn, axis, n_stages),
+        mesh=mesh,
+        in_specs=(P(axis), P()),
+        out_specs=P(),
+        check_rep=False)
+    return fn
+
+
+def _pipeline_entry(stage_fn, axis, n_stages, params_stacked, xs):
+    # shard_map hands each device a (1, ...) slice of the stacked params
+    params_local = jax.tree_util.tree_map(lambda p: p[0], params_stacked)
+    return pipeline_apply(stage_fn, params_local, xs, axis=axis,
+                          n_stages=n_stages)
+
+
+def bubble_fraction(n_stages: int, n_microbatches: int) -> float:
+    return (n_stages - 1) / (n_microbatches + n_stages - 1)

@@ -1,0 +1,215 @@
+"""Path-based sharding rules.
+
+Every param tree in the framework is sharded by matching each leaf's
+tree path against an ordered rule table. A rule maps to a PartitionSpec
+for the *trailing* dims of the leaf; leading dims (e.g. the stacked
+layer axis under scan) are padded with ``None``.
+
+Axis conventions (see launch/mesh.py):
+  * ``data``  — batch / FSDP axis (16-way per pod)
+  * ``model`` — TP / EP / vocab axis (16-way)
+  * ``pod``   — outer data-parallel axis (multi-pod only)
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# A rule: (path regex, spec for trailing dims). First match wins.
+# `F` marks the FSDP axis and `T` the tensor-parallel axis; they are
+# substituted at build time so the same tables serve 1-pod and 2-pod
+# meshes (and a hillclimb can remap them).
+LM_RULES: list[tuple[str, tuple]] = [
+    (r"embed$",                     ("F", "T")),      # (V, D)
+    (r"lm_head$",                   ("F", "T")),      # (D, V)
+    (r"mtp/proj$",                  ("F", "T")),
+    (r"attn/(wq|wk|wv)$",           ("F", "T")),      # (D, Hh) col-parallel
+    (r"attn/(bq|bk|bv)$",           ("T",)),
+    (r"attn/wo$",                   ("T", "F")),      # (Hh, D) row-parallel
+    (r"attn/wq_a$",                 ("F", "T")),
+    (r"attn/wq_b$",                 ("F", "T")),
+    (r"attn/wkv_a$",                ("F", "T")),
+    (r"attn/wkv_b$",                ("F", "T")),
+    (r"ffn/router$",                ("F", None)),
+    (r"ffn/router_bias$",           (None,)),
+    (r"ffn/(w_gate|w_up)$",         ("F", "T")),      # dense & shared FFN
+    (r"ffn/w_down$",                ("T", "F")),
+    (r"ffn/experts_w_(gate|up)$",   ("T", "F", None)),  # (E, D, F) EP on E
+    (r"ffn/experts_w_down$",        ("T", None, "F")),  # (E, F, D)
+    (r"(scale|bias)$",              (None,)),         # norms replicated
+]
+
+# RecSys: huge tables row-sharded on T (model) so lookups become
+# collective gathers; the small interaction/MLP params are replicated
+# (sub-MB — sharding them would only add collectives).
+RECSYS_RULES: list[tuple[str, tuple]] = [
+    (r"tables/.*$",                 ("T", None)),     # (vocab_rows, dim)
+    (r"item_embed$",                ("T", None)),
+    (r"lr_weight$",                 ("T", None)),
+    (r"out_bias$",                  ("T",)),
+    (r".*",                         None),            # everything else
+]
+
+# MACE GNN: small params — replicate everything; edges shard the work.
+GNN_RULES: list[tuple[str, tuple]] = [
+    (r".*",                         None),            # fully replicated
+]
+
+# Retrieval (paper system): index sharded over T on the document axis.
+RETRIEVAL_RULES: list[tuple[str, tuple]] = [
+    (r"centroids$",                 (None, None)),
+    (r"(residuals|codes)$",         ("T", None)),
+    (r".*",                         None),
+]
+
+
+def _spec_for_leaf(path: str, shape: tuple, rules, fsdp_axis, tp_axis) -> P:
+    for pat, trailing in rules:
+        if re.search(pat, path):
+            if trailing is None:
+                return P()
+            sub = []
+            for ax in trailing:
+                if ax == "F":
+                    sub.append(fsdp_axis)
+                elif ax == "T":
+                    sub.append(tp_axis)
+                else:
+                    sub.append(ax)
+            pad = len(shape) - len(sub)
+            if pad < 0:  # leaf has fewer dims than rule (e.g. unstacked bias)
+                sub = sub[-len(shape):] if len(shape) else []
+                pad = 0
+            return P(*([None] * pad + sub))
+    return P()
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def make_param_specs(tree, rules, *, fsdp_axis="data", tp_axis="model"):
+    """PartitionSpec pytree mirroring ``tree`` (works on SDS trees)."""
+    def f(path, leaf):
+        return _spec_for_leaf(_path_str(path), tuple(leaf.shape), rules,
+                              fsdp_axis, tp_axis)
+    return jax.tree_util.tree_map_with_path(f, tree)
+
+
+def make_param_shardings(mesh: Mesh, tree, rules, *, fsdp_axis="data",
+                         tp_axis="model"):
+    specs = make_param_specs(tree, rules, fsdp_axis=fsdp_axis, tp_axis=tp_axis)
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    """The composite batch-sharding axes for this mesh ('pod' folded in)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def data_specs_lm(mesh: Mesh):
+    """Input specs for LM train: tokens/labels (B, L)."""
+    ba = batch_axes(mesh)
+    return {"tokens": P(ba, None), "labels": P(ba, None)}
+
+
+def cache_spec_gqa(mesh: Mesh):
+    ba = batch_axes(mesh)
+    return P(None, ba, None, "model", None)  # (layers, B, S, K, h)
+
+
+def cache_spec_mla(mesh: Mesh):
+    ba = batch_axes(mesh)
+    return P(None, ba, None, None)  # (layers, B, S, r) — latent replicated on T
+
+
+def make_cache_shardings(mesh: Mesh, cache_tree, *,
+                         batch: Optional[int] = None):
+    """Shardings for a decode cache pytree from init_cache/abstract_cache.
+
+    Default: batch over the data axes, kv-heads over 'model' (GQA) or
+    cache-seq over 'model' (MLA latent — no head axis worth splitting).
+    When ``batch`` is smaller than the data-parallel width (long-context
+    decode, B=1) the cache-sequence axis shards over the *whole* mesh so
+    the multi-hundred-GB cache still spreads.
+    """
+    ba = batch_axes(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    data_ways = 1
+    for ax in ba:
+        data_ways *= sizes[ax]
+    seq_mode = batch is not None and batch < data_ways
+    all_axes = tuple(mesh.axis_names)
+
+    def f(path, leaf):
+        name = _path_str(path)
+        if name.endswith("positions") and len(leaf.shape) == 2:
+            if seq_mode:
+                return NamedSharding(mesh, P(None, all_axes))
+            return NamedSharding(mesh, P(ba, None))
+        if re.search(r"/(k|v)$", name):
+            if seq_mode:
+                return NamedSharding(mesh, P(None, None, all_axes, None, None))
+            if leaf.shape[3] % sizes["model"] == 0:   # kv heads divide TP
+                return NamedSharding(mesh, P(None, ba, None, "model", None))
+            return NamedSharding(mesh, P(None, ba, "model", None, None))
+        if re.search(r"/(c_kv|k_rope)$", name):
+            if seq_mode:
+                return NamedSharding(mesh, P(None, None, all_axes, None))
+            return NamedSharding(mesh, P(None, ba, "model", None))
+        return NamedSharding(mesh, P())
+    return jax.tree_util.tree_map_with_path(f, cache_tree)
+
+
+def opt_state_shardings(mesh: Mesh, param_specs, opt_abstract):
+    """Shardings for an AdamWState built over params with ``param_specs``.
+
+    Moment payloads mirror the parameter layout; int8-quantised moments
+    keep the parameter spec on the int8 payload, while the per-block
+    scale drops the trailing axis (its block count rarely divides the
+    TP width; scales are 1/128 of the payload, so replication on that
+    axis is free)."""
+    def _no_last(spec: P) -> P:
+        if len(spec) == 0:
+            return spec
+        return P(*spec[:-1], None)
+
+    def like(spec, sub):
+        if isinstance(sub, dict):   # quantised moment {q, scale}
+            return {"q": NamedSharding(mesh, spec),
+                    "scale": NamedSharding(mesh, _no_last(spec))}
+        return NamedSharding(mesh, spec)
+
+    m = jax.tree_util.tree_map(like, param_specs, opt_abstract.m)
+    v = jax.tree_util.tree_map(like, param_specs, opt_abstract.v)
+    return type(opt_abstract)(count=NamedSharding(mesh, P()), m=m, v=v)
+
+
+def attach(sds_tree, sharding_tree):
+    """ShapeDtypeStructs with shardings attached — jit.lower() inputs."""
+    return jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        sds_tree, sharding_tree)
+
+
+def sds(shape, dtype, mesh: Mesh, spec: P):
+    """One ShapeDtypeStruct with a NamedSharding attached."""
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def replicated(mesh: Mesh, tree):
+    return jax.tree_util.tree_map(lambda _: NamedSharding(mesh, P()), tree)

@@ -1,0 +1,34 @@
+"""IR quality metrics: MRR@k, Recall@k, Success@k."""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def mrr_at_k(ranked_pids: np.ndarray, relevant: list[set], k: int = 10) -> float:
+    """ranked_pids: (Q, depth); relevant: per-query set of relevant pids."""
+    total = 0.0
+    for q in range(len(relevant)):
+        for rank, pid in enumerate(ranked_pids[q][:k]):
+            if int(pid) in relevant[q]:
+                total += 1.0 / (rank + 1)
+                break
+    return total / max(len(relevant), 1)
+
+
+def recall_at_k(ranked_pids: np.ndarray, relevant: list[set], k: int) -> float:
+    total = 0.0
+    for q in range(len(relevant)):
+        if not relevant[q]:
+            continue
+        hits = sum(1 for pid in ranked_pids[q][:k] if int(pid) in relevant[q])
+        total += hits / len(relevant[q])
+    return total / max(len(relevant), 1)
+
+
+def success_at_k(ranked_pids: np.ndarray, relevant: list[set], k: int = 5) -> float:
+    total = 0.0
+    for q in range(len(relevant)):
+        if any(int(pid) in relevant[q] for pid in ranked_pids[q][:k]):
+            total += 1.0
+    return total / max(len(relevant), 1)

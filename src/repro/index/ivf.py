@@ -1,0 +1,46 @@
+"""Inverted file: centroid id → postings of passage ids (CSR)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class IVF:
+    pids: np.ndarray         # (total_postings,) int32, concatenated per centroid
+    offsets: np.ndarray      # (K+1,) int64
+    n_centroids: int
+
+    def postings(self, cid: int) -> np.ndarray:
+        return self.pids[self.offsets[cid]:self.offsets[cid + 1]]
+
+    def max_list_len(self) -> int:
+        return int(np.max(np.diff(self.offsets))) if len(self.pids) else 0
+
+    def as_padded(self, pad_to: int | None = None):
+        """Dense (K, pad) int32 with -1 fill — the device-resident form."""
+        pad = pad_to or self.max_list_len()
+        out = np.full((self.n_centroids, pad), -1, np.int32)
+        for c in range(self.n_centroids):
+            lst = self.postings(c)[:pad]
+            out[c, :len(lst)] = lst
+        return out
+
+
+def build_ivf(token_cids: np.ndarray, token_pids: np.ndarray,
+              n_centroids: int) -> IVF:
+    """token_cids/token_pids: (n_tokens,) — centroid and passage of each
+    token. A passage appears once per distinct centroid among its tokens."""
+    pairs = np.stack([token_cids.astype(np.int64),
+                      token_pids.astype(np.int64)], axis=1)
+    pairs = np.unique(pairs, axis=0)
+    cids, pids = pairs[:, 0], pairs[:, 1]
+    order = np.argsort(cids, kind="stable")
+    cids, pids = cids[order], pids[order]
+    counts = np.bincount(cids, minlength=n_centroids)
+    offsets = np.zeros(n_centroids + 1, np.int64)
+    np.cumsum(counts, out=offsets[1:])
+    return IVF(pids=pids.astype(np.int32), offsets=offsets,
+               n_centroids=n_centroids)

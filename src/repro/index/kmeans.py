@@ -1,0 +1,61 @@
+"""Batched k-means (Lloyd) in JAX, for ColBERTv2 centroid training.
+
+Centroids live on the unit sphere (ColBERT embeddings are L2-normalised)
+so assignment uses the max-inner-product == min-L2 equivalence.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def assign(points, centroids, chunk: int = 8192):
+    """points: (N, d); centroids: (K, d) → (ids (N,), sims (N,))."""
+    N = points.shape[0]
+    pad = (-N) % chunk
+    pts = jnp.pad(points, ((0, pad), (0, 0)))
+    pts = pts.reshape(-1, chunk, points.shape[1])
+
+    def body(_, p):
+        s = jnp.einsum("nd,kd->nk", p, centroids, preferred_element_type=jnp.float32)
+        return None, (jnp.argmax(s, axis=-1).astype(jnp.int32), jnp.max(s, axis=-1))
+
+    _, (ids, sims) = jax.lax.scan(body, None, pts)
+    return ids.reshape(-1)[:N], sims.reshape(-1)[:N]
+
+
+@functools.partial(jax.jit, donate_argnums=(1,))
+def _update(points, centroids, ids):
+    K, d = centroids.shape
+    sums = jax.ops.segment_sum(points, ids, num_segments=K)
+    counts = jax.ops.segment_sum(jnp.ones((points.shape[0],), jnp.float32),
+                                 ids, num_segments=K)
+    new = sums / jnp.maximum(counts[:, None], 1.0)
+    # keep empty clusters where they were
+    new = jnp.where(counts[:, None] > 0, new, centroids)
+    norm = jnp.linalg.norm(new, axis=-1, keepdims=True)
+    return new / jnp.maximum(norm, 1e-9), counts
+
+
+def train_kmeans(key, points, n_centroids: int, n_iters: int = 10):
+    """points: (N, d) float32 (unit-norm). Returns (K, d) unit centroids."""
+    N = points.shape[0]
+    idx = jax.random.choice(key, N, (n_centroids,), replace=N < n_centroids)
+    centroids = points[idx]
+    centroids = centroids / jnp.maximum(
+        jnp.linalg.norm(centroids, axis=-1, keepdims=True), 1e-9)
+    for _ in range(n_iters):
+        ids, _ = assign(points, centroids)
+        centroids, _ = _update(points, centroids, ids)
+    return centroids
+
+
+def pick_n_centroids(n_tokens: int) -> int:
+    """ColBERTv2 heuristic: ~16·sqrt(120·N) rounded to a power of two."""
+    target = 16 * np.sqrt(n_tokens)
+    return int(2 ** int(np.clip(np.round(np.log2(max(target, 2))), 2, 18)))

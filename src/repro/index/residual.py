@@ -1,0 +1,96 @@
+"""ColBERTv2 residual codec: centroid id + n-bit quantised residual.
+
+Encoding (per token embedding e):
+  cid  = argmax_c <e, centroid_c>
+  r    = e − centroid_cid
+  per-dim code = bucket index of r_d against global quantile cutoffs
+  codes packed little-endian into uint8 (8/nbits codes per byte)
+
+Decoding: e ≈ centroid_cid + bucket_weights[code].
+This matches the ColBERTv2/PLAID codec structure (nbits ∈ {2, 4}).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class ResidualCodec:
+    centroids: jnp.ndarray       # (K, dim) float32, unit norm
+    bucket_cutoffs: jnp.ndarray  # (2^nbits − 1,) float32
+    bucket_weights: jnp.ndarray  # (2^nbits,) float32
+    nbits: int
+
+    @property
+    def dim(self) -> int:
+        return int(self.centroids.shape[1])
+
+    @property
+    def codes_per_byte(self) -> int:
+        return 8 // self.nbits
+
+    def packed_dim(self) -> int:
+        return self.dim // self.codes_per_byte
+
+
+def fit_codec(centroids, sample_embs, sample_cids, nbits: int) -> ResidualCodec:
+    """Fit bucket cutoffs/weights from a residual sample (quantiles)."""
+    res = np.asarray(sample_embs) - np.asarray(centroids)[np.asarray(sample_cids)]
+    n_buckets = 2 ** nbits
+    qs = np.linspace(0, 1, n_buckets + 1)[1:-1]
+    cutoffs = np.quantile(res, qs)
+    # bucket weight = mean residual value within the bucket
+    bucket_ids = np.searchsorted(cutoffs, res.reshape(-1))
+    sums = np.bincount(bucket_ids, weights=res.reshape(-1), minlength=n_buckets)
+    cnts = np.maximum(np.bincount(bucket_ids, minlength=n_buckets), 1)
+    weights = (sums / cnts).astype(np.float32)
+    return ResidualCodec(
+        centroids=jnp.asarray(centroids, jnp.float32),
+        bucket_cutoffs=jnp.asarray(cutoffs, jnp.float32),
+        bucket_weights=jnp.asarray(weights, jnp.float32),
+        nbits=nbits,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("nbits",))
+def encode_residuals(embs, cids, centroids, cutoffs, nbits: int):
+    """embs: (N, dim) → packed codes (N, dim·nbits/8) uint8."""
+    res = embs - centroids[cids]
+    codes = jnp.searchsorted(cutoffs, res).astype(jnp.uint8)  # (N, dim)
+    cpb = 8 // nbits
+    N, dim = codes.shape
+    grouped = codes.reshape(N, dim // cpb, cpb)
+    shifts = (jnp.arange(cpb, dtype=jnp.uint8) * nbits)
+    packed = jnp.sum(
+        grouped.astype(jnp.uint32) << shifts.astype(jnp.uint32), axis=-1)
+    return packed.astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("nbits",))
+def unpack_codes(packed, nbits: int):
+    """packed: (..., dim/cpb) uint8 → codes (..., dim) uint8."""
+    cpb = 8 // nbits
+    mask = jnp.uint8(2 ** nbits - 1)
+    shifts = (jnp.arange(cpb, dtype=jnp.uint8) * nbits)
+    codes = (packed[..., None] >> shifts) & mask
+    return codes.reshape(*packed.shape[:-1], packed.shape[-1] * cpb)
+
+
+@functools.partial(jax.jit, static_argnames=("nbits",))
+def decode_embeddings(packed, cids, centroids, bucket_weights, nbits: int):
+    """→ (N, dim) float32 approximate embeddings."""
+    codes = unpack_codes(packed, nbits)
+    return centroids[cids] + bucket_weights[codes.astype(jnp.int32)]
+
+
+def compression_ratio(dim: int, nbits: int) -> float:
+    """fp32 embedding bytes vs (packed codes + 4-byte centroid id)."""
+    raw = 4 * dim
+    comp = dim * nbits / 8 + 4
+    return raw / comp

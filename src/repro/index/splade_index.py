@@ -1,0 +1,140 @@
+"""Impact-ordered inverted index for SPLADE — the PISA adaptation.
+
+Postings are stored CSR by term with uint8-quantised impacts (the paper
+uses PISA's ``block_simdbp`` with a quantised scorer; we keep the
+quantisation and the term-at-a-time scoring, and replace SIMD posting
+decompression with vectorised numpy / a JAX segment-sum path).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SpladeIndex:
+    term_offsets: np.ndarray   # (V+1,) int64
+    pids: np.ndarray           # (nnz,) int32  (pid-ascending within term)
+    impacts: np.ndarray        # (nnz,) uint8
+    quantum: float             # impact = quantum * uint8
+    n_docs: int
+    vocab: int
+
+    # ------------------------------------------------------------------
+    def df(self, term: int) -> int:
+        return int(self.term_offsets[term + 1] - self.term_offsets[term])
+
+    def score_host(self, term_ids: np.ndarray, term_weights: np.ndarray,
+                   k: int = 200):
+        """Term-at-a-time exact scoring on the host (the PISA stand-in).
+
+        term_ids: (Qt,) int32; term_weights: (Qt,) float32 (0 padding ok).
+        Returns (pids (k,), scores (k,)) sorted desc; -1 padded."""
+        scores = np.zeros(self.n_docs, np.float32)
+        for t, w in zip(term_ids, term_weights):
+            if w <= 0 or t < 0:
+                continue
+            s, e = self.term_offsets[t], self.term_offsets[t + 1]
+            if e > s:
+                np.add.at  # noqa: B018 — doc: scores[pids] += w*imp, vectorised
+                scores[self.pids[s:e]] += w * self.quantum * \
+                    self.impacts[s:e].astype(np.float32)
+        k_eff = min(k, self.n_docs)
+        top = np.argpartition(scores, -k_eff)[-k_eff:]
+        top = top[np.argsort(-scores[top], kind="stable")]
+        out_pids = np.full(k, -1, np.int64)
+        out_scores = np.zeros(k, np.float32)
+        out_pids[:k_eff] = top
+        out_scores[:k_eff] = scores[top]
+        # mark empty tail (score 0 and beyond corpus) as absent
+        return out_pids, out_scores
+
+    # ------------------------------------------------------------------
+    def as_padded(self, max_df: int):
+        """Fixed-shape postings for the JAX/TPU path: (V, max_df) pids
+        (−1 fill) + impacts. Terms with df > max_df keep their top-impact
+        postings (documented approximation; exactness measured in tests)."""
+        V = self.vocab
+        pids = np.full((V, max_df), -1, np.int32)
+        imps = np.zeros((V, max_df), np.uint8)
+        for t in range(V):
+            s, e = self.term_offsets[t], self.term_offsets[t + 1]
+            if e <= s:
+                continue
+            p, i = self.pids[s:e], self.impacts[s:e]
+            if e - s > max_df:
+                keep = np.argpartition(i, -(max_df))[-max_df:]
+                p, i = p[keep], i[keep]
+            pids[t, :len(p)] = p
+            imps[t, :len(p)] = i
+        return pids, imps
+
+    # ------------------------------------------------------------------
+    def save(self, path):
+        path = pathlib.Path(path)
+        path.mkdir(parents=True, exist_ok=True)
+        np.save(path / "term_offsets.npy", self.term_offsets)
+        self.pids.tofile(path / "postings_pids.bin")
+        self.impacts.tofile(path / "postings_imps.bin")
+        (path / "meta.json").write_text(json.dumps({
+            "quantum": self.quantum, "n_docs": self.n_docs,
+            "vocab": self.vocab, "nnz": int(len(self.pids))}))
+
+    @classmethod
+    def load(cls, path, mmap: bool = False):
+        path = pathlib.Path(path)
+        meta = json.loads((path / "meta.json").read_text())
+        if mmap:
+            pids = np.memmap(path / "postings_pids.bin", np.int32, "r")
+            imps = np.memmap(path / "postings_imps.bin", np.uint8, "r")
+        else:
+            pids = np.fromfile(path / "postings_pids.bin", np.int32)
+            imps = np.fromfile(path / "postings_imps.bin", np.uint8)
+        return cls(term_offsets=np.load(path / "term_offsets.npy"),
+                   pids=pids, impacts=imps, quantum=meta["quantum"],
+                   n_docs=meta["n_docs"], vocab=meta["vocab"])
+
+
+def build_splade_index(doc_term_ids: np.ndarray, doc_term_weights: np.ndarray,
+                       vocab: int, n_docs: int) -> SpladeIndex:
+    """doc_term_ids/weights: (n_docs, T) top-T sparse representations
+    (0-weight entries ignored)."""
+    rows, cols = np.nonzero(doc_term_weights > 0)
+    terms = doc_term_ids[rows, cols].astype(np.int64)
+    weights = doc_term_weights[rows, cols].astype(np.float32)
+    pids = rows.astype(np.int32)
+
+    quantum = float(weights.max()) / 255.0 if len(weights) else 1.0
+    imps = np.clip(np.round(weights / max(quantum, 1e-9)), 1, 255).astype(np.uint8)
+
+    order = np.lexsort((pids, terms))
+    terms, pids, imps = terms[order], pids[order], imps[order]
+    counts = np.bincount(terms, minlength=vocab)
+    offsets = np.zeros(vocab + 1, np.int64)
+    np.cumsum(counts, out=offsets[1:])
+    return SpladeIndex(term_offsets=offsets, pids=pids, impacts=imps,
+                       quantum=quantum, n_docs=n_docs, vocab=vocab)
+
+
+def splade_score_jax_padded(padded_pids, padded_imps, quantum, n_docs,
+                            term_ids, term_weights, k: int):
+    """JAX scorer over fixed-shape postings (the TPU path).
+
+    padded_pids/imps: (V, max_df); term_ids: (Qt,); term_weights: (Qt,).
+    Returns (top_pids (k,), top_scores (k,))."""
+    import jax
+    import jax.numpy as jnp
+
+    p = padded_pids[term_ids]                     # (Qt, max_df)
+    i = padded_imps[term_ids].astype(jnp.float32)  # (Qt, max_df)
+    w = term_weights[:, None] * i * quantum
+    valid = (p >= 0) & (term_weights[:, None] > 0)
+    seg = jnp.where(valid, p, n_docs).reshape(-1)
+    vals = jnp.where(valid, w, 0.0).reshape(-1)
+    scores = jax.ops.segment_sum(vals, seg, num_segments=n_docs + 1)[:n_docs]
+    top_scores, top_pids = jax.lax.top_k(scores, k)
+    return top_pids.astype(jnp.int32), top_scores

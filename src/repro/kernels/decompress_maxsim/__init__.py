@@ -1,0 +1,4 @@
+from repro.kernels.decompress_maxsim.ops import decompress_maxsim_scores
+from repro.kernels.decompress_maxsim.ref import decompress_maxsim_ref
+
+__all__ = ["decompress_maxsim_scores", "decompress_maxsim_ref"]

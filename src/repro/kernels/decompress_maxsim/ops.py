@@ -1,0 +1,48 @@
+"""Public wrapper for the fused decompress+MaxSim kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.utils import round_up
+from repro.kernels.decompress_maxsim.decompress_maxsim import (
+    decompress_maxsim_pallas,
+)
+from repro.kernels.decompress_maxsim.ref import decompress_maxsim_ref
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("nbits", "impl", "block_c", "gather"))
+def decompress_maxsim_scores(q, packed, cids, doc_valid, centroids,
+                             bucket_weights, *, nbits: int,
+                             q_valid=None, impl: str = "auto",
+                             block_c: int = 16, gather: str = "take"):
+    """Fused scoring over compressed candidates.
+
+    q: (Lq, d); packed: (C, Ld, d·nbits/8) uint8; cids: (C, Ld) int32;
+    doc_valid: (C, Ld) bool → (C,) f32 scores.
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if q_valid is None:
+        q_valid = jnp.ones((q.shape[0],), bool)
+    if impl == "ref":
+        return decompress_maxsim_ref(q, packed, cids, doc_valid, centroids,
+                                     bucket_weights, nbits, q_valid)
+
+    C = packed.shape[0]
+    Cp = round_up(max(C, 1), block_c)
+    if Cp != C:
+        packed = jnp.pad(packed, ((0, Cp - C), (0, 0), (0, 0)))
+        cids = jnp.pad(cids, ((0, Cp - C), (0, 0)))
+        doc_valid = jnp.pad(doc_valid, ((0, Cp - C), (0, 0)))
+    out = decompress_maxsim_pallas(
+        q.astype(jnp.float32), packed, cids.astype(jnp.int32),
+        doc_valid.astype(jnp.int8), q_valid.astype(jnp.int8),
+        centroids.astype(jnp.float32), bucket_weights.astype(jnp.float32),
+        nbits=nbits, block_c=block_c, gather=gather,
+        interpret=(impl == "interpret"))
+    return out[:C]

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle: residual decompression followed by MaxSim."""
+
+import jax.numpy as jnp
+
+from repro.index.residual import unpack_codes
+from repro.kernels.maxsim.ref import maxsim_scores_ref
+
+
+def decompress_maxsim_ref(q, packed, cids, doc_valid, centroids,
+                          bucket_weights, nbits, q_valid=None):
+    """q: (Lq, d); packed: (C, Ld, d·nbits/8) uint8; cids: (C, Ld) int32;
+    doc_valid: (C, Ld) bool; centroids: (K, d); bucket_weights: (2^nbits,)
+    → scores (C,) f32 — identical to decompress-then-maxsim."""
+    codes = unpack_codes(packed, nbits)
+    emb = centroids[cids] + bucket_weights[codes.astype(jnp.int32)]
+    emb = emb * doc_valid[..., None]
+    return maxsim_scores_ref(q, emb, doc_valid, q_valid)

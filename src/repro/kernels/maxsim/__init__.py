@@ -1,0 +1,4 @@
+from repro.kernels.maxsim.ops import maxsim_scores
+from repro.kernels.maxsim.ref import maxsim_scores_ref
+
+__all__ = ["maxsim_scores", "maxsim_scores_ref"]

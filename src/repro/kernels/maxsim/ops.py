@@ -1,0 +1,41 @@
+"""jit'd public wrapper for the MaxSim kernel: pads to tile boundaries,
+picks Pallas (TPU) vs interpret (CPU validation) vs pure-jnp fallback."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.utils import round_up
+from repro.kernels.maxsim.maxsim import maxsim_pallas
+from repro.kernels.maxsim.ref import maxsim_scores_ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_c"))
+def maxsim_scores(q, docs, doc_valid, q_valid=None, *, impl: str = "auto",
+                  block_c: int = 16):
+    """Late-interaction scores. q: (Lq, d); docs: (C, Ld, d);
+    doc_valid: (C, Ld) bool; q_valid: optional (Lq,) bool → (C,) f32.
+
+    impl: 'pallas' (TPU), 'interpret' (kernel body on CPU), 'ref'
+    (pure jnp), 'auto' (pallas on TPU backend else ref).
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if q_valid is None:
+        q_valid = jnp.ones((q.shape[0],), bool)
+    if impl == "ref":
+        return maxsim_scores_ref(q, docs, doc_valid, q_valid)
+
+    C, Ld, d = docs.shape
+    Cp = round_up(max(C, 1), block_c)
+    if Cp != C:
+        docs = jnp.pad(docs, ((0, Cp - C), (0, 0), (0, 0)))
+        doc_valid = jnp.pad(doc_valid, ((0, Cp - C), (0, 0)))
+    out = maxsim_pallas(q.astype(jnp.float32), docs.astype(jnp.float32),
+                        doc_valid.astype(jnp.int8),
+                        q_valid.astype(jnp.int8),
+                        block_c=block_c, interpret=(impl == "interpret"))
+    return out[:C]

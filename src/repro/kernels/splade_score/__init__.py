@@ -1,0 +1,4 @@
+from repro.kernels.splade_score.ops import splade_block_scores
+from repro.kernels.splade_score.ref import splade_block_scores_ref
+
+__all__ = ["splade_block_scores", "splade_block_scores_ref"]

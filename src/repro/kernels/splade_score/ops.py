@@ -1,0 +1,42 @@
+"""Public wrapper for the SPLADE block-scoring kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.utils import round_up
+from repro.kernels.splade_score.ref import splade_block_scores_ref
+from repro.kernels.splade_score.splade_score import splade_block_pallas
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_docs", "impl", "block_d", "chunk"))
+def splade_block_scores(post_pids, post_imps, term_weights, *, n_docs: int,
+                        impl: str = "auto", block_d: int = 2048,
+                        chunk: int = 512):
+    """Impact scores for one query over padded postings → (n_docs,) f32."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return splade_block_scores_ref(post_pids, post_imps, term_weights,
+                                       n_docs)
+    Qt, max_df = post_pids.shape
+    vals = jnp.where(post_pids >= 0,
+                     term_weights[:, None] * post_imps, 0.0)
+    pids = jnp.where(post_pids >= 0, post_pids, -1)
+    E = Qt * max_df
+    Ep = round_up(E, chunk)
+    if Ep != E:
+        pad_rows = (Ep - E) // max_df + 1
+        pids = jnp.pad(pids, ((0, pad_rows), (0, 0)), constant_values=-1)
+        vals = jnp.pad(vals, ((0, pad_rows), (0, 0)))
+        pids = pids.reshape(-1)[:Ep].reshape(-1, chunk)
+        vals = vals.reshape(-1)[:Ep].reshape(-1, chunk)
+    out = splade_block_pallas(pids.astype(jnp.int32),
+                              vals.astype(jnp.float32),
+                              n_docs=n_docs, block_d=block_d, chunk=chunk,
+                              interpret=(impl == "interpret"))
+    return out[:n_docs]

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for impact scoring over padded postings."""
+
+import jax
+import jax.numpy as jnp
+
+
+def splade_block_scores_ref(post_pids, post_imps, term_weights, n_docs: int):
+    """post_pids: (Qt, max_df) int32 (−1 pad); post_imps: (Qt, max_df)
+    float32 (already de-quantised); term_weights: (Qt,) float32
+    → scores (n_docs,) f32: scores[p] = Σ_t w_t · imp_{t,p}."""
+    valid = (post_pids >= 0) & (term_weights[:, None] > 0)
+    seg = jnp.where(valid, post_pids, n_docs).reshape(-1)
+    vals = jnp.where(valid, term_weights[:, None] * post_imps, 0.0).reshape(-1)
+    return jax.ops.segment_sum(vals, seg, num_segments=n_docs + 1)[:n_docs]

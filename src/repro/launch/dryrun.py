@@ -1,0 +1,253 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count at first
+# init, and the production meshes below need 512 placeholder devices.
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import pathlib           # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+
+from repro.configs.cells import build_cell          # noqa: E402
+from repro.configs.registry import ARCHS, all_cells, get_arch  # noqa: E402
+from repro.launch import hlo_analysis               # noqa: E402
+from repro.launch.mesh import make_production_mesh, mesh_device_count  # noqa: E402
+
+"""Multi-pod dry-run driver.
+
+For every (architecture × input shape × mesh) cell:
+  jit(step).lower(input_specs) → compile → memory_analysis +
+  cost_analysis + post-SPMD HLO collective/FLOP analysis → JSON record.
+
+The 16×16 single-pod mesh (256 chips) and the 2×16×16 multi-pod mesh
+(512 chips) must both compile for every live cell — failures here are
+sharding bugs in the system. Results feed EXPERIMENTS.md §Dry-run and
+§Roofline.
+"""
+
+# TPU v5e hardware model (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+
+def _mesh(mesh_name: str):
+    return make_production_mesh(multi_pod=(mesh_name == "multi"))
+
+
+def _mem_dict(mem) -> dict:
+    keys = ("generated_code_size_in_bytes", "argument_size_in_bytes",
+            "output_size_in_bytes", "temp_size_in_bytes",
+            "alias_size_in_bytes")
+    return {k: int(getattr(mem, k, -1)) for k in keys}
+
+
+def model_flops_estimate(arch_name: str, shape_name: str) -> float:
+    """Analytic MODEL_FLOPS: 6·N(active)·D for LM training, 2·N·D for a
+    forward pass; family-specific estimates otherwise (global, all
+    chips)."""
+    from repro.common.utils import count_params
+    arch = get_arch(arch_name)
+    sd = arch.shapes[shape_name]
+    if arch.family == "lm":
+        from repro.models import transformer as T
+        cfg = arch.full_cfg()
+        params = T.abstract_init(cfg)
+        n_total = count_params(params)
+        # active params: replace MoE expert count by top_k + shared
+        n_active = n_total
+        for blocks, n in cfg.segments:
+            for b in blocks:
+                if b.ffn_kind == "moe":
+                    m = b.moe
+                    per_exp = 3 * m.d_model * m.d_ff_expert
+                    n_active -= n * per_exp * (m.n_experts - m.top_k)
+        d = sd.dims
+        tokens = d["global_batch"] * (d["seq"] if sd.kind != "decode" else 1)
+        mult = 6.0 if sd.kind == "train" else 2.0
+        return mult * n_active * tokens
+    if arch.family == "gnn":
+        # per-edge message cost dominates: E · (K² mixing + K·81 couple)
+        cfg = arch.full_cfg()
+        K = cfg.d_hidden
+        E = sd.dims["n_edges"]
+        per_edge = 2 * K * K + 3 * 81 * K * 2
+        per_node = 4 * 81 * 81 * K * 2        # product basis couplings
+        N = sd.dims["n_nodes"]
+        fwd = cfg.n_layers * (E * per_edge + N * per_node)
+        return (3.0 if sd.kind == "train" else 1.0) * fwd
+    if arch.family == "recsys":
+        from repro.configs.cells import _recsys_module
+        mod = _recsys_module(arch.name)
+        cfg = arch.full_cfg()
+        params = jax.eval_shape(
+            lambda: mod.init(jax.random.PRNGKey(0), cfg))
+        dense = count_params(params)
+        # embedding tables are lookups, not matmuls: exclude them
+        for k in ("tables", "item_embed", "lr_weight", "out_bias"):
+            pass
+        flat = jax.tree_util.tree_flatten_with_path(params)[0]
+        table = sum(x.size for p, x in flat
+                    if any(s in "/".join(str(q) for q in p)
+                           for s in ("tables", "item_embed", "lr_weight",
+                                     "out_bias")))
+        dense -= table
+        d = sd.dims
+        work_items = d.get("batch", 1) * max(
+            getattr(cfg, "seq_len", 1), 1) + d.get("n_candidates", 0)
+        mult = 6.0 if sd.kind == "train" else 2.0
+        return mult * dense * work_items
+    if arch.family == "retrieval":
+        cfg = arch.full_cfg()
+        from repro.common.utils import count_params as cp
+        from repro.models import colbert as CB
+        enc_params = 110e6
+        d = sd.dims
+        if shape_name == "train_contrastive":
+            toks = d["batch"] * (cfg.colbert.query_maxlen
+                                 + cfg.colbert.doc_maxlen)
+            inter = (d["batch"] ** 2 * cfg.colbert.query_maxlen
+                     * cfg.colbert.doc_maxlen * cfg.colbert.dim * 2)
+            return 6 * enc_params * toks / 2 + inter
+        if shape_name == "encode_corpus":
+            return 2 * enc_params * d["batch"] * cfg.colbert.doc_maxlen
+        if shape_name == "serve_rerank":
+            C = d["first_k"]
+        else:
+            C = d["ndocs"] + 0.1 * d["candidate_cap"]
+        return (d["batch"] * C * cfg.index.doc_maxlen
+                * cfg.colbert.query_maxlen * cfg.index.dim * 2)
+    return 0.0
+
+
+def run_cell(arch_name: str, shape_name: str, mesh_name: str,
+             out_dir: pathlib.Path, *, force: bool = False,
+             save_hlo: bool = False, tag: str = "",
+             variant: str = "base") -> dict:
+    if variant != "base":
+        tag = f"{tag}__{variant}"
+    key = f"{arch_name}__{shape_name}__{mesh_name}{tag}"
+    out_path = out_dir / f"{key}.json"
+    if out_path.exists() and not force:
+        rec = json.loads(out_path.read_text())
+        if rec.get("status") == "ok":
+            print(f"[cached] {key}: compile {rec['t_compile_s']:.1f}s")
+            return rec
+
+    mesh = _mesh(mesh_name)
+    n_dev = mesh_device_count(mesh)
+    arch = get_arch(arch_name)
+    rec = {"arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+           "variant": variant, "n_devices": n_dev, "status": "ok"}
+    try:
+        with mesh:
+            if variant == "base":
+                cell = build_cell(arch, shape_name, mesh)
+            else:
+                from repro.configs.cells_opt import build_cell_opt
+                cell = build_cell_opt(arch, shape_name, mesh)
+                if cell is None:
+                    raise ValueError(
+                        f"no optimized variant for {arch_name}×{shape_name}")
+            t0 = time.time()
+            lowered = jax.jit(
+                cell.fn, donate_argnums=cell.donate_argnums
+            ).lower(*cell.args)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+
+        mem = compiled.memory_analysis()
+        print(f"[{key}] memory_analysis:", mem)
+        try:
+            ca = compiled.cost_analysis() or {}
+        except Exception:
+            ca = {}
+        print(f"[{key}] cost_analysis flops={ca.get('flops')} "
+              f"bytes={ca.get('bytes accessed')}")
+        text = compiled.as_text()
+        costs = hlo_analysis.analyze(text, n_devices=n_dev)
+        if save_hlo:
+            (out_dir / f"{key}.hlo.txt").write_text(text)
+
+        mflops = model_flops_estimate(arch_name, shape_name)
+        per_dev_model = mflops / n_dev
+        compute_s = costs.flops / PEAK_FLOPS
+        memory_s = costs.mem_bytes / HBM_BW
+        coll_s = costs.coll_bytes / ICI_BW
+        dom = max((compute_s, "compute"), (memory_s, "memory"),
+                  (coll_s, "collective"))[1]
+        rec.update({
+            "t_lower_s": t1 - t0, "t_compile_s": t2 - t1,
+            "memory": _mem_dict(mem),
+            "xla_cost_analysis": {k: float(v) for k, v in ca.items()
+                                  if isinstance(v, (int, float))},
+            "hlo_flops_per_dev": costs.flops,
+            "hlo_bytes_per_dev": costs.mem_bytes,
+            "collective_bytes_per_dev": costs.coll_bytes,
+            "collective_by_kind": costs.coll_by_kind,
+            "model_flops_global": mflops,
+            "model_flops_per_dev": per_dev_model,
+            "useful_flops_ratio": (per_dev_model / costs.flops
+                                   if costs.flops else 0.0),
+            "roofline": {
+                "compute_s": compute_s, "memory_s": memory_s,
+                "collective_s": coll_s, "dominant": dom,
+            },
+        })
+        print(f"[{key}] compile={t2 - t1:.1f}s  "
+              f"compute={compute_s * 1e3:.2f}ms  "
+              f"memory={memory_s * 1e3:.2f}ms  "
+              f"collective={coll_s * 1e3:.2f}ms  dominant={dom}")
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[{key}] FAILED: {rec['error']}")
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None,
+                    help="architecture id (default: all)")
+    ap.add_argument("--shape", default=None,
+                    help="shape name (default: all for the arch)")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--variant", default="base", choices=["base", "opt"])
+    args = ap.parse_args()
+
+    cells = all_cells()
+    if args.arch:
+        cells = [(a, s, d) for a, s, d in cells if a == args.arch]
+    if args.shape:
+        cells = [(a, s, d) for a, s, d in cells if s == args.shape]
+    if args.list:
+        for a, s, d in cells:
+            print(f"{a:30s} {s:20s} {d.kind}")
+        return
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    out_dir = pathlib.Path(args.out)
+    n_fail = 0
+    for mesh_name in meshes:
+        for a, s, _ in cells:
+            rec = run_cell(a, s, mesh_name, out_dir, force=args.force,
+                           save_hlo=args.save_hlo, variant=args.variant)
+            n_fail += rec["status"] != "ok"
+    print(f"\ndone: {len(cells) * len(meshes)} cells, {n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+Kept as functions (never module-level constants) so importing this
+module never touches jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n: int):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)),
+                         devices=jax.devices()[:n])
+
+
+def make_local_mesh():
+    """1-device mesh with the production axis names — lets the same
+    pjit'd code paths run in tests/benchmarks on one CPU device."""
+    return jax.make_mesh((1, 1), ("data", "model"), axis_types=_auto(2))
+
+
+def mesh_device_count(mesh) -> int:
+    n = 1
+    for s in mesh.devices.shape:
+        n *= s
+    return n

@@ -1,0 +1,142 @@
+"""Roofline report generator: reads the dry-run JSON records and emits
+the per-(arch × shape × mesh) table for EXPERIMENTS.md §Roofline.
+
+Terms (per device, v5e):
+  compute    = HLO_dot_FLOPs / 197 TFLOP/s (bf16)
+  memory     = HLO_bytes (fusion-boundary traffic model) / 819 GB/s
+  collective = ring-model wire bytes / 50 GB/s per ICI link
+
+plus MODEL_FLOPS/HLO_FLOPs (useful-compute ratio) and the dominant term.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from repro.configs.registry import all_cells
+
+_HW = {"peak_flops": 197e12, "hbm_bw": 819e9, "ici_bw": 50e9}
+
+
+def load_records(dry_dir: pathlib.Path, mesh: str, variant: str = "base"):
+    suffix = f"__{mesh}.json" if variant == "base" else \
+        f"__{mesh}__{variant}.json"
+    recs = {}
+    for p in dry_dir.glob(f"*{suffix}"):
+        if variant == "base" and "__opt" in p.name:
+            continue
+        r = json.loads(p.read_text())
+        if r.get("status") == "ok":
+            recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.1f}us"
+
+
+def roofline_fraction(rec: dict) -> float:
+    """Useful-FLOPs bound: model FLOPs / (dominant-term time × peak)."""
+    r = rec["roofline"]
+    bound_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+    if bound_s <= 0:
+        return 0.0
+    return rec["model_flops_per_dev"] / (bound_s * _HW["peak_flops"])
+
+
+def table(dry_dir: pathlib.Path, mesh: str, *, fmt: str = "md") -> str:
+    recs = load_records(dry_dir, mesh)
+    rows = []
+    header = ("| arch | shape | compute | memory | collective | dominant "
+              "| model/HLO flops | roofline frac | mem/dev |")
+    sep = "|" + "---|" * 9
+    rows.append(header)
+    rows.append(sep)
+    for arch, shape, sd in all_cells(include_skipped=False):
+        r = recs.get((arch, shape))
+        if r is None:
+            rows.append(f"| {arch} | {shape} | - | - | - | MISSING | | | |")
+            continue
+        rl = r["roofline"]
+        mem_gb = (r["memory"]["argument_size_in_bytes"]
+                  + r["memory"]["temp_size_in_bytes"]) / 2 ** 30
+        rows.append(
+            f"| {arch} | {shape} | {fmt_s(rl['compute_s'])} "
+            f"| {fmt_s(rl['memory_s'])} | {fmt_s(rl['collective_s'])} "
+            f"| **{rl['dominant']}** "
+            f"| {r['useful_flops_ratio']:.2f} "
+            f"| {roofline_fraction(r):.3f} "
+            f"| {mem_gb:.1f} GiB |")
+    return "\n".join(rows)
+
+
+def pick_hillclimb_targets(dry_dir: pathlib.Path, mesh: str = "single"):
+    """worst roofline fraction / most collective-bound / most
+    paper-representative."""
+    recs = load_records(dry_dir, mesh)
+    scored = []
+    for (arch, shape), r in recs.items():
+        rl = r["roofline"]
+        total = rl["compute_s"] + rl["memory_s"] + rl["collective_s"]
+        coll_frac = rl["collective_s"] / total if total else 0
+        scored.append({"arch": arch, "shape": shape,
+                       "frac": roofline_fraction(r),
+                       "coll_frac": coll_frac, "dominant": rl["dominant"]})
+    worst = min(scored, key=lambda s: s["frac"] if s["frac"] > 0 else 1e9)
+    most_coll = max(scored, key=lambda s: s["coll_frac"])
+    paper = next(s for s in scored
+                 if s["arch"] == "colbert-serve" and s["shape"] == "serve_plaid")
+    return worst, most_coll, paper
+
+
+def compare_table(dry_dir: pathlib.Path, mesh: str) -> str:
+    """Baseline vs hillclimbed variants, for cells that have both."""
+    base = load_records(dry_dir, mesh, "base")
+    opt = load_records(dry_dir, mesh, "opt")
+    rows = ["| arch | shape | base bound | opt bound | gain | opt dominant |",
+            "|" + "---|" * 6]
+
+    def bound(r):
+        rl = r["roofline"]
+        return max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+
+    for key in sorted(opt):
+        if key not in base:
+            continue
+        b, o = bound(base[key]), bound(opt[key])
+        rows.append(
+            f"| {key[0]} | {key[1]} | {fmt_s(b)} | {fmt_s(o)} "
+            f"| **{b / max(o, 1e-12):.1f}×** "
+            f"| {opt[key]['roofline']['dominant']} |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--targets", action="store_true")
+    ap.add_argument("--compare", action="store_true",
+                    help="baseline vs optimized variants")
+    args = ap.parse_args()
+    d = pathlib.Path(args.dry_dir)
+    if args.compare:
+        print(compare_table(d, args.mesh))
+        return
+    print(table(d, args.mesh))
+    if args.targets:
+        w, c, p = pick_hillclimb_targets(d, args.mesh)
+        print("\nhillclimb targets:")
+        print("  worst roofline :", w)
+        print("  most collective:", c)
+        print("  paper technique:", p)
+
+
+if __name__ == "__main__":
+    main()

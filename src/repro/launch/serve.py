@@ -1,0 +1,106 @@
+"""Serving launcher: bring up the concurrent ColBERT-serve stack.
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        [--method hybrid] [--threads 1] [--port 8080] [--qps 2.0]
+
+Builds (or loads with --index-dir) a ColBERT + SPLADE index, starts the
+worker pool and the TCP front, and either serves forever (--port) or
+runs a bounded Poisson load and prints the latency report.
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import tempfile
+import threading
+
+import numpy as np
+
+from repro.core.multistage import MultiStageParams, MultiStageRetriever
+from repro.core.plaid import PLAIDSearcher, PlaidParams
+from repro.data.synth import SynthCfg, make_corpus
+from repro.index.builder import ColBERTIndex, build_colbert_index
+from repro.index.splade_index import SpladeIndex, build_splade_index
+from repro.serving.engine import Request, ServeEngine
+from repro.serving.loadgen import run_poisson_load
+from repro.serving.server import RetrievalServer, TCPRetrievalServer
+
+
+def build_or_load(index_dir: str | None, mode: str):
+    if index_dir and (pathlib.Path(index_dir) / "colbert").exists():
+        base = pathlib.Path(index_dir)
+        index = ColBERTIndex(base / "colbert", mode=mode)
+        sidx = SpladeIndex.load(base / "splade", mmap=(mode == "mmap"))
+        corpus = None
+    else:
+        cfg = SynthCfg(n_docs=3000, n_queries=300, seed=0)
+        corpus = make_corpus(cfg)
+        d = pathlib.Path(index_dir or tempfile.mkdtemp(prefix="serve_"))
+        build_colbert_index(d / "colbert", corpus["doc_embs"],
+                            corpus["doc_lens"], nbits=4,
+                            n_centroids=256, kmeans_iters=4)
+        index = ColBERTIndex(d / "colbert", mode=mode)
+        sidx = build_splade_index(corpus["doc_term_ids"],
+                                  corpus["doc_term_weights"], cfg.vocab,
+                                  cfg.n_docs)
+        sidx.save(d / "splade")
+    searcher = PLAIDSearcher(index, PlaidParams(nprobe=4,
+                                                candidate_cap=1024,
+                                                ndocs=256))
+    retr = MultiStageRetriever(sidx, searcher,
+                               MultiStageParams(first_k=200, alpha=0.3))
+    return corpus, index, retr
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--index-dir", default=None)
+    ap.add_argument("--mode", default="mmap", choices=["mmap", "ram"])
+    ap.add_argument("--method", default="hybrid")
+    ap.add_argument("--threads", type=int, default=1)
+    ap.add_argument("--port", type=int, default=0,
+                    help=">0: serve forever on this TCP port")
+    ap.add_argument("--qps", type=float, default=2.0)
+    ap.add_argument("--n", type=int, default=60)
+    args = ap.parse_args()
+
+    corpus, index, retr = build_or_load(args.index_dir, args.mode)
+    server = RetrievalServer(ServeEngine(retr), n_threads=args.threads)
+    server.start()
+    print(f"serving ({args.mode} index, {args.threads} thread(s)); "
+          f"pool={index.store.total_bytes() / 1e6:.1f} MB")
+
+    if args.port:
+        tcp = TCPRetrievalServer(("0.0.0.0", args.port), server)
+        print(f"TCP front on :{args.port} (newline-delimited JSON; "
+              f"Ctrl-C to stop)")
+        try:
+            tcp.serve_forever()
+        except KeyboardInterrupt:
+            pass
+        finally:
+            tcp.shutdown()
+            server.drain()
+            server.stop()
+        return
+
+    assert corpus is not None, "--port 0 load test needs a built-in corpus"
+    reqs = [Request(qid=i, method=args.method,
+                    q_emb=corpus["q_embs"][i % 300],
+                    term_ids=corpus["q_term_ids"][i % 300],
+                    term_weights=corpus["q_term_weights"][i % 300], k=20)
+            for i in range(args.n)]
+    res = run_poisson_load(server, reqs, qps=args.qps, seed=0)
+    s = res.summary()
+    print(f"offered {s['offered_qps']:.2f} QPS → achieved "
+          f"{s['achieved_qps']:.2f}; p50 {s['p50'] * 1e3:.1f} ms, "
+          f"p95 {s['p95'] * 1e3:.1f} ms, p99 {s['p99'] * 1e3:.1f} ms")
+    print("mmap working set:",
+          f"{100 * index.store.resident_fraction_estimate():.1f}% of pool")
+    server.drain()
+    server.stop()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""ColBERT encoder: contextualised late-interaction embeddings.
+
+Query side: prepend [Q] marker, pad to ``query_maxlen`` with [MASK]
+tokens (query augmentation, per Khattab & Zaharia 2020) — mask tokens
+*do* attend and produce embeddings used in MaxSim.
+Doc side: prepend [D] marker; padding is masked out of scoring.
+Both sides project to ``dim`` (default 128) and L2-normalise.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.utils import PRNGSeq
+from repro.models import encoder as E
+from repro.models import layers as L
+
+MASK_TOKEN = 3
+Q_MARKER = 1
+D_MARKER = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class ColBERTCfg:
+    encoder: E.EncoderCfg
+    dim: int = 128
+    query_maxlen: int = 32
+    doc_maxlen: int = 180
+
+
+def init(key, cfg: ColBERTCfg):
+    ks = PRNGSeq(key)
+    return {
+        "encoder": E.init(next(ks), cfg.encoder),
+        "proj": L.dense_init(next(ks), cfg.encoder.d_model, cfg.dim),
+    }
+
+
+def _encode(params, cfg: ColBERTCfg, tokens, mask):
+    h = E.apply(params["encoder"], cfg.encoder, tokens, mask)
+    emb = jnp.einsum("bld,dk->blk", h, params["proj"].astype(h.dtype))
+    norm = jnp.linalg.norm(emb.astype(jnp.float32), axis=-1, keepdims=True)
+    return (emb.astype(jnp.float32) / jnp.maximum(norm, 1e-9)).astype(emb.dtype)
+
+
+def encode_queries(params, cfg: ColBERTCfg, tokens, lengths):
+    """tokens: (B, query_maxlen) int32 (unpadded content), lengths: (B,).
+
+    Applies the [Q] marker and MASK augmentation: every slot beyond the
+    real query tokens becomes [MASK] and *participates* in scoring.
+    Returns (B, query_maxlen, dim) embeddings; all positions are valid.
+    """
+    B, Lq = tokens.shape
+    pos = jnp.arange(Lq)[None]
+    toks = jnp.where(pos < lengths[:, None], tokens, MASK_TOKEN)
+    toks = jnp.concatenate(
+        [jnp.full((B, 1), Q_MARKER, tokens.dtype), toks[:, :-1]], axis=1)
+    mask = jnp.ones_like(toks, dtype=bool)
+    return _encode(params, cfg, toks, mask)
+
+
+def encode_docs(params, cfg: ColBERTCfg, tokens, lengths):
+    """tokens: (B, doc_maxlen) int32, lengths: (B,).
+
+    Returns (emb (B, doc_maxlen, dim), valid (B, doc_maxlen) bool)."""
+    B, Ld = tokens.shape
+    pos = jnp.arange(Ld)[None]
+    valid = pos < lengths[:, None]
+    toks = jnp.concatenate(
+        [jnp.full((B, 1), D_MARKER, tokens.dtype), tokens[:, :-1]], axis=1)
+    valid = jnp.concatenate([jnp.ones((B, 1), bool), valid[:, :-1]], axis=1)
+    emb = _encode(params, cfg, toks, valid)
+    emb = emb * valid[..., None].astype(emb.dtype)
+    return emb, valid
+
+
+def maxsim(q_emb, d_emb, d_valid):
+    """Late-interaction score. q_emb: (Lq, dim); d_emb: (C, Ld, dim);
+    d_valid: (C, Ld) → scores (C,)."""
+    s = jnp.einsum("qk,cdk->cqd", q_emb, d_emb, preferred_element_type=jnp.float32)
+    s = jnp.where(d_valid[:, None, :], s, -1e30)
+    per_q = jnp.max(s, axis=-1)                      # (C, Lq)
+    per_q = jnp.where(per_q <= -1e29, 0.0, per_q)    # fully-empty docs
+    return jnp.sum(per_q, axis=-1)

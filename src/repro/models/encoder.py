@@ -1,0 +1,76 @@
+"""Bidirectional transformer encoder (BERT-style) shared by ColBERT and
+SPLADE. Pre-LN blocks, learned absolute positions, padding masks via
+position == -1 sentinels."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.utils import PRNGSeq
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderCfg:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    max_len: int = 512
+    dtype: Any = jnp.float32
+
+    @property
+    def attn(self) -> L.AttnCfg:
+        return L.AttnCfg(d_model=self.d_model, n_heads=self.n_heads,
+                         kv_heads=self.n_heads,
+                         head_dim=self.d_model // self.n_heads,
+                         use_rope=False)
+
+
+def init(key, cfg: EncoderCfg):
+    ks = PRNGSeq(key)
+
+    def layer_init(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "ln_attn": L.layernorm_init(cfg.d_model, cfg.dtype),
+            "ln_ffn": L.layernorm_init(cfg.d_model, cfg.dtype),
+            "attn": L.gqa_init(k1, cfg.attn, cfg.dtype),
+            "ffn": L.ffn_init(k2, cfg.d_model, cfg.d_ff, cfg.dtype),
+        }
+
+    layer_keys = jnp.stack(ks.take(cfg.n_layers))
+    return {
+        "embed": L.embed_init(next(ks), cfg.vocab, cfg.d_model, cfg.dtype),
+        "pos_embed": L.embed_init(next(ks), cfg.max_len, cfg.d_model, cfg.dtype),
+        "final_ln": L.layernorm_init(cfg.d_model, cfg.dtype),
+        "layers": jax.vmap(layer_init)(layer_keys),
+    }
+
+
+def apply(params, cfg: EncoderCfg, tokens, mask):
+    """tokens: (B, L) int32; mask: (B, L) bool → hidden (B, L, D)."""
+    B, Lseq = tokens.shape
+    pos = jnp.arange(Lseq, dtype=jnp.int32)[None]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = x + jnp.take(params["pos_embed"], jnp.minimum(pos, cfg.max_len - 1), axis=0)
+    x = x.astype(cfg.dtype)
+    positions = jnp.where(mask, jnp.broadcast_to(pos, (B, Lseq)), -1)
+
+    def body(x, lp):
+        h = L.layernorm_apply(lp["ln_attn"], x)
+        a = L.gqa_apply(lp["attn"], cfg.attn, h, positions, causal=False,
+                        use_blockwise=False)
+        x = x + a
+        h = L.layernorm_apply(lp["ln_ffn"], x)
+        x = x + L.ffn_apply(lp["ffn"], h)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return L.layernorm_apply(params["final_ln"], x)

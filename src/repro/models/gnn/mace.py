@@ -1,0 +1,156 @@
+"""MACE (Batatia et al., arXiv:2206.07697): higher-order equivariant
+message passing, adapted for JAX/TPU.
+
+Structure per layer (l_max = 2, correlation ν = 3):
+
+  1. density expansion   A_i = Σ_{j∈N(i)} R(r_ij) ⊙ Y(r̂_ij) ⊗ (W h_j)
+     — radial Bessel basis → per-(channel, l) weights; segment_sum over
+     the edge list is the scatter primitive (no sparse formats needed).
+  2. product basis       B_i^{(ν)} = couple(B^{(ν−1)}, A) for ν = 2, 3
+     — equivariant products through the exact real-SH Gaunt tensor
+     (the TPU-friendly stand-in for path-resolved CG contractions; see
+     DESIGN.md §hardware-adaptation).
+  3. update              h′ = W₀ A + Σ_ν W_ν B^{(ν)} + residual.
+
+Readouts: invariant (l=0) channels → MLP → per-node energy / class
+logits; graph-level tasks segment_sum over a graph-id vector.
+
+Citation-graph shapes (cora / ogbn-products) have no 3-D geometry; the
+assignment still pairs them with MACE, so nodes get synthetic unit
+positions and features enter through the initial channel embedding —
+recorded in DESIGN.md §Arch-applicability.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.utils import PRNGSeq
+from repro.models import layers as L
+from repro.models.gnn import spherical as sph
+
+
+@dataclasses.dataclass(frozen=True)
+class MACECfg:
+    n_layers: int = 2
+    d_hidden: int = 128          # channels K
+    l_max: int = 2               # fixed at 2 (N_LM = 9)
+    correlation: int = 3         # product-basis order ν
+    n_rbf: int = 8
+    r_cut: float = 2.0
+    d_in: int = 16               # input node-feature dim
+    n_out: int = 1               # energy (1) or class count
+    readout: str = "node"        # node | graph
+    dtype: Any = jnp.float32
+
+
+def bessel_rbf(r, n_rbf: int, r_cut: float):
+    """Radial Bessel basis with polynomial envelope (DimeNet-style)."""
+    r = jnp.maximum(r, 1e-9)
+    n = jnp.arange(1, n_rbf + 1, dtype=jnp.float32)
+    rb = jnp.sqrt(2.0 / r_cut) * jnp.sin(n * jnp.pi * r[..., None] / r_cut) / r[..., None]
+    u = jnp.clip(r / r_cut, 0.0, 1.0)
+    env = 1.0 - 10.0 * u ** 3 + 15.0 * u ** 4 - 6.0 * u ** 5
+    return rb * env[..., None]
+
+
+def init(key, cfg: MACECfg):
+    ks = PRNGSeq(key)
+    K = cfg.d_hidden
+    layers = []
+    for _ in range(cfg.n_layers):
+        lp = {
+            # radial MLP: n_rbf → K·3 per-(channel, l) weights
+            "radial_w1": L.dense_init(next(ks), cfg.n_rbf, 64, cfg.dtype),
+            "radial_w2": L.dense_init(next(ks), 64, K * 3, cfg.dtype),
+            "w_msg": L.dense_init(next(ks), K, K, cfg.dtype),
+            "w_a": L.dense_init(next(ks), K, K, cfg.dtype),
+            "w_b2": L.dense_init(next(ks), K, K, cfg.dtype),
+            "w_b3": L.dense_init(next(ks), K, K, cfg.dtype),
+        }
+        layers.append(lp)
+    return {
+        "embed_in": L.dense_init(next(ks), cfg.d_in, K, cfg.dtype),
+        "layers": layers,           # list — layer count is tiny (2)
+        "ro_w1": L.dense_init(next(ks), K, K, cfg.dtype),
+        "ro_w2": L.dense_init(next(ks), K, cfg.n_out, cfg.dtype),
+    }
+
+
+def _layer_apply(lp, cfg: MACECfg, h, pos, senders, receivers, gaunt,
+                 n_nodes: int):
+    """h: (N, K, 9) equivariant node features."""
+    K = cfg.d_hidden
+    # --- edge geometry -------------------------------------------------
+    dr = pos[receivers] - pos[senders]                  # (E, 3)
+    dist = jnp.linalg.norm(dr, axis=-1)
+    rhat = dr / jnp.maximum(dist[..., None], 1e-9)
+    Y = sph.real_sh_l2(rhat)                            # (E, 9)
+    rbf = bessel_rbf(dist, cfg.n_rbf, cfg.r_cut)        # (E, n_rbf)
+    Rw = jax.nn.silu(rbf @ lp["radial_w1"]) @ lp["radial_w2"]
+    Rw = Rw.reshape(-1, K, 3)                           # (E, K, l)
+    Rlm = Rw[:, :, sph.L_OF]                            # (E, K, 9)
+
+    # --- density expansion: A_i = Σ_j R ⊙ (h_j ⊗ Y) ----------------------
+    # degenerate (zero-length / self) edges are masked: Y at the zero
+    # vector is not a point on the sphere and would break equivariance
+    edge_ok = (dist > 1e-6).astype(h.dtype)[:, None, None]
+    hj = jnp.einsum("nkc,kq->nqc", h, lp["w_msg"])      # channel mix
+    Yb = jnp.broadcast_to(Y[:, None, :], (Y.shape[0], K, sph.N_LM))
+    msg = edge_ok * Rlm * sph.couple(hj[senders], Yb, gaunt)
+    A = jax.ops.segment_sum(msg, receivers, num_segments=n_nodes)  # (N, K, 9)
+
+    # --- higher-order product basis (correlation ν ≤ 3) ------------------
+    B2 = sph.couple(A, A, gaunt)
+    out = jnp.einsum("nkc,kq->nqc", A, lp["w_a"]) + \
+        jnp.einsum("nkc,kq->nqc", B2, lp["w_b2"])
+    if cfg.correlation >= 3:
+        B3 = sph.couple(B2, A, gaunt)
+        out = out + jnp.einsum("nkc,kq->nqc", B3, lp["w_b3"])
+    return h + out / np.sqrt(9.0)
+
+
+def forward(params, cfg: MACECfg, feats, pos, senders, receivers,
+            graph_ids: Optional[jnp.ndarray] = None,
+            n_graphs: int = 1):
+    """feats: (N, d_in); pos: (N, 3); senders/receivers: (E,) int32.
+    Returns per-node (N, n_out) or per-graph (n_graphs, n_out)."""
+    n_nodes = feats.shape[0]
+    gaunt = jnp.asarray(sph.gaunt_tensor(), cfg.dtype)
+    K = cfg.d_hidden
+    h0 = feats @ params["embed_in"]                       # (N, K)
+    h = jnp.zeros((n_nodes, K, sph.N_LM), cfg.dtype)
+    h = h.at[:, :, 0].set(h0)                             # scalars only at t=0
+
+    for lp in params["layers"]:
+        h = _layer_apply(lp, cfg, h, pos, senders, receivers, gaunt, n_nodes)
+
+    inv = h[:, :, 0]                                      # invariant channels
+    z = jax.nn.silu(inv @ params["ro_w1"]) @ params["ro_w2"]
+    if cfg.readout == "graph":
+        gid = graph_ids if graph_ids is not None else jnp.zeros(
+            (n_nodes,), jnp.int32)
+        return jax.ops.segment_sum(z, gid, num_segments=n_graphs)
+    return z
+
+
+def loss_fn(params, cfg: MACECfg, batch):
+    """Node classification (citation graphs) or graph regression
+    (molecules), selected by cfg.readout."""
+    out = forward(params, cfg, batch["feats"], batch["pos"],
+                  batch["senders"], batch["receivers"],
+                  batch.get("graph_ids"), batch.get("n_graphs", 1))
+    if cfg.readout == "graph":
+        err = out[:, 0] - batch["targets"]
+        return jnp.mean(jnp.square(err)), {"mse": jnp.mean(jnp.square(err))}
+    labels = batch["labels"]
+    mask = batch.get("label_mask", jnp.ones_like(labels, jnp.float32))
+    logp = jax.nn.log_softmax(out.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss, {"nll": loss}

@@ -1,0 +1,84 @@
+"""Layer-wise neighbour sampling (GraphSAGE-style) for minibatch GNN
+training on large graphs — the host-side data pipeline feeding the
+``minibatch_lg`` shape.
+
+The graph is held as CSR (indptr/indices). ``sample_subgraph`` draws a
+seed batch and fans out ``fanouts[i]`` neighbours per hop, returning a
+*fixed-shape* padded subgraph (node ids, edge list in local ids, valid
+masks) so the jitted train step never recompiles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class CSRGraph:
+    indptr: np.ndarray      # (N+1,) int64
+    indices: np.ndarray     # (nnz,) int32
+    n_nodes: int
+
+    def degree(self, u) -> int:
+        return int(self.indptr[u + 1] - self.indptr[u])
+
+    def neighbors(self, u) -> np.ndarray:
+        return self.indices[self.indptr[u]:self.indptr[u + 1]]
+
+
+def random_graph(rng: np.random.Generator, n_nodes: int, avg_degree: int,
+                 power: float = 1.2) -> CSRGraph:
+    """Power-law-ish random graph in CSR (for tests/benchmarks)."""
+    deg = np.minimum(
+        rng.zipf(power, n_nodes) + avg_degree // 2, 10 * avg_degree)
+    total = int(deg.sum())
+    indptr = np.zeros(n_nodes + 1, np.int64)
+    np.cumsum(deg, out=indptr[1:])
+    indices = rng.integers(0, n_nodes, total).astype(np.int32)
+    return CSRGraph(indptr=indptr, indices=indices, n_nodes=n_nodes)
+
+
+def sample_subgraph(graph: CSRGraph, seeds: np.ndarray,
+                    fanouts: tuple[int, ...], rng: np.random.Generator,
+                    *, max_nodes: int, max_edges: int):
+    """Fan-out sampling. Returns fixed shapes:
+       node_ids (max_nodes,) int32 (−1 pad) — position 0..n_seed-1 = seeds
+       senders/receivers (max_edges,) int32 local ids (edge i: sender →
+       receiver, receiver is the aggregation target; −1 pad)
+       n_nodes, n_edges actual counts.
+    """
+    node_ids = list(seeds.astype(np.int64))
+    local = {int(u): i for i, u in enumerate(seeds)}
+    edges = []
+    frontier = list(seeds.astype(np.int64))
+    for f in fanouts:
+        nxt = []
+        for u in frontier:
+            nbrs = graph.neighbors(int(u))
+            if len(nbrs) == 0:
+                continue
+            pick = rng.choice(nbrs, size=min(f, len(nbrs)), replace=False)
+            for v in pick:
+                v = int(v)
+                if v not in local:
+                    if len(node_ids) >= max_nodes:
+                        continue
+                    local[v] = len(node_ids)
+                    node_ids.append(v)
+                    nxt.append(v)
+                if len(edges) < max_edges:
+                    edges.append((local[v], local[int(u)]))   # v → u
+        frontier = nxt
+
+    out_nodes = np.full(max_nodes, -1, np.int32)
+    out_nodes[:len(node_ids)] = np.asarray(node_ids, np.int32)
+    snd = np.full(max_edges, -1, np.int32)
+    rcv = np.full(max_edges, -1, np.int32)
+    if edges:
+        e = np.asarray(edges, np.int32)
+        snd[:len(e)] = e[:, 0]
+        rcv[:len(e)] = e[:, 1]
+    return {"node_ids": out_nodes, "senders": snd, "receivers": rcv,
+            "n_nodes": len(node_ids), "n_edges": len(edges)}

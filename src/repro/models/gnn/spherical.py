@@ -1,0 +1,78 @@
+"""Real spherical harmonics (l ≤ 2) and exact Gaunt coupling tensors.
+
+The closed-form real SH basis (9 components for l_max=2) feeds MACE's
+density expansion; the Gaunt tensor G[a,b,c] = ∫ Y_a Y_b Y_c dΩ is the
+real-basis product rule used to build higher-correlation equivariant
+features. It is computed *exactly* at module-init time with a
+Gauss-Legendre × trapezoid quadrature (integrands are polynomials of
+degree ≤ 6 on the sphere, well inside the rule's exactness).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+# lm index layout: [ (0,0), (1,-1), (1,0), (1,1), (2,-2), (2,-1), (2,0), (2,1), (2,2) ]
+N_LM = 9
+L_OF = np.array([0, 1, 1, 1, 2, 2, 2, 2, 2])
+
+
+def real_sh_l2_np(xyz: np.ndarray) -> np.ndarray:
+    """xyz: (..., 3) unit vectors → (..., 9) real SH values."""
+    x, y, z = xyz[..., 0], xyz[..., 1], xyz[..., 2]
+    c0 = 0.5 * np.sqrt(1.0 / np.pi)
+    c1 = np.sqrt(3.0 / (4 * np.pi))
+    return np.stack([
+        np.full_like(x, c0),
+        c1 * y, c1 * z, c1 * x,
+        0.5 * np.sqrt(15 / np.pi) * x * y,
+        0.5 * np.sqrt(15 / np.pi) * y * z,
+        0.25 * np.sqrt(5 / np.pi) * (3 * z * z - 1),
+        0.5 * np.sqrt(15 / np.pi) * x * z,
+        0.25 * np.sqrt(15 / np.pi) * (x * x - y * y),
+    ], axis=-1)
+
+
+def real_sh_l2(xyz):
+    """jnp twin of :func:`real_sh_l2_np`."""
+    x, y, z = xyz[..., 0], xyz[..., 1], xyz[..., 2]
+    c0 = 0.5 * np.sqrt(1.0 / np.pi)
+    c1 = np.sqrt(3.0 / (4 * np.pi))
+    return jnp.stack([
+        jnp.full_like(x, c0),
+        c1 * y, c1 * z, c1 * x,
+        0.5 * np.sqrt(15 / np.pi) * x * y,
+        0.5 * np.sqrt(15 / np.pi) * y * z,
+        0.25 * np.sqrt(5 / np.pi) * (3 * z * z - 1),
+        0.5 * np.sqrt(15 / np.pi) * x * z,
+        0.25 * np.sqrt(15 / np.pi) * (x * x - y * y),
+    ], axis=-1)
+
+
+@functools.lru_cache(maxsize=1)
+def gaunt_tensor() -> np.ndarray:
+    """G[a, b, c] = ∫_{S²} Y_a Y_b Y_c dΩ, exact for l ≤ 2."""
+    n_theta, n_phi = 16, 32
+    nodes, wts = np.polynomial.legendre.leggauss(n_theta)  # cosθ ∈ [-1,1]
+    phi = (np.arange(n_phi) + 0.5) * (2 * np.pi / n_phi)
+    w_phi = 2 * np.pi / n_phi
+
+    ct = nodes[:, None]
+    st = np.sqrt(1 - ct ** 2)
+    x = st * np.cos(phi)[None, :]
+    y = st * np.sin(phi)[None, :]
+    z = np.broadcast_to(ct, x.shape)
+    Y = real_sh_l2_np(np.stack([x, y, z], axis=-1))       # (T, P, 9)
+    w = (wts[:, None] * w_phi)                             # (T, P)
+    G = np.einsum("tp,tpa,tpb,tpc->abc", w, Y, Y, Y)
+    G[np.abs(G) < 1e-12] = 0.0
+    return G
+
+
+def couple(a, b, gaunt):
+    """Equivariant product: (..., 9) × (..., 9) → (..., 9) via Gaunt.
+    c_k = Σ_ij G[i, j, k] a_i b_j — the real-SH function product rule."""
+    return jnp.einsum("...i,...j,ijk->...k", a, b, gaunt)

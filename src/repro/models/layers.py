@@ -1,0 +1,760 @@
+"""Core neural layers, functional style.
+
+Conventions
+-----------
+* ``init_*`` functions return nested dicts of arrays; ``*_apply``
+  functions are pure.
+* All matmul params are stored as ``(in, out)`` so that stacking layers
+  along a leading axis keeps einsum strings readable.
+* Shapes: B batch, L sequence, D d_model, H q heads, K kv heads,
+  h head_dim, F d_ff, E experts, V vocab.
+* Compute dtype is taken from the input; params may be fp32/bf16.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.utils import cdiv
+
+
+# ---------------------------------------------------------------------------
+# Initialisers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, scale: float | None = None):
+    scale = (1.0 / d_in) ** 0.5 if scale is None else scale
+    return jax.random.normal(key, (d_in, d_out), dtype=jnp.float32).astype(dtype) * scale
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return jax.random.normal(key, (vocab, d), dtype=jnp.float32).astype(dtype) * 0.02
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm_apply(params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype=dtype), "bias": jnp.zeros((d,), dtype=dtype)}
+
+
+def layernorm_apply(params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., L, n_heads, head_dim); positions: (..., L)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)  # (h/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., L, h/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., L, 1, h/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash-style) attention in pure XLA
+# ---------------------------------------------------------------------------
+# Avoids materialising the (L, L) score matrix: scans over KV chunks
+# carrying a running (max, denominator, accumulator). This is the
+# XLA-portable twin of a Pallas flash kernel; on real TPUs the Pallas
+# kernel in repro/kernels/flash_attention is swapped in via config.
+
+def _attn_chunk_update(carry, kc, vc, q, mask_chunk, scale,
+                       score_spec=None):
+    m_prev, l_prev, acc_prev = carry
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kc, preferred_element_type=jnp.float32)
+    if score_spec is not None:
+        s = jax.lax.with_sharding_constraint(s, score_spec)
+    s = s * scale
+    s = jnp.where(mask_chunk, s, -1e30)
+    m_cur = jnp.max(s, axis=-1)  # (B, H, Lq)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new[..., None])  # (B, H, Lq, Ck)
+    l_corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * l_corr + jnp.sum(p, axis=-1)
+    pv = jnp.einsum("bhqk,bkhd->bqhd", p.astype(vc.dtype), vc,
+                    preferred_element_type=jnp.float32)
+    acc_new = acc_prev * l_corr.transpose(0, 2, 1)[..., None] + pv
+    return (m_new, l_new, acc_new)
+
+
+def blockwise_attention(q, k, v, *, causal: bool, q_positions, kv_positions,
+                        chunk: int = 1024, scale: Optional[float] = None,
+                        window: int = 0, score_spec=None,
+                        remat_chunks: bool = False):
+    """Memory-efficient attention.
+
+    q: (B, Lq, H, h); k, v: (B, Lkv, K, h) with H % K == 0 (GQA).
+    Returns (B, Lq, H, h) in q.dtype.
+
+    ``score_spec`` pins the per-chunk score panel's sharding (batch ×
+    heads) so GSPMD never batch-replicates it; ``remat_chunks``
+    checkpoints each chunk update so the backward pass recomputes score
+    panels per chunk instead of saving the whole stack (flash-style
+    bwd).
+    """
+    B, Lq, H, h = q.shape
+    _, Lkv, K, _ = k.shape
+    hv = v.shape[-1]
+    assert H % K == 0
+    groups = H // K
+    if groups > 1:
+        k = jnp.repeat(k, groups, axis=2)
+        v = jnp.repeat(v, groups, axis=2)
+    scale = (1.0 / h ** 0.5) if scale is None else scale
+
+    n_chunks = cdiv(Lkv, chunk)
+    pad = n_chunks * chunk - Lkv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pad)), constant_values=-1)
+
+    k = k.reshape(B, n_chunks, chunk, H, h).transpose(1, 0, 2, 3, 4)
+    v = v.reshape(B, n_chunks, chunk, H, hv).transpose(1, 0, 2, 3, 4)
+    kpos = kv_positions.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+
+    m0 = jnp.full((B, H, Lq), -jnp.inf, dtype=jnp.float32)
+    l0 = jnp.zeros((B, H, Lq), dtype=jnp.float32)
+    a0 = jnp.zeros((B, Lq, H, hv), dtype=jnp.float32)
+
+    def body(carry, xs):
+        kc, vc, kp = xs
+        valid = kp[:, None, None, :] >= 0  # (B,1,1,Ck)
+        if causal:
+            mask = (kp[:, None, None, :] <= q_positions[:, None, :, None]) & valid
+        else:
+            mask = jnp.broadcast_to(valid, (B, 1, Lq, chunk))
+        if window > 0:  # chunked-local (iRoPE-style) attention
+            mask = mask & (kp[:, None, None, :]
+                           > q_positions[:, None, :, None] - window)
+        return _attn_chunk_update(carry, kc, vc, q, mask, scale,
+                                  score_spec), None
+
+    if remat_chunks:
+        body = jax.checkpoint(body)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (k, v, kpos))
+    l = jnp.maximum(l, 1e-30)
+    out = acc / l.transpose(0, 2, 1)[..., None]
+    return out.astype(q.dtype)
+
+
+def dense_attention(q, k, v, *, causal: bool, q_positions, kv_positions,
+                    scale: Optional[float] = None, window: int = 0,
+                    score_spec=None):
+    """Reference full-materialisation attention (small L only).
+
+    ``score_spec``: optional PartitionSpec pinned onto the score tensor
+    (B, H, Lq, Lkv). Sharding the Lkv axis keeps the QK and PV einsums
+    local to each KV shard — softmax statistics and the PV contraction
+    then combine through tiny all-reduces instead of the KV cache being
+    all-gathered (split-S / flash-decoding, expressed in GSPMD).
+    """
+    B, Lq, H, h = q.shape
+    _, Lkv, K, _ = k.shape
+    groups = H // K
+    if groups > 1:
+        k = jnp.repeat(k, groups, axis=2)
+        v = jnp.repeat(v, groups, axis=2)
+    scale = (1.0 / h ** 0.5) if scale is None else scale
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32) * scale
+    if score_spec is not None:
+        s = jax.lax.with_sharding_constraint(s, score_spec)
+    valid = (kv_positions >= 0)[:, None, None, :]
+    if causal:
+        mask = (kv_positions[:, None, None, :] <= q_positions[:, None, :, None]) & valid
+    else:
+        mask = jnp.broadcast_to(valid, s.shape)
+    if window > 0:
+        mask = mask & (kv_positions[:, None, None, :]
+                       > q_positions[:, None, :, None] - window)
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnCfg:
+    d_model: int
+    n_heads: int
+    kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    use_rope: bool = True
+    window: int = 0        # >0: chunked-local attention (Llama-4 iRoPE)
+
+
+def gqa_init(key, cfg: AttnCfg, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    D, H, K, h = cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.head_dim
+    p = {
+        "wq": dense_init(ks[0], D, H * h, dtype),
+        "wk": dense_init(ks[1], D, K * h, dtype),
+        "wv": dense_init(ks[2], D, K * h, dtype),
+        "wo": dense_init(ks[3], H * h, D, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * h,), dtype)
+        p["bk"] = jnp.zeros((K * h,), dtype)
+        p["bv"] = jnp.zeros((K * h,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(h, dtype)
+        p["k_norm"] = rmsnorm_init(h, dtype)
+    return p
+
+
+def gqa_project_qkv(params, cfg: AttnCfg, x, positions):
+    B, L, D = x.shape
+    H, K, h = cfg.n_heads, cfg.kv_heads, cfg.head_dim
+    q = jnp.einsum("bld,dk->blk", x, params["wq"])
+    k = jnp.einsum("bld,dk->blk", x, params["wk"])
+    v = jnp.einsum("bld,dk->blk", x, params["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(B, L, H, h)
+    k = k.reshape(B, L, K, h)
+    v = v.reshape(B, L, K, h)
+    if cfg.qk_norm:
+        q = rmsnorm_apply(params["q_norm"], q)
+        k = rmsnorm_apply(params["k_norm"], k)
+    if cfg.use_rope:
+        q = apply_rope(q, jnp.maximum(positions, 0), cfg.rope_theta)
+        k = apply_rope(k, jnp.maximum(positions, 0), cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_apply(params, cfg: AttnCfg, x, positions, *, causal=True, chunk=1024,
+              use_blockwise=True, score_spec=None, remat_chunks=False):
+    q, k, v = gqa_project_qkv(params, cfg, x, positions)
+    attn = blockwise_attention if use_blockwise else dense_attention
+    kwargs = ({"chunk": chunk, "remat_chunks": remat_chunks}
+              if use_blockwise else {})
+    o = attn(q, k, v, causal=causal, q_positions=positions,
+             kv_positions=positions, window=cfg.window,
+             score_spec=score_spec, **kwargs)
+    B, L = x.shape[:2]
+    return jnp.einsum("blk,kd->bld", o.reshape(B, L, -1), params["wo"])
+
+
+def gqa_decode_apply(params, cfg: AttnCfg, x, positions, kv_cache,
+                     cache_positions, *, opt: bool = False,
+                     score_spec=None):
+    """Single-token decode. x: (B, 1, D); kv_cache: dict(k,v): (B, S, K, h).
+
+    cache_positions: (B, S) int32; -1 marks unwritten slots. New K/V are
+    scattered at ``positions`` (B, 1). Returns (out, new_cache).
+
+    ``opt`` enables the long-context access-minimisation path:
+      * chunked-local layers (cfg.window > 0) slice only the last
+        ``window`` cache positions instead of touching the full cache
+        (the serving analogue of the paper's "read only what you score");
+      * global layers pin the score tensor's KV axis with ``score_spec``
+        so a sequence-sharded cache is reduced in place (split-S) rather
+        than all-gathered.
+    """
+    B, L, D = x.shape
+    q, k_new, v_new = gqa_project_qkv(params, cfg, x, positions)
+    slot = positions[:, 0]  # (B,) — cache is laid out by absolute position
+    bidx = jnp.arange(B)
+    k = kv_cache["k"].at[bidx, slot].set(k_new[:, 0])
+    v = kv_cache["v"].at[bidx, slot].set(v_new[:, 0])
+    new_positions = cache_positions.at[bidx, slot].set(slot)
+
+    if opt and score_spec is not None:
+        # split-S: scores stay on the cache's sequence sharding; softmax
+        # statistics and the PV contraction combine via tiny all-reduces
+        # (flash-decoding in GSPMD). The window mask (chunked-local
+        # iRoPE layers) rides along for free.
+        o = dense_attention(q, k, v, causal=True, q_positions=positions,
+                            kv_positions=new_positions, window=cfg.window,
+                            score_spec=score_spec)
+    elif opt and cfg.window > 0 and cfg.window < k.shape[1]:
+        # window-slice path (useful when the cache is batch-sharded and
+        # slicing is local): touch only the last `window` positions
+        W = cfg.window
+        start = jnp.maximum(slot - (W - 1), 0)                    # (B,)
+
+        def win(arr, s):
+            return jax.lax.dynamic_slice_in_dim(arr, s, W, axis=0)
+
+        k_w = jax.vmap(win)(k, start)                             # (B,W,K,h)
+        v_w = jax.vmap(win)(v, start)
+        pos_w = jax.vmap(win)(new_positions, start)               # (B,W)
+        o = dense_attention(q, k_w, v_w, causal=True,
+                            q_positions=positions, kv_positions=pos_w,
+                            window=cfg.window)
+    else:
+        o = dense_attention(q, k, v, causal=True, q_positions=positions,
+                            kv_positions=new_positions, window=cfg.window)
+    out = jnp.einsum("blk,kd->bld", o.reshape(B, L, -1), params["wo"])
+    return out, {"k": k, "v": v}, new_positions
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, DeepSeek-V2/V3)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MLACfg:
+    d_model: int
+    n_heads: int
+    q_lora_rank: int
+    kv_lora_rank: int
+    qk_nope_head_dim: int
+    qk_rope_head_dim: int
+    v_head_dim: int
+    rope_theta: float = 10000.0
+
+
+def mla_init(key, cfg: MLACfg, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    D, H = cfg.d_model, cfg.n_heads
+    qh = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    return {
+        "wq_a": dense_init(ks[0], D, cfg.q_lora_rank, dtype),
+        "q_a_norm": rmsnorm_init(cfg.q_lora_rank, dtype),
+        "wq_b": dense_init(ks[1], cfg.q_lora_rank, H * qh, dtype),
+        "wkv_a": dense_init(ks[2], D, cfg.kv_lora_rank + cfg.qk_rope_head_dim, dtype),
+        "kv_a_norm": rmsnorm_init(cfg.kv_lora_rank, dtype),
+        "wkv_b": dense_init(ks[3], cfg.kv_lora_rank,
+                            H * (cfg.qk_nope_head_dim + cfg.v_head_dim), dtype),
+        "wo": dense_init(ks[4], H * cfg.v_head_dim, D, dtype),
+    }
+
+
+def mla_apply(params, cfg: MLACfg, x, positions, *, causal=True, chunk=1024,
+              use_blockwise=True, score_spec=None, remat_chunks=False):
+    """Training/prefill MLA: materialise per-head K/V from the latent."""
+    B, L, D = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+
+    q = jnp.einsum("bld,dr->blr", x, params["wq_a"])
+    q = rmsnorm_apply(params["q_a_norm"], q)
+    q = jnp.einsum("blr,rk->blk", q, params["wq_b"]).reshape(B, L, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = jnp.einsum("bld,dr->blr", x, params["wkv_a"])
+    c_kv, k_rope = kv[..., :cfg.kv_lora_rank], kv[..., cfg.kv_lora_rank:]
+    c_kv = rmsnorm_apply(params["kv_a_norm"], c_kv)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # (B,L,1,dr)
+
+    kvb = jnp.einsum("blr,rk->blk", c_kv, params["wkv_b"]).reshape(B, L, H, dn + dv)
+    k_nope, v = kvb[..., :dn], kvb[..., dn:]
+    k_rope_b = jnp.broadcast_to(k_rope, (B, L, H, dr))
+
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    scale = 1.0 / (dn + dr) ** 0.5
+    attn = blockwise_attention if use_blockwise else dense_attention
+    kwargs = ({"chunk": chunk, "remat_chunks": remat_chunks}
+              if use_blockwise else {})
+    o = attn(q_full, k_full, v, causal=causal, q_positions=positions,
+             kv_positions=positions, scale=scale, score_spec=score_spec,
+             **kwargs)
+    return jnp.einsum("blk,kd->bld", o.reshape(B, L, H * dv), params["wo"])
+
+
+def mla_decode_apply(params, cfg: MLACfg, x, positions, cache, cache_positions):
+    """Absorbed-matrix MLA decode: attends directly over the compressed
+    latent cache (c_kv, k_rope) — the memory win that makes MLA serve-
+    friendly. cache: {"c_kv": (B,S,r), "k_rope": (B,S,dr)}.
+    """
+    B, L, D = x.shape
+    H = cfg.n_heads
+    dn, dr, dv, r = (cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
+                     cfg.v_head_dim, cfg.kv_lora_rank)
+
+    q = jnp.einsum("bld,dr->blr", x, params["wq_a"])
+    q = rmsnorm_apply(params["q_a_norm"], q)
+    q = jnp.einsum("blr,rk->blk", q, params["wq_b"]).reshape(B, L, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = jnp.einsum("bld,dr->blr", x, params["wkv_a"])
+    c_kv_new = rmsnorm_apply(params["kv_a_norm"], kv[..., :r])
+    k_rope_new = apply_rope(kv[:, :, None, cfg.kv_lora_rank:], positions,
+                            cfg.rope_theta)[:, :, 0, :]
+
+    bidx = jnp.arange(B)
+    slot = positions[:, 0]
+    c_kv = cache["c_kv"].at[bidx, slot].set(c_kv_new[:, 0])
+    k_rope = cache["k_rope"].at[bidx, slot].set(k_rope_new[:, 0])
+    new_positions = cache_positions.at[bidx, slot].set(slot)
+
+    # Absorb W^{UK}: q_nope (B,L,H,dn) @ wkv_b_k (r, H, dn) -> (B,L,H,r)
+    wkv_b = params["wkv_b"].reshape(r, H, dn + dv)
+    w_uk, w_uv = wkv_b[..., :dn], wkv_b[..., dn:]
+    q_lat = jnp.einsum("blhd,rhd->blhr", q_nope, w_uk)
+
+    s = jnp.einsum("blhr,bsr->bhls", q_lat, c_kv, preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("blhd,bsd->bhls", q_rope, k_rope,
+                       preferred_element_type=jnp.float32)
+    s = s * (1.0 / (dn + dr) ** 0.5)
+    mask = (new_positions[:, None, None, :] <= positions[:, None, :, None]) & \
+           (new_positions >= 0)[:, None, None, :]
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(x.dtype)
+    o_lat = jnp.einsum("bhls,bsr->blhr", p, c_kv)  # (B,L,H,r)
+    o = jnp.einsum("blhr,rhd->blhd", o_lat, w_uv)  # (B,L,H,dv)
+    out = jnp.einsum("blk,kd->bld", o.reshape(B, L, H * dv), params["wo"])
+    return out, {"c_kv": c_kv, "k_rope": k_rope}, new_positions
+
+
+# ---------------------------------------------------------------------------
+# FFN: dense SwiGLU and Mixture-of-Experts
+# ---------------------------------------------------------------------------
+
+def ffn_init(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], d_model, d_ff, dtype),
+        "w_up": dense_init(ks[1], d_model, d_ff, dtype),
+        "w_down": dense_init(ks[2], d_ff, d_model, dtype),
+    }
+
+
+def ffn_apply(params, x):
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, params["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+
+
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    d_model: int
+    d_ff_expert: int
+    n_experts: int
+    top_k: int
+    n_shared: int = 0
+    d_ff_shared: int = 0
+    capacity_factor: float = 1.25
+    router_noise: float = 0.0
+    # sigmoid routing + bias (DeepSeek-V3 aux-loss-free) vs softmax (llama4 top-1)
+    sigmoid_router: bool = False
+
+
+def moe_init(key, cfg: MoECfg, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.d_ff_expert
+    p = {
+        "router": dense_init(ks[0], D, E, jnp.float32),  # router kept fp32
+        "experts_w_gate": jax.random.normal(ks[1], (E, D, F), jnp.float32).astype(dtype) * (1.0 / D) ** 0.5,
+        "experts_w_up": jax.random.normal(ks[2], (E, D, F), jnp.float32).astype(dtype) * (1.0 / D) ** 0.5,
+        "experts_w_down": jax.random.normal(ks[3], (E, F, D), jnp.float32).astype(dtype) * (1.0 / F) ** 0.5,
+    }
+    if cfg.sigmoid_router:
+        p["router_bias"] = jnp.zeros((E,), jnp.float32)  # load-balance bias (aux-free)
+    if cfg.n_shared:
+        p["shared"] = ffn_init(ks[4], D, cfg.d_ff_shared or cfg.d_ff_expert, dtype)
+    return p
+
+
+def moe_route(params, cfg: MoECfg, x_flat):
+    """Router: returns (weights (T, k), expert_ids (T, k), aux_metrics)."""
+    logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32), params["router"])
+    if cfg.sigmoid_router:
+        scores = jax.nn.sigmoid(logits)
+        sel = scores + params["router_bias"][None, :]
+        _, ids = jax.lax.top_k(sel, cfg.top_k)
+        w = jnp.take_along_axis(scores, ids, axis=-1)
+        w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        w, ids = jax.lax.top_k(probs, cfg.top_k)
+        if cfg.top_k > 1:
+            w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    # load-balance aux (Switch-style): mean prob per expert × frac routed
+    probs_for_aux = jax.nn.softmax(logits, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(ids[:, 0], cfg.n_experts, dtype=jnp.float32), axis=0)
+    aux = cfg.n_experts * jnp.sum(frac * jnp.mean(probs_for_aux, axis=0))
+    return w.astype(x_flat.dtype), ids, {"aux_loss": aux}
+
+
+def moe_select_apply(params, cfg: MoECfg, x, *, ep_axis=None, dp_axis=None):
+    """Selected-expert MoE for tiny token counts (low-batch decode).
+
+    The buffer formulation streams EVERY local expert's weights through
+    the core even when one token routes to one expert — at batch 1 that
+    is the whole memory roofline. Here the routed experts' weights are
+    gathered instead (T·k weight tiles), so HBM traffic scales with the
+    *active* experts, the same access-minimisation idea the paper
+    applies to the ColBERT index.
+    """
+    orig_shape = x.shape
+    x_flat = x.reshape(-1, cfg.d_model)
+    T, k = x_flat.shape[0], cfg.top_k
+    w, ids, aux = moe_route(params, cfg, x_flat)
+    flat_ids = ids.reshape(-1)                                 # (T·k,)
+    wg = jnp.take(params["experts_w_gate"], flat_ids, axis=0)  # (Tk,D,F)
+    wu = jnp.take(params["experts_w_up"], flat_ids, axis=0)
+    wd = jnp.take(params["experts_w_down"], flat_ids, axis=0)
+    if ep_axis is not None:
+        from jax.sharding import PartitionSpec as P
+        spec_in = P(None, dp_axis, ep_axis)
+        wg = jax.lax.with_sharding_constraint(wg, spec_in)
+        wu = jax.lax.with_sharding_constraint(wu, spec_in)
+        wd = jax.lax.with_sharding_constraint(wd, P(None, ep_axis, dp_axis))
+    x2 = jnp.repeat(x_flat, k, axis=0)                         # (Tk, D)
+    g = jnp.einsum("td,tdf->tf", x2, wg)
+    u = jnp.einsum("td,tdf->tf", x2, wu)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x2.dtype) * u
+    y2 = jnp.einsum("tf,tfd->td", h, wd)                       # (Tk, D)
+    y = (y2.reshape(T, k, cfg.d_model)
+         * w[..., None].astype(y2.dtype)).sum(axis=1)
+    if cfg.n_shared:
+        y = y + ffn_apply(params["shared"], x_flat)
+    return y.reshape(orig_shape), aux
+
+
+def _moe_expert_ffn(params, buffer):
+    """Batched expert SwiGLU over a (..., E, C, D) buffer."""
+    g = jnp.einsum("...ecd,edf->...ecf", buffer, params["experts_w_gate"])
+    u = jnp.einsum("...ecd,edf->...ecf", buffer, params["experts_w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(buffer.dtype) * u
+    return jnp.einsum("...ecf,efd->...ecd", h, params["experts_w_down"])
+
+
+def moe_apply_local_dispatch(params, cfg: MoECfg, x, *, dp_slices: int,
+                             ep_axis: Optional[str] = None,
+                             dp_axis: Optional[str] = None):
+    """Data-local MoE dispatch (the hillclimbed path).
+
+    The global-index dispatch below makes GSPMD all-reduce full
+    (T, d_model) fp32 tensors (measured: 40 GB/device per MoE layer on
+    llama4 train). Here tokens are reshaped to (dp_slices, T_local, D)
+    and each data shard sorts/scatters ONLY its slice (vmap over the
+    sharded leading axis keeps every scatter local); expert weights are
+    constrained gathered-on-EP before the matmul so the only wire cost
+    is the per-layer FSDP weight all-gather — the floor for this
+    parameter sharding.
+    """
+    from jax.sharding import PartitionSpec as P
+    orig_shape = x.shape
+    x_flat = x.reshape(-1, cfg.d_model)
+    T = x_flat.shape[0]
+    E, k = cfg.n_experts, cfg.top_k
+    T_loc = T // dp_slices
+    C = max(8, int(cdiv(T_loc * k, E) * cfg.capacity_factor))
+
+    w_all, ids_all, aux = moe_route(params, cfg, x_flat)
+    x3 = x_flat.reshape(dp_slices, T_loc, cfg.d_model)
+    w3 = w_all.reshape(dp_slices, T_loc, k)
+    ids3 = ids_all.reshape(dp_slices, T_loc, k)
+    if dp_axis is not None:
+        x3 = jax.lax.with_sharding_constraint(x3, P(dp_axis, None, None))
+
+    def dispatch_combine(xs, ws, ids):
+        flat_e = ids.reshape(-1)
+        tok_idx = jnp.repeat(jnp.arange(T_loc), k)
+        order = jnp.argsort(flat_e, stable=True)
+        e_sorted = flat_e[order]
+        run_start = jnp.searchsorted(e_sorted, jnp.arange(E), side="left")
+        pos_in_e = jnp.arange(T_loc * k) - run_start[e_sorted]
+        keep = pos_in_e < C
+        buf_rows = jnp.where(keep, e_sorted, E)
+        buf_cols = jnp.where(keep, pos_in_e, 0)
+        src_tok = tok_idx[order]
+        buffer = jnp.zeros((E + 1, C, cfg.d_model), xs.dtype)
+        buffer = buffer.at[buf_rows, buf_cols].set(xs[src_tok],
+                                                   mode="drop")
+        return buffer[:E], (order, keep, e_sorted, buf_cols, src_tok)
+
+    buffers, meta = jax.vmap(dispatch_combine)(x3, w3, ids3)
+    if ep_axis is not None:
+        buffers = jax.lax.with_sharding_constraint(
+            buffers, P(dp_axis, ep_axis, None, None))
+        # gather expert weights over the FSDP axis once per layer
+        # (cheaper than reducing (dp, E, C, F) outputs)
+        params = dict(params)
+        for nm in ("experts_w_gate", "experts_w_up", "experts_w_down"):
+            params[nm] = jax.lax.with_sharding_constraint(
+                params[nm], P(ep_axis, None, None))
+    y_buf = _moe_expert_ffn(params, buffers)        # (dp, E, C, D)
+    if ep_axis is not None:
+        y_buf = jax.lax.with_sharding_constraint(
+            y_buf, P(dp_axis, ep_axis, None, None))
+
+    def combine(yb, xs, ws, m):
+        order, keep, e_sorted, buf_cols, src_tok = m
+        y_choice = yb[jnp.where(keep, e_sorted, 0), buf_cols]
+        y_choice = jnp.where(keep[:, None], y_choice, 0.0)
+        w_sorted = ws.reshape(-1)[order]
+        contrib = y_choice * w_sorted[:, None].astype(y_choice.dtype)
+        y = jnp.zeros((T_loc, cfg.d_model), xs.dtype)
+        return y.at[src_tok].add(contrib)
+
+    y3 = jax.vmap(combine)(y_buf, x3, w3, meta)
+    if dp_axis is not None:
+        y3 = jax.lax.with_sharding_constraint(y3, P(dp_axis, None, None))
+    y = y3.reshape(T, cfg.d_model)
+    if cfg.n_shared:
+        y = y + ffn_apply(params["shared"], x_flat)
+    return y.reshape(orig_shape), aux
+
+
+def moe_apply(params, cfg: MoECfg, x, *, ep_axis: Optional[str] = None,
+              dp_axis: Optional[str] = None, select_threshold: int = 16,
+              dp_slices: int = 0):
+    """Capacity-based sort-free MoE dispatch.
+
+    Logical formulation (GSPMD shards it): tokens are scattered into an
+    (E, C, D) expert buffer via sorted positions, batched expert matmuls
+    run on the buffer, results gather back. Sharding constraints place
+    the buffer on the EP axis so that the scatter/gather lower to
+    all-to-all style collectives.
+
+    Token counts at or below ``select_threshold`` switch to the
+    selected-expert path (weights gathered per routed expert) — the
+    low-batch decode regime where streaming all experts is the
+    bottleneck. ``dp_slices > 0`` switches to the data-local dispatch
+    (see :func:`moe_apply_local_dispatch`).
+    """
+    orig_shape = x.shape
+    x_flat = x.reshape(-1, cfg.d_model)
+    T = x_flat.shape[0]
+    E, k = cfg.n_experts, cfg.top_k
+    if select_threshold and T * k <= select_threshold:
+        return moe_select_apply(params, cfg, x, ep_axis=ep_axis,
+                                dp_axis=dp_axis)
+    if dp_slices and T % dp_slices == 0 and T // dp_slices >= 1:
+        return moe_apply_local_dispatch(params, cfg, x,
+                                        dp_slices=dp_slices,
+                                        ep_axis=ep_axis, dp_axis=dp_axis)
+    C = max(8, int(cdiv(T * k, E) * cfg.capacity_factor))
+
+    w, ids, aux = moe_route(params, cfg, x_flat)
+
+    # Flatten (token, choice) pairs and compute per-expert positions via sort.
+    flat_e = ids.reshape(-1)                              # (T*k,)
+    tok_idx = jnp.repeat(jnp.arange(T), k)                # (T*k,)
+    choice_w = w.reshape(-1)                              # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    e_sorted = flat_e[order]
+    # position within expert run: arange - index-of-run-start
+    run_start = jnp.searchsorted(e_sorted, jnp.arange(E), side="left")  # (E,)
+    pos_in_e = jnp.arange(T * k) - run_start[e_sorted]
+    keep = pos_in_e < C
+    # scatter tokens into the expert buffer; dropped tokens go to a trash row
+    buf_rows = jnp.where(keep, e_sorted, E)               # (T*k,)
+    buf_cols = jnp.where(keep, pos_in_e, 0)
+    src_tok = tok_idx[order]
+    buffer = jnp.zeros((E + 1, C, cfg.d_model), dtype=x_flat.dtype)
+    buffer = buffer.at[buf_rows, buf_cols].set(x_flat[src_tok], mode="drop")
+    buffer = buffer[:E]
+    if ep_axis is not None:
+        from jax.sharding import PartitionSpec as P
+        # Requires an ambient mesh (jax.sharding.use_mesh / `with mesh:`).
+        # EP on the expert axis; the capacity axis optionally shards over
+        # the data axis so the (E, C, D) buffer never concentrates.
+        buffer = jax.lax.with_sharding_constraint(
+            buffer, P(ep_axis, dp_axis, None))
+
+    # Batched expert FFN on the buffer.
+    g = jnp.einsum("ecd,edf->ecf", buffer, params["experts_w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buffer, params["experts_w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(buffer.dtype) * u
+    y_buf = jnp.einsum("ecf,efd->ecd", h, params["experts_w_down"])
+
+    # Gather back: each kept (token, choice) reads its expert-buffer row.
+    y_choice = y_buf[jnp.where(keep, e_sorted, 0), buf_cols]   # (T*k, D)
+    y_choice = jnp.where(keep[:, None], y_choice, 0.0)
+    w_sorted = choice_w[order]
+    contrib = y_choice * w_sorted[:, None].astype(y_choice.dtype)
+    y = jnp.zeros((T, cfg.d_model), dtype=x_flat.dtype)
+    y = y.at[src_tok].add(contrib)
+
+    if cfg.n_shared:
+        y = y + ffn_apply(params["shared"], x_flat)
+    return y.reshape(orig_shape), aux
+
+
+# ---------------------------------------------------------------------------
+# GRU / AUGRU cells (DIEN)
+# ---------------------------------------------------------------------------
+
+def gru_init(key, d_in: int, d_hidden: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 2)
+    return {
+        "w": dense_init(ks[0], d_in, 3 * d_hidden, dtype),
+        "u": dense_init(ks[1], d_hidden, 3 * d_hidden, dtype),
+        "b": jnp.zeros((3 * d_hidden,), dtype),
+    }
+
+
+def gru_cell(params, h, x, att: Optional[jnp.ndarray] = None):
+    """One GRU step. If ``att`` (B, 1) is given, runs AUGRU (DIEN):
+    the update gate is scaled by the attention score."""
+    zrg = jnp.einsum("bd,dk->bk", x, params["w"]) + \
+          jnp.einsum("bd,dk->bk", h, params["u"]) + params["b"]
+    d = h.shape[-1]
+    z = jax.nn.sigmoid(zrg[:, :d])
+    r = jax.nn.sigmoid(zrg[:, d:2 * d])
+    g_in = jnp.einsum("bd,dk->bk", x, params["w"][:, 2 * d:]) + \
+           r * jnp.einsum("bd,dk->bk", h, params["u"][:, 2 * d:]) + params["b"][2 * d:]
+    g = jnp.tanh(g_in)
+    if att is not None:
+        z = z * att
+    return (1.0 - z) * h + z * g
+
+
+def gru_scan(params, xs, h0, atts: Optional[jnp.ndarray] = None):
+    """xs: (B, L, d_in) → hidden states (B, L, d_hidden), final h."""
+    def body(h, inp):
+        if atts is None:
+            x = inp
+            h_new = gru_cell(params, h, x)
+        else:
+            x, a = inp
+            h_new = gru_cell(params, h, x, a)
+        return h_new, h_new
+    seq = jnp.swapaxes(xs, 0, 1)
+    if atts is None:
+        h_last, hs = jax.lax.scan(body, h0, seq)
+    else:
+        a_seq = jnp.swapaxes(atts, 0, 1)
+        h_last, hs = jax.lax.scan(body, h0, (seq, a_seq))
+    return jnp.swapaxes(hs, 0, 1), h_last

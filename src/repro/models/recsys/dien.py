@@ -1,0 +1,203 @@
+"""DIEN (Zhou et al., arXiv:1809.03672): Deep Interest Evolution Network.
+
+Pipeline per sample:
+  behaviour sequence (item, cate) embeddings (L, 2·d)
+    → interest extractor GRU (hidden = gru_dim)
+    → auxiliary loss (hidden_t vs behaviour_{t+1}, sampled negatives)
+    → target-conditioned attention scores over hidden states
+    → AUGRU (attention-gated update) → final interest state
+  concat [user, target, final_interest, Σ hist] → MLP 200-80 (Dice) → logit
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.utils import PRNGSeq
+from repro.models import layers as L
+from repro.models.recsys import embedding as EB
+
+
+@dataclasses.dataclass(frozen=True)
+class DIENCfg:
+    n_users: int = 1_000_000
+    n_items: int = 1_000_000
+    n_cates: int = 10_000
+    embed_dim: int = 18
+    seq_len: int = 100
+    gru_dim: int = 108
+    mlp_dims: tuple[int, ...] = (200, 80)
+    use_aux_loss: bool = True
+    aux_weight: float = 1.0
+
+    @property
+    def beh_dim(self) -> int:          # behaviour embedding = item ⊕ cate
+        return 2 * self.embed_dim
+
+
+def init(key, cfg: DIENCfg):
+    ks = PRNGSeq(key)
+    d = cfg.embed_dim
+    din = cfg.beh_dim
+    g = cfg.gru_dim
+    mlp_in = d + 2 * din + g           # user ⊕ target ⊕ Σhist ⊕ interest
+    p = {
+        "tables": {
+            "user": jax.random.normal(next(ks), (cfg.n_users, d)) * 0.01,
+            "item": jax.random.normal(next(ks), (cfg.n_items, d)) * 0.01,
+            "cate": jax.random.normal(next(ks), (cfg.n_cates, d)) * 0.01,
+        },
+        "gru1": L.gru_init(next(ks), din, g),
+        "gru2": L.gru_init(next(ks), g, g),          # AUGRU
+        "att_w": jax.random.normal(next(ks), (g + din, 1)) * 0.05,
+        "att_hidden": jax.random.normal(next(ks), (g + din, 36)) * 0.1,
+        "att_out": jax.random.normal(next(ks), (36, 1)) * 0.1,
+        "mlp": EB.mlp_init(next(ks), [mlp_in, *cfg.mlp_dims, 1]),
+        "dice0": EB.dice_init(cfg.mlp_dims[0]),
+        "dice1": EB.dice_init(cfg.mlp_dims[1]),
+    }
+    if cfg.use_aux_loss:
+        p["aux_mlp"] = EB.mlp_init(next(ks), [g + din, 64, 1])
+    return p
+
+
+def _behaviour_emb(params, cfg: DIENCfg, items, cates,
+                   shard_axis: Optional[str] = None):
+    ei = EB.lookup(params["tables"]["item"], items, shard_axis=shard_axis)
+    ec = EB.lookup(params["tables"]["cate"], cates)
+    return jnp.concatenate([ei, ec], axis=-1)
+
+
+def _attention_scores(params, hs, target):
+    """hs: (B, L, g); target: (B, din) → (B, L, 1) in (0,1)."""
+    B, Lh, g = hs.shape
+    t = jnp.broadcast_to(target[:, None, :], (B, Lh, target.shape[-1]))
+    z = jnp.concatenate([hs, t], axis=-1)
+    a = jax.nn.sigmoid(z @ params["att_hidden"])
+    return jax.nn.sigmoid(a @ params["att_out"])     # (B, L, 1)
+
+
+def forward(params, cfg: DIENCfg, batch, *,
+            shard_axis: Optional[str] = None, rng=None):
+    """batch: user (B,), target_item (B,), target_cate (B,),
+    hist_items (B, L), hist_cates (B, L), hist_len (B,) → (logits, aux)."""
+    B = batch["user"].shape[0]
+    eu = EB.lookup(params["tables"]["user"], batch["user"],
+                   shard_axis=shard_axis)
+    et = _behaviour_emb(params, cfg, batch["target_item"],
+                        batch["target_cate"], shard_axis)
+    eh = _behaviour_emb(params, cfg, batch["hist_items"],
+                        batch["hist_cates"], shard_axis)   # (B, L, din)
+    valid = (jnp.arange(cfg.seq_len)[None, :]
+             < batch["hist_len"][:, None])                  # (B, L)
+    eh = eh * valid[..., None].astype(eh.dtype)
+
+    h0 = jnp.zeros((B, cfg.gru_dim), eh.dtype)
+    hs, _ = L.gru_scan(params["gru1"], eh, h0)              # (B, L, g)
+    hs = hs * valid[..., None].astype(hs.dtype)
+
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.use_aux_loss:
+        # hidden_t should predict behaviour_{t+1}; negatives are the
+        # batch-rolled behaviours (cheap sampled negatives).
+        h_t = hs[:, :-1]                                    # (B, L-1, g)
+        e_pos = eh[:, 1:]
+        e_neg = jnp.roll(eh[:, 1:], 1, axis=0)
+        m = (valid[:, 1:]).astype(jnp.float32)
+        pos_in = jnp.concatenate([h_t, e_pos], axis=-1)
+        neg_in = jnp.concatenate([h_t, e_neg], axis=-1)
+        lp = EB.mlp_apply(params["aux_mlp"], pos_in)[..., 0]
+        ln = EB.mlp_apply(params["aux_mlp"], neg_in)[..., 0]
+        aux_raw = (jnp.maximum(lp, 0) - lp + jnp.log1p(jnp.exp(-jnp.abs(lp)))
+                   + jnp.maximum(ln, 0) + jnp.log1p(jnp.exp(-jnp.abs(ln))))
+        aux = jnp.sum(aux_raw * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+    att = _attention_scores(params, hs, et)                 # (B, L, 1)
+    att = att * valid[..., None].astype(att.dtype)
+    h0 = jnp.zeros((B, cfg.gru_dim), hs.dtype)
+    _, h_final = L.gru_scan(params["gru2"], hs, h0, atts=att[..., 0:1])
+
+    hist_sum = jnp.sum(eh, axis=1)
+    z = jnp.concatenate([eu, et, hist_sum, h_final], axis=-1)
+    n = len(cfg.mlp_dims)
+    x = z
+    for i in range(n + 1):
+        x = x @ params["mlp"][f"w{i}"] + params["mlp"][f"b{i}"]
+        if i < n:
+            x = EB.dice_apply(params[f"dice{i}"], x)
+    return x[:, 0], aux
+
+
+def loss_fn(params, cfg: DIENCfg, batch, *,
+            shard_axis: Optional[str] = None):
+    logits, aux = forward(params, cfg, batch, shard_axis=shard_axis)
+    bce = EB.bce_loss(logits, batch["label"])
+    loss = bce + cfg.aux_weight * aux
+    return loss, {"bce": bce, "aux": aux}
+
+
+def serve_score(params, cfg: DIENCfg, batch, *,
+                shard_axis: Optional[str] = None):
+    logits, _ = forward(params, cfg, batch, shard_axis=shard_axis)
+    return jax.nn.sigmoid(logits)
+
+
+def retrieval_scores(params, cfg: DIENCfg, query, cand_items, cand_cates,
+                     *, shard_axis: Optional[str] = None,
+                     chunk: int = 8192):
+    """One user vs N candidates, exact DIEN scoring.
+
+    The GRU interest extraction runs ONCE for the user; only the
+    target-conditioned attention + AUGRU + MLP rerun per candidate
+    (scanned in chunks to bound memory) — the same "compute the
+    expensive shared state once" idea as the paper's multi-stage split.
+    query: user (,), hist_items (L,), hist_cates (L,), hist_len (,).
+    """
+    eu = EB.lookup(params["tables"]["user"], query["user"][None],
+                   shard_axis=shard_axis)                    # (1, d)
+    eh = _behaviour_emb(params, cfg, query["hist_items"][None],
+                        query["hist_cates"][None], shard_axis)
+    valid = (jnp.arange(cfg.seq_len)[None, :]
+             < query["hist_len"][None, None])
+    eh = eh * valid[..., None].astype(eh.dtype)
+    h0 = jnp.zeros((1, cfg.gru_dim), eh.dtype)
+    hs, _ = L.gru_scan(params["gru1"], eh, h0)               # (1, L, g)
+    hs = hs * valid[..., None].astype(hs.dtype)
+    hist_sum = jnp.sum(eh, axis=1)                           # (1, din)
+
+    N = cand_items.shape[0]
+    n_chunks = -(-N // chunk)
+    pad = n_chunks * chunk - N
+    ci = jnp.pad(cand_items, (0, pad))
+    cc = jnp.pad(cand_cates, (0, pad))
+    ci = ci.reshape(n_chunks, chunk)
+    cc = cc.reshape(n_chunks, chunk)
+
+    def one_chunk(_, ids):
+        items, cates = ids
+        et = _behaviour_emb(params, cfg, items, cates, shard_axis)  # (C, din)
+        C = et.shape[0]
+        hsb = jnp.broadcast_to(hs, (C, cfg.seq_len, cfg.gru_dim))
+        att = _attention_scores(params, hsb, et)
+        att = att * valid[..., None].astype(att.dtype)
+        h0c = jnp.zeros((C, cfg.gru_dim), hs.dtype)
+        _, h_final = L.gru_scan(params["gru2"], hsb, h0c,
+                                atts=att[..., 0:1])
+        z = jnp.concatenate([
+            jnp.broadcast_to(eu, (C, eu.shape[-1])), et,
+            jnp.broadcast_to(hist_sum, (C, hist_sum.shape[-1])),
+            h_final], axis=-1)
+        n = len(cfg.mlp_dims)
+        x = z
+        for i in range(n + 1):
+            x = x @ params["mlp"][f"w{i}"] + params["mlp"][f"b{i}"]
+            if i < n:
+                x = EB.dice_apply(params[f"dice{i}"], x)
+        return None, x[:, 0]
+
+    _, scores = jax.lax.scan(one_chunk, None, (ci, cc))
+    return scores.reshape(-1)[:N]

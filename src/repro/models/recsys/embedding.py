@@ -1,0 +1,261 @@
+"""Embedding substrate for the recsys archs.
+
+JAX has no native ``nn.EmbeddingBag`` and no CSR sparse — lookups are
+built from ``jnp.take`` + ``jax.ops.segment_sum`` (the system-building
+requirement, not a stub). Three access paths:
+
+* ``lookup``      — single-hot field lookup (CTR models), row-sharded
+                    tables get a sharding constraint so GSPMD lowers the
+                    gather to collectives over the 'model' axis.
+* ``bag_lookup``  — multi-hot bag with sum/mean/max reduction and
+                    optional per-sample weights (the EmbeddingBag twin).
+* ``TieredEmbedding`` — the paper's memory-mapping technique applied to
+                    huge tables: cold rows live in a host-side
+                    PagedStore-backed pool, hot row-blocks are cached in
+                    device memory with LRU eviction. Used by the serving
+                    examples/benchmarks; the jitted dry-run path uses
+                    the device-resident sharded table.
+
+Field packing: CTR models concatenate per-field vocabularies into one
+(total_rows, dim) table with per-field offsets — one gather instead of
+39, and one table to shard.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.utils import cdiv
+
+
+# ---------------------------------------------------------------------------
+# Packed multi-field table
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FieldSpec:
+    """Per-field vocabulary sizes packed into one table."""
+    vocab_sizes: tuple[int, ...]
+
+    @property
+    def n_fields(self) -> int:
+        return len(self.vocab_sizes)
+
+    @property
+    def total_rows(self) -> int:
+        return int(sum(self.vocab_sizes))
+
+    def offsets(self) -> np.ndarray:
+        off = np.zeros(self.n_fields, np.int64)
+        np.cumsum(self.vocab_sizes[:-1], out=off[1:])
+        return off
+
+
+def packed_table_init(key, spec: FieldSpec, dim: int, dtype=jnp.float32,
+                      scale: float = 0.01):
+    rows = spec.total_rows
+    return jax.random.normal(key, (rows, dim), jnp.float32).astype(dtype) * scale
+
+
+def pack_field_ids(spec: FieldSpec, field_ids):
+    """field_ids: (..., n_fields) per-field local ids → global row ids."""
+    off = jnp.asarray(spec.offsets(), jnp.int32)
+    return field_ids.astype(jnp.int32) + off
+
+
+# ---------------------------------------------------------------------------
+# Lookup primitives
+# ---------------------------------------------------------------------------
+
+def lookup(table, ids, *, shard_axis: Optional[str] = None):
+    """Single-hot lookup. table: (R, d); ids: (...,) int32 → (..., d).
+
+    With ``shard_axis`` the table is constrained row-sharded so GSPMD
+    turns the gather into a collective lookup over that axis.
+    """
+    if shard_axis is not None:
+        from jax.sharding import PartitionSpec as P
+        table = jax.lax.with_sharding_constraint(table, P(shard_axis, None))
+    return jnp.take(table, ids, axis=0, mode="clip")
+
+
+def bag_lookup(table, ids, valid, *, mode: str = "sum",
+               weights: Optional[jnp.ndarray] = None,
+               shard_axis: Optional[str] = None):
+    """EmbeddingBag: ids (..., bag) int32, valid (..., bag) bool
+    → (..., d) reduced over the bag.
+
+    mode: 'sum' | 'mean' | 'max'. ``weights`` (..., bag) scales rows
+    before a sum/mean reduction (per-sample-weights semantics).
+    """
+    rows = lookup(table, ids, shard_axis=shard_axis)        # (..., bag, d)
+    v = valid[..., None].astype(rows.dtype)
+    if mode == "max":
+        neg = jnp.asarray(-1e30, rows.dtype)
+        m = jnp.max(jnp.where(v > 0, rows, neg), axis=-2)
+        return jnp.where(jnp.any(valid, axis=-1)[..., None], m, 0.0)
+    if weights is not None:
+        rows = rows * weights[..., None].astype(rows.dtype)
+    s = jnp.sum(rows * v, axis=-2)
+    if mode == "mean":
+        n = jnp.maximum(jnp.sum(valid, axis=-1, keepdims=True), 1)
+        s = s / n.astype(s.dtype)
+    return s
+
+
+def ragged_bag_lookup(table, flat_ids, segment_ids, n_segments: int,
+                      *, mode: str = "sum",
+                      weights: Optional[jnp.ndarray] = None):
+    """True ragged EmbeddingBag: flat_ids (N,), segment_ids (N,) sorted
+    → (n_segments, d). This is the segment_sum formulation."""
+    rows = jnp.take(table, flat_ids, axis=0, mode="clip")
+    if weights is not None:
+        rows = rows * weights[:, None].astype(rows.dtype)
+    if mode == "max":
+        return jax.ops.segment_max(rows, segment_ids, num_segments=n_segments)
+    s = jax.ops.segment_sum(rows, segment_ids, num_segments=n_segments)
+    if mode == "mean":
+        cnt = jax.ops.segment_sum(jnp.ones_like(segment_ids, jnp.float32),
+                                  segment_ids, num_segments=n_segments)
+        s = s / jnp.maximum(cnt[:, None], 1.0)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# TieredEmbedding — the paper's technique on recsys tables
+# ---------------------------------------------------------------------------
+
+class TieredEmbedding:
+    """Huge-table embedding with host(mmap)→device block paging.
+
+    The table's rows live in a file (optionally memory-mapped, exactly
+    like the ColBERT residual pool); fixed-size row-blocks are fetched
+    to device on demand and LRU-evicted. ``lookup_host`` assembles rows
+    through the cache and reports hit/miss counters so benchmarks can
+    show the RAM/latency trade directly (Table 1/Fig 2 analogues).
+    """
+
+    def __init__(self, path, *, mode: str = "mmap", block_rows: int = 4096,
+                 capacity_blocks: int = 64):
+        import json
+        import pathlib
+        self.path = pathlib.Path(path)
+        meta = json.loads((self.path / "meta.json").read_text())
+        self.rows, self.dim = meta["rows"], meta["dim"]
+        shape = (self.rows, self.dim)
+        if mode == "mmap":
+            self.pool = np.memmap(self.path / "table.bin", np.float32, "r",
+                                  shape=shape)
+        else:
+            self.pool = np.fromfile(self.path / "table.bin",
+                                    np.float32).reshape(shape)
+        self.mode = mode
+        self.block_rows = block_rows
+        self.capacity = capacity_blocks
+        from collections import OrderedDict
+        self._cache: "OrderedDict[int, jax.Array]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.rows_read = 0
+
+    @staticmethod
+    def write(path, table: np.ndarray):
+        import json
+        import pathlib
+        path = pathlib.Path(path)
+        path.mkdir(parents=True, exist_ok=True)
+        table.astype(np.float32).tofile(path / "table.bin")
+        (path / "meta.json").write_text(json.dumps(
+            {"rows": int(table.shape[0]), "dim": int(table.shape[1])}))
+        return path
+
+    def _block(self, b: int):
+        if b in self._cache:
+            self._cache.move_to_end(b)
+            self.hits += 1
+            return self._cache[b]
+        self.misses += 1
+        lo = b * self.block_rows
+        hi = min(lo + self.block_rows, self.rows)
+        blk = np.zeros((self.block_rows, self.dim), np.float32)
+        blk[: hi - lo] = self.pool[lo:hi]
+        arr = jax.device_put(blk)
+        self._cache[b] = arr
+        while len(self._cache) > self.capacity:
+            self._cache.popitem(last=False)
+        return arr
+
+    def lookup_host(self, ids: np.ndarray) -> np.ndarray:
+        """ids: (...,) int → rows (..., dim) float32 through the cache."""
+        ids = np.asarray(ids)
+        flat = ids.reshape(-1)
+        self.rows_read += flat.size
+        out = np.zeros((flat.size, self.dim), np.float32)
+        blocks = flat // self.block_rows
+        for b in np.unique(blocks):
+            sel = blocks == b
+            arr = self._block(int(b))
+            off = flat[sel] - int(b) * self.block_rows
+            out[sel] = np.asarray(jnp.take(arr, off, axis=0))
+        return out.reshape(*ids.shape, self.dim)
+
+    def resident_bytes(self) -> int:
+        return len(self._cache) * self.block_rows * self.dim * 4
+
+    def total_bytes(self) -> int:
+        return self.rows * self.dim * 4
+
+
+# ---------------------------------------------------------------------------
+# Small shared blocks
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, dims: Sequence[int], dtype=jnp.float32):
+    """dims: [in, h1, ..., out]."""
+    ks = jax.random.split(key, len(dims) - 1)
+    return {
+        f"w{i}": jax.random.normal(ks[i], (dims[i], dims[i + 1]),
+                                   jnp.float32).astype(dtype)
+        * (2.0 / dims[i]) ** 0.5
+        for i in range(len(dims) - 1)
+    } | {
+        f"b{i}": jnp.zeros((dims[i + 1],), dtype)
+        for i in range(len(dims) - 1)
+    }
+
+
+def mlp_apply(params, x, *, act=jax.nn.relu, final_act=None):
+    n = len([k for k in params if k.startswith("w")])
+    for i in range(n):
+        x = x @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n - 1:
+            x = act(x)
+        elif final_act is not None:
+            x = final_act(x)
+    return x
+
+
+def dice_init(d: int, dtype=jnp.float32):
+    """Dice activation (Zhou et al., DIN/DIEN): data-adaptive PReLU gate."""
+    return {"alpha": jnp.zeros((d,), dtype)}
+
+
+def dice_apply(params, x, eps: float = 1e-8):
+    mu = jnp.mean(x, axis=0, keepdims=True)
+    var = jnp.var(x, axis=0, keepdims=True)
+    p = jax.nn.sigmoid((x - mu) * jax.lax.rsqrt(var + eps))
+    return p * x + (1.0 - p) * params["alpha"] * x
+
+
+def bce_loss(logits, labels):
+    """Binary cross-entropy from logits. labels ∈ {0, 1} float."""
+    logits = logits.astype(jnp.float32)
+    labels = labels.astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0.0) - logits * labels
+        + jnp.log1p(jnp.exp(-jnp.abs(logits))))

@@ -1,0 +1,54 @@
+"""Multi-stage candidate scoring for recsys retrieval — the paper's
+architecture transplanted: a cheap first-stage scorer narrows 10⁶
+candidates to ``first_k``; the exact (expensive) model rescores only
+those; optionally the two scores fuse with the same z-norm hybrid rule.
+
+  stage 1 (SPLADE analogue)  — batched dot of the user state against
+                               candidate item embeddings (1 matmul)
+  stage 2 (ColBERT analogue) — exact model (full AutoInt interaction /
+                               DIEN AUGRU) on the survivors only
+  fusion  (Hybrid)           — α·N(dot) + (1−α)·N(exact), z-norm N
+
+This is also what makes `TieredEmbedding` effective: stage 2 touches
+``first_k`` rows instead of 10⁶, exactly the access-minimisation that
+keeps the mmap'd ColBERT index fast in the paper.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hybrid as hybrid_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class TwoStageParams:
+    first_k: int = 200
+    k: int = 100
+    alpha: float = 0.3
+    normalizer: str = "znorm"
+
+
+def two_stage_retrieve(coarse_scores: jnp.ndarray,
+                       exact_fn: Callable[[jnp.ndarray], jnp.ndarray],
+                       cand_ids: jnp.ndarray,
+                       params: TwoStageParams = TwoStageParams(),
+                       *, fuse: bool = True):
+    """coarse_scores: (N,) stage-1 scores aligned with cand_ids (N,);
+    exact_fn(ids (first_k,)) → (first_k,) exact scores.
+    Returns (top_ids (k,), top_scores (k,))."""
+    s1, keep = jax.lax.top_k(coarse_scores, params.first_k)
+    ids = cand_ids[keep]
+    s2 = exact_fn(ids)
+    if fuse:
+        mask = jnp.ones_like(s1, bool)
+        final = hybrid_mod.hybrid_scores(s1, s2, mask, alpha=params.alpha,
+                                         normalizer=params.normalizer)
+    else:
+        final = s2
+    top, idx = jax.lax.top_k(final, params.k)
+    return ids[idx], top

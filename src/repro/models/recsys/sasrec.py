@@ -1,0 +1,140 @@
+"""SASRec (Kang & McAuley, arXiv:1808.09781): self-attentive sequential
+recommendation. Causal transformer over the item history; training uses
+the paper's binary CE with one sampled negative per position; serving
+scores the last hidden state against candidate item embeddings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.utils import PRNGSeq
+from repro.models import layers as L
+from repro.models.recsys import embedding as EB
+
+
+@dataclasses.dataclass(frozen=True)
+class SASRecCfg:
+    n_items: int = 1_000_000
+    embed_dim: int = 50
+    n_blocks: int = 2
+    n_heads: int = 1
+    seq_len: int = 50
+    dropout: float = 0.0            # inference-style determinism
+
+    @property
+    def attn(self) -> L.AttnCfg:
+        return L.AttnCfg(d_model=self.embed_dim, n_heads=self.n_heads,
+                         kv_heads=self.n_heads,
+                         head_dim=self.embed_dim // self.n_heads,
+                         use_rope=False)
+
+
+def init(key, cfg: SASRecCfg):
+    ks = PRNGSeq(key)
+
+    def block_init(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "ln_attn": L.layernorm_init(cfg.embed_dim),
+            "ln_ffn": L.layernorm_init(cfg.embed_dim),
+            "attn": L.gqa_init(k1, cfg.attn),
+            "ffn": {  # SASRec uses a 2-layer pointwise FFN, same width
+                "w1": L.dense_init(jax.random.fold_in(k2, 0), cfg.embed_dim,
+                                   cfg.embed_dim),
+                "b1": jnp.zeros((cfg.embed_dim,)),
+                "w2": L.dense_init(jax.random.fold_in(k2, 1), cfg.embed_dim,
+                                   cfg.embed_dim),
+                "b2": jnp.zeros((cfg.embed_dim,)),
+            },
+        }
+
+    block_keys = jnp.stack(ks.take(cfg.n_blocks))
+    return {
+        "item_embed": jax.random.normal(
+            next(ks), (cfg.n_items, cfg.embed_dim)) * 0.02,
+        "pos_embed": jax.random.normal(
+            next(ks), (cfg.seq_len, cfg.embed_dim)) * 0.02,
+        "blocks": jax.vmap(block_init)(block_keys),
+        "final_ln": L.layernorm_init(cfg.embed_dim),
+    }
+
+
+def encode(params, cfg: SASRecCfg, items, valid, *,
+           shard_axis: Optional[str] = None):
+    """items: (B, L) int32; valid: (B, L) bool → hidden (B, L, d)."""
+    B, Lh = items.shape
+    x = EB.lookup(params["item_embed"], items, shard_axis=shard_axis)
+    x = x + params["pos_embed"][None, :Lh]
+    x = x * valid[..., None].astype(x.dtype)
+    pos = jnp.where(valid, jnp.arange(Lh, dtype=jnp.int32)[None], -1)
+
+    def body(x, bp):
+        h = L.layernorm_apply(bp["ln_attn"], x)
+        a = L.gqa_apply(bp["attn"], cfg.attn, h, pos, causal=True,
+                        use_blockwise=False)
+        x = x + a
+        h = L.layernorm_apply(bp["ln_ffn"], x)
+        h = jax.nn.relu(h @ bp["ffn"]["w1"] + bp["ffn"]["b1"])
+        x = x + h @ bp["ffn"]["w2"] + bp["ffn"]["b2"]
+        x = x * valid[..., None].astype(x.dtype)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    return L.layernorm_apply(params["final_ln"], x)
+
+
+def loss_fn(params, cfg: SASRecCfg, batch, *,
+            shard_axis: Optional[str] = None):
+    """batch: items (B, L), pos_labels (B, L), neg_labels (B, L),
+    valid (B, L). Binary CE pos-vs-neg per position (paper's loss)."""
+    valid = batch["valid"]
+    h = encode(params, cfg, batch["items"], valid, shard_axis=shard_axis)
+    e_pos = EB.lookup(params["item_embed"], batch["pos_labels"],
+                      shard_axis=shard_axis)
+    e_neg = EB.lookup(params["item_embed"], batch["neg_labels"],
+                      shard_axis=shard_axis)
+    s_pos = jnp.sum(h * e_pos, axis=-1).astype(jnp.float32)
+    s_neg = jnp.sum(h * e_neg, axis=-1).astype(jnp.float32)
+    m = valid.astype(jnp.float32)
+    nll = (jnp.maximum(s_pos, 0) - s_pos + jnp.log1p(jnp.exp(-jnp.abs(s_pos)))
+           + jnp.maximum(s_neg, 0) + jnp.log1p(jnp.exp(-jnp.abs(s_neg))))
+    loss = jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return loss, {"bce": loss}
+
+
+def user_state(params, cfg: SASRecCfg, items, lengths, *,
+               shard_axis: Optional[str] = None):
+    """Final-position hidden state: the user representation (B, d)."""
+    B, Lh = items.shape
+    valid = jnp.arange(Lh)[None, :] < lengths[:, None]
+    h = encode(params, cfg, items, valid, shard_axis=shard_axis)
+    last = jnp.maximum(lengths - 1, 0)
+    return jnp.take_along_axis(h, last[:, None, None].repeat(
+        cfg.embed_dim, -1), axis=1)[:, 0]
+
+
+def serve_score(params, cfg: SASRecCfg, batch, *,
+                shard_axis: Optional[str] = None):
+    """Score each user's next-item candidates: batch has items (B, L),
+    lengths (B,), cand (B, C) → scores (B, C)."""
+    u = user_state(params, cfg, batch["items"], batch["lengths"],
+                   shard_axis=shard_axis)
+    e = EB.lookup(params["item_embed"], batch["cand"],
+                  shard_axis=shard_axis)        # (B, C, d)
+    return jnp.einsum("bd,bcd->bc", u, e)
+
+
+def retrieval_scores(params, cfg: SASRecCfg, query, cand_ids, *,
+                     shard_axis: Optional[str] = None):
+    """One user vs N candidates: a (1, d)×(d, N) matmul — batched dot,
+    not a loop. query: items (L,), length ()."""
+    u = user_state(params, cfg, query["items"][None],
+                   query["length"][None], shard_axis=shard_axis)  # (1, d)
+    e = EB.lookup(params["item_embed"], cand_ids,
+                  shard_axis=shard_axis)                          # (N, d)
+    return (u @ e.T)[0]

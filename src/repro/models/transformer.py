@@ -1,0 +1,382 @@
+"""Composable decoder-only LM with scanned layer segments.
+
+A model is a list of *segments*; each segment is ``n_layers`` structurally
+identical blocks whose params are stacked on a leading axis and executed
+with ``jax.lax.scan`` (compact HLO — essential for 61-layer dry-runs).
+Segments let us express e.g. DeepSeek-V3 (3 dense layers then 58 MoE
+layers) or Llama-4 (dense/MoE interleave, expressed as 24 scans of a
+[dense, moe] pair) without breaking scan homogeneity.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.utils import PRNGSeq
+from repro.models import layers as L
+
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BlockCfg:
+    """One transformer block: attention + FFN (dense or MoE)."""
+    attn_kind: str = "gqa"                      # gqa | mla
+    ffn_kind: str = "dense"                     # dense | moe
+    attn: Optional[L.AttnCfg] = None
+    mla: Optional[L.MLACfg] = None
+    d_ff: int = 0
+    moe: Optional[L.MoECfg] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class LMCfg:
+    name: str
+    d_model: int
+    vocab: int
+    # segments: sequence of (BlockCfg-tuple, n_repeats). Each repeat scans
+    # the tuple of blocks once, so interleaved patterns stay scannable.
+    segments: Sequence[tuple[tuple[BlockCfg, ...], int]] = ()
+    tie_embeddings: bool = False
+    use_mtp: bool = False                       # DeepSeek-V3 multi-token prediction
+    remat: str = "full"                         # none | full | dots
+    attn_chunk: int = 1024
+    use_blockwise_attn: bool = True
+    dtype: Any = jnp.bfloat16
+    seq_shard_axis: Optional[str] = None        # sequence-parallel residual stream
+    logits_softcap: float = 0.0
+    decode_opt: bool = False                    # window-slice + split-S decode
+    decode_score_spec: Any = None               # P for (B,H,1,S) scores
+    # train/prefill activation-sharding controls (the hillclimbed path):
+    batch_spec: Any = None                      # P entry for the batch dim
+    sharded_ce: bool = False                    # vocab-sharded CE loss
+    remat_attn_chunks: bool = False             # flash-style chunk bwd
+    moe_dp_slices: int = 0                      # data-local MoE dispatch
+
+    @property
+    def n_layers(self) -> int:
+        return sum(len(blocks) * n for blocks, n in self.segments)
+
+
+# ---------------------------------------------------------------------------
+# Block init / apply
+# ---------------------------------------------------------------------------
+
+def _block_init(key, cfg: LMCfg, bcfg: BlockCfg):
+    ks = PRNGSeq(key)
+    p: dict[str, Any] = {
+        "ln_attn": L.rmsnorm_init(cfg.d_model, cfg.dtype),
+        "ln_ffn": L.rmsnorm_init(cfg.d_model, cfg.dtype),
+    }
+    if bcfg.attn_kind == "gqa":
+        p["attn"] = L.gqa_init(next(ks), bcfg.attn, cfg.dtype)
+    elif bcfg.attn_kind == "mla":
+        p["attn"] = L.mla_init(next(ks), bcfg.mla, cfg.dtype)
+    else:
+        raise ValueError(bcfg.attn_kind)
+    if bcfg.ffn_kind == "dense":
+        p["ffn"] = L.ffn_init(next(ks), cfg.d_model, bcfg.d_ff, cfg.dtype)
+    elif bcfg.ffn_kind == "moe":
+        p["ffn"] = L.moe_init(next(ks), bcfg.moe, cfg.dtype)
+    else:
+        raise ValueError(bcfg.ffn_kind)
+    return p
+
+
+def _seq_shard(cfg: LMCfg, x):
+    from jax.sharding import PartitionSpec as P
+    if cfg.seq_shard_axis is not None:
+        x = jax.lax.with_sharding_constraint(
+            x, P(cfg.batch_spec or "data", cfg.seq_shard_axis, None))
+    elif cfg.batch_spec is not None:
+        # keep the residual stream batch-sharded: without this GSPMD may
+        # batch-replicate activations around attention (the baseline
+        # pathology measured in EXPERIMENTS.md §Perf)
+        x = jax.lax.with_sharding_constraint(x, P(cfg.batch_spec, None, None))
+    return x
+
+
+def _score_spec(cfg: LMCfg):
+    if cfg.batch_spec is None:
+        return None
+    from jax.sharding import PartitionSpec as P
+    return P(cfg.batch_spec, "model", None, None)   # (B, H, Lq, chunk)
+
+
+def _block_apply(params, cfg: LMCfg, bcfg: BlockCfg, x, positions, *,
+                 ep_axis: Optional[str] = None,
+                 dp_axis: Optional[str] = None):
+    h = L.rmsnorm_apply(params["ln_attn"], x)
+    if bcfg.attn_kind == "gqa":
+        a = L.gqa_apply(params["attn"], bcfg.attn, h, positions,
+                        causal=True, chunk=cfg.attn_chunk,
+                        use_blockwise=cfg.use_blockwise_attn,
+                        score_spec=_score_spec(cfg),
+                        remat_chunks=cfg.remat_attn_chunks)
+    else:
+        a = L.mla_apply(params["attn"], bcfg.mla, h, positions,
+                        causal=True, chunk=cfg.attn_chunk,
+                        use_blockwise=cfg.use_blockwise_attn,
+                        score_spec=_score_spec(cfg),
+                        remat_chunks=cfg.remat_attn_chunks)
+    x = _seq_shard(cfg, x + a)
+    h = L.rmsnorm_apply(params["ln_ffn"], x)
+    aux = jnp.zeros((), jnp.float32)
+    if bcfg.ffn_kind == "dense":
+        f = L.ffn_apply(params["ffn"], h)
+    else:
+        f, moe_aux = L.moe_apply(params["ffn"], bcfg.moe, h, ep_axis=ep_axis,
+                                 dp_axis=dp_axis,
+                                 dp_slices=cfg.moe_dp_slices)
+        aux = moe_aux["aux_loss"]
+    x = _seq_shard(cfg, x + f)
+    return x, aux
+
+
+def _block_decode_apply(params, cfg: LMCfg, bcfg: BlockCfg, x, positions,
+                        cache, cache_positions):
+    h = L.rmsnorm_apply(params["ln_attn"], x)
+    if bcfg.attn_kind == "gqa":
+        a, new_cache, new_pos = L.gqa_decode_apply(
+            params["attn"], bcfg.attn, h, positions, cache, cache_positions,
+            opt=cfg.decode_opt, score_spec=cfg.decode_score_spec)
+    else:
+        a, new_cache, new_pos = L.mla_decode_apply(
+            params["attn"], bcfg.mla, h, positions, cache, cache_positions)
+    x = x + a
+    h = L.rmsnorm_apply(params["ln_ffn"], x)
+    if bcfg.ffn_kind == "dense":
+        f = L.ffn_apply(params["ffn"], h)
+    else:
+        # sharding constraints only when a mesh context is implied
+        dist = cfg.decode_opt and cfg.decode_score_spec is not None
+        f, _ = L.moe_apply(params["ffn"], bcfg.moe, h,
+                           ep_axis="model" if dist else None,
+                           dp_axis="data" if dist else None)
+    return x + f, new_cache, new_pos
+
+
+# ---------------------------------------------------------------------------
+# Model init
+# ---------------------------------------------------------------------------
+
+def init(key, cfg: LMCfg):
+    ks = PRNGSeq(key)
+    params: dict[str, Any] = {
+        "embed": L.embed_init(next(ks), cfg.vocab, cfg.d_model, cfg.dtype),
+        "final_norm": L.rmsnorm_init(cfg.d_model, cfg.dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(next(ks), cfg.d_model, cfg.vocab, cfg.dtype)
+    for si, (blocks, n) in enumerate(cfg.segments):
+        seg = {}
+        for bi, bcfg in enumerate(blocks):
+            layer_keys = jnp.stack(ks.take(n))
+            seg[f"block{bi}"] = jax.vmap(
+                lambda k, _cfg=bcfg: _block_init(k, cfg, _cfg))(layer_keys)
+        params[f"seg{si}"] = seg
+    if cfg.use_mtp:
+        mtp_block = cfg.segments[-1][0][-1]
+        params["mtp"] = {
+            "norm_h": L.rmsnorm_init(cfg.d_model, cfg.dtype),
+            "norm_e": L.rmsnorm_init(cfg.d_model, cfg.dtype),
+            "proj": L.dense_init(next(ks), 2 * cfg.d_model, cfg.d_model, cfg.dtype),
+            "block": _block_init(next(ks), cfg, mtp_block),
+        }
+    return params
+
+
+def abstract_init(cfg: LMCfg):
+    """Param tree as ShapeDtypeStructs (no allocation) — for the dry-run."""
+    return jax.eval_shape(lambda: init(jax.random.PRNGKey(0), cfg))
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _remat_wrap(fn, cfg: LMCfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def forward(params, cfg: LMCfg, tokens, *, ep_axis: Optional[str] = None,
+            dp_axis: Optional[str] = None):
+    """tokens: (B, L) int32 → (hidden (B, L, D), aux_loss scalar)."""
+    B, Lseq = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(Lseq, dtype=jnp.int32)[None], (B, Lseq))
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    x = _seq_shard(cfg, x)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for si, (blocks, n) in enumerate(cfg.segments):
+        seg = params[f"seg{si}"]
+
+        def one_repeat(x, layer_params, _blocks=blocks):
+            aux = jnp.zeros((), jnp.float32)
+            for bi, bcfg in enumerate(_blocks):
+                x, a = _block_apply(layer_params[f"block{bi}"], cfg, bcfg, x,
+                                    positions, ep_axis=ep_axis,
+                                    dp_axis=dp_axis)
+                aux = aux + a
+            return x, aux
+
+        body = _remat_wrap(one_repeat, cfg)
+        x, auxs = jax.lax.scan(lambda c, p: body(c, p), x, seg)
+        aux_total = aux_total + jnp.sum(auxs)
+
+    x = L.rmsnorm_apply(params["final_norm"], x)
+    return x, aux_total
+
+
+def logits_from_hidden(params, cfg: LMCfg, hidden):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bld,dv->blv", hidden, head.astype(cfg.dtype))
+    if cfg.logits_softcap:
+        c = cfg.logits_softcap
+        logits = jnp.tanh(logits / c) * c
+    return logits
+
+
+def _ce_nll(cfg: LMCfg, logits, labels):
+    """Per-token NLL. The sharded path keeps the vocab axis partitioned:
+    `take_along_axis` over a sharded vocab makes GSPMD all-gather the
+    fp32 logits (measured: 40+ GB/device on the 151k-vocab models);
+    the one-hot-fused form reduces locally and psums scalars instead."""
+    safe = jnp.maximum(labels, 0)
+    if not cfg.sharded_ce:
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    from jax.sharding import PartitionSpec as P
+    logits = jax.lax.with_sharding_constraint(
+        logits, P(cfg.batch_spec, None, "model"))
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = (safe[..., None]
+              == jnp.arange(logits.shape[-1], dtype=labels.dtype))
+    logit_at = jnp.sum(logits * onehot.astype(logits.dtype), axis=-1)
+    return lse - logit_at
+
+
+def lm_loss(params, cfg: LMCfg, tokens, labels, *, ep_axis=None,
+            dp_axis=None, mtp_weight: float = 0.3):
+    """Cross-entropy (+ MoE aux + optional MTP). labels −100 are masked."""
+    hidden, aux = forward(params, cfg, tokens, ep_axis=ep_axis,
+                          dp_axis=dp_axis)
+    logits = logits_from_hidden(params, cfg, hidden).astype(jnp.float32)
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = _ce_nll(cfg, logits, labels)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll * mask) / denom
+    metrics = {"ce_loss": loss, "aux_loss": aux}
+
+    if cfg.use_mtp:
+        # DeepSeek-V3 MTP (depth 1): combine hidden_t with emb(token_{t+1}),
+        # run one extra block, predict token_{t+2}.
+        mtp = params["mtp"]
+        B, Lseq = tokens.shape
+        emb_next = jnp.take(params["embed"], jnp.roll(tokens, -1, axis=1),
+                            axis=0).astype(cfg.dtype)
+        h = jnp.concatenate(
+            [L.rmsnorm_apply(mtp["norm_h"], hidden),
+             L.rmsnorm_apply(mtp["norm_e"], emb_next)], axis=-1)
+        h = jnp.einsum("blk,kd->bld", h, mtp["proj"])
+        positions = jnp.broadcast_to(jnp.arange(Lseq, dtype=jnp.int32)[None],
+                                     (B, Lseq))
+        mtp_block = cfg.segments[-1][0][-1]
+        h, _ = _block_apply(mtp["block"], cfg, mtp_block, h, positions,
+                            ep_axis=ep_axis)
+        mtp_logits = logits_from_hidden(params, cfg, h).astype(jnp.float32)
+        mtp_labels = jnp.roll(labels, -1, axis=1)
+        mtp_mask = mask * (jnp.arange(Lseq) < Lseq - 1)[None, :]
+        nll2 = _ce_nll(cfg, mtp_logits, mtp_labels)
+        mtp_loss = jnp.sum(nll2 * mtp_mask) / jnp.maximum(jnp.sum(mtp_mask), 1.0)
+        metrics["mtp_loss"] = mtp_loss
+        loss = loss + mtp_weight * mtp_loss
+
+    loss = loss + 0.001 * aux
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill & decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: LMCfg, batch: int, max_len: int, dtype=None):
+    """Per-segment stacked KV caches (layer-major, scan-compatible)."""
+    dtype = dtype or cfg.dtype
+    caches = {}
+    for si, (blocks, n) in enumerate(cfg.segments):
+        seg = {}
+        for bi, bcfg in enumerate(blocks):
+            if bcfg.attn_kind == "gqa":
+                K, h = bcfg.attn.kv_heads, bcfg.attn.head_dim
+                seg[f"block{bi}"] = {
+                    "k": jnp.zeros((n, batch, max_len, K, h), dtype),
+                    "v": jnp.zeros((n, batch, max_len, K, h), dtype),
+                }
+            else:
+                seg[f"block{bi}"] = {
+                    "c_kv": jnp.zeros((n, batch, max_len, bcfg.mla.kv_lora_rank), dtype),
+                    "k_rope": jnp.zeros((n, batch, max_len, bcfg.mla.qk_rope_head_dim), dtype),
+                }
+        caches[f"seg{si}"] = seg
+    caches["positions"] = jnp.full((batch, max_len), -1, jnp.int32)
+    return caches
+
+
+def abstract_cache(cfg: LMCfg, batch: int, max_len: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+def prefill(params, cfg: LMCfg, tokens):
+    """Full-sequence forward for serving; returns last-position logits.
+
+    (The KV cache fill for subsequent decode reuses ``forward``'s
+    projections; for the dry-run cells the lowered computation is the
+    full prefill forward + logits, which dominates cost.)
+    """
+    hidden, _ = forward(params, cfg, tokens)
+    logits = logits_from_hidden(params, cfg, hidden[:, -1:, :])
+    return logits
+
+
+def decode_step(params, cfg: LMCfg, token, pos, caches):
+    """One decode step. token: (B, 1) int32; pos: (B, 1) int32 absolute
+    position; caches from ``init_cache``. Returns (logits, new_caches)."""
+    x = jnp.take(params["embed"], token, axis=0).astype(cfg.dtype)
+    cache_positions = caches["positions"]
+    new_caches = {"positions": cache_positions}
+
+    for si, (blocks, n) in enumerate(cfg.segments):
+        seg_params = params[f"seg{si}"]
+        seg_cache = caches[f"seg{si}"]
+
+        def body(carry, xs, _blocks=blocks):
+            x, cache_pos = carry
+            layer_params, layer_cache = xs
+            new_layer_cache = {}
+            for bi, bcfg in enumerate(_blocks):
+                x, c, cache_pos = _block_decode_apply(
+                    layer_params[f"block{bi}"], cfg, bcfg, x, pos,
+                    layer_cache[f"block{bi}"], cache_pos)
+                new_layer_cache[f"block{bi}"] = c
+            return (x, cache_pos), new_layer_cache
+
+        (x, cache_positions), new_seg = jax.lax.scan(
+            body, (x, cache_positions), (seg_params, seg_cache))
+        new_caches[f"seg{si}"] = new_seg
+
+    new_caches["positions"] = cache_positions
+    x = L.rmsnorm_apply(params["final_norm"], x)
+    logits = logits_from_hidden(params, cfg, x)
+    return logits, new_caches

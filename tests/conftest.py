@@ -1,0 +1,54 @@
+"""Test fixtures. NOTE: no XLA_FLAGS device-count override here — smoke
+tests and benchmarks must see the single real CPU device; only the
+dry-run (and the subprocess-based multi-device tests) use placeholder
+devices."""
+
+import os
+import sys
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+if SRC not in sys.path:
+    sys.path.insert(0, os.path.abspath(SRC))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def small_corpus():
+    from repro.data.synth import SynthCfg, make_corpus
+    return make_corpus(SynthCfg(n_docs=400, n_queries=60, vocab=1024,
+                                dim=32, n_topics=24, doc_maxlen=20,
+                                query_maxlen=6, seed=1))
+
+
+@pytest.fixture(scope="session")
+def built_index(tmp_path_factory, small_corpus):
+    from repro.index.builder import ColBERTIndex, build_colbert_index
+    path = tmp_path_factory.mktemp("index")
+    build_colbert_index(path, small_corpus["doc_embs"],
+                        small_corpus["doc_lens"], nbits=4,
+                        n_centroids=128, kmeans_iters=4)
+    return path
+
+
+def run_subprocess_jax(code: str, n_devices: int = 8, timeout: int = 600):
+    """Run a JAX snippet in a subprocess with fake devices."""
+    import subprocess
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.abspath(SRC)
+    res = subprocess.run([sys.executable, "-c", code], timeout=timeout,
+                         capture_output=True, text=True, env=env)
+    if res.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed:\nSTDOUT:\n{res.stdout}\nSTDERR:\n"
+            f"{res.stderr[-3000:]}")
+    return res.stdout

@@ -1,0 +1,192 @@
+"""Index substrate: residual codec, k-means, IVF, SPLADE postings,
+PagedStore mmap/ram equivalence + page accounting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.index import residual
+from repro.index.ivf import build_ivf
+from repro.index.kmeans import assign, train_kmeans
+from repro.index.splade_index import (build_splade_index,
+                                      splade_score_jax_padded)
+from repro.core.store import PagedStore
+
+
+# ---------------------------------------------------------------------------
+# residual codec
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("nbits", [2, 4])
+def test_codec_roundtrip_error_bounded(nbits, rng):
+    dim, K, N = 32, 16, 500
+    cent = rng.normal(size=(K, dim)).astype(np.float32)
+    cent /= np.linalg.norm(cent, axis=-1, keepdims=True)
+    embs = rng.normal(size=(N, dim)).astype(np.float32) * 0.3
+    embs = cent[rng.integers(0, K, N)] + embs * 0.1
+    cids, _ = assign(jnp.asarray(embs), jnp.asarray(cent))
+    codec = residual.fit_codec(cent, embs, np.asarray(cids), nbits)
+    packed = residual.encode_residuals(jnp.asarray(embs), cids,
+                                       codec.centroids,
+                                       codec.bucket_cutoffs, nbits)
+    dec = residual.decode_embeddings(packed, cids, codec.centroids,
+                                     codec.bucket_weights, nbits)
+    res = embs - np.asarray(codec.centroids)[np.asarray(cids)]
+    # max error bounded by the largest bucket width
+    cuts = np.asarray(codec.bucket_cutoffs)
+    spans = np.diff(np.concatenate([[res.min()], cuts, [res.max()]]))
+    err = np.abs(np.asarray(dec) - embs)
+    assert err.max() <= spans.max() + 1e-5
+    # 4-bit must beat 2-bit on MSE
+    if nbits == 4:
+        assert err.mean() < 0.05
+
+
+def test_codec_packing_is_lossless():
+    nbits = 4
+    codes = jnp.arange(16, dtype=jnp.uint8).reshape(1, 16)
+    cpb = 8 // nbits
+    grouped = codes.reshape(1, 16 // cpb, cpb)
+    shifts = jnp.arange(cpb, dtype=jnp.uint8) * nbits
+    packed = jnp.sum(grouped.astype(jnp.uint32) << shifts.astype(jnp.uint32),
+                     axis=-1).astype(jnp.uint8)
+    unpacked = residual.unpack_codes(packed, nbits)
+    np.testing.assert_array_equal(np.asarray(unpacked), np.asarray(codes))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([2, 4]))
+def test_unpack_inverts_pack(seed, nbits):
+    rng = np.random.default_rng(seed)
+    N, dim = 7, 16
+    codes = rng.integers(0, 2 ** nbits, (N, dim)).astype(np.uint8)
+    cpb = 8 // nbits
+    grouped = codes.reshape(N, dim // cpb, cpb).astype(np.uint32)
+    shifts = (np.arange(cpb) * nbits).astype(np.uint32)
+    packed = np.sum(grouped << shifts, axis=-1).astype(np.uint8)
+    out = np.asarray(residual.unpack_codes(jnp.asarray(packed), nbits))
+    np.testing.assert_array_equal(out, codes)
+
+
+def test_compression_ratio():
+    # 128-dim fp32 = 512 B vs 4-bit codes (64 B) + 4 B cid = 68 B ≈ 7.5×
+    assert 7 < residual.compression_ratio(128, 4) < 8
+
+
+# ---------------------------------------------------------------------------
+# k-means
+# ---------------------------------------------------------------------------
+
+def test_kmeans_recovers_separated_clusters(rng):
+    centers = np.eye(8, dtype=np.float32)[:4]  # 4 orthogonal directions
+    pts = np.repeat(centers, 100, axis=0)
+    pts += rng.normal(size=pts.shape).astype(np.float32) * 0.05
+    pts /= np.linalg.norm(pts, axis=-1, keepdims=True)
+    cent = train_kmeans(jax.random.PRNGKey(0), jnp.asarray(pts), 4, 10)
+    ids, sims = assign(jnp.asarray(pts), cent)
+    # points from the same true cluster land in the same learned cluster
+    ids = np.asarray(ids).reshape(4, 100)
+    for row in ids:
+        assert len(np.unique(row)) == 1
+    assert float(jnp.mean(sims)) > 0.95
+
+
+def test_assign_is_argmax(rng):
+    pts = rng.normal(size=(50, 8)).astype(np.float32)
+    cent = rng.normal(size=(6, 8)).astype(np.float32)
+    ids, _ = assign(jnp.asarray(pts), jnp.asarray(cent))
+    expected = np.argmax(pts @ cent.T, axis=-1)
+    np.testing.assert_array_equal(np.asarray(ids), expected)
+
+
+# ---------------------------------------------------------------------------
+# IVF
+# ---------------------------------------------------------------------------
+
+def test_ivf_contains_exactly_token_centroid_pairs():
+    cids = np.array([0, 0, 1, 2, 2, 2, 1])
+    pids = np.array([0, 0, 0, 1, 1, 2, 2])
+    ivf = build_ivf(cids, pids, 3)
+    assert set(ivf.postings(0)) == {0}
+    assert set(ivf.postings(1)) == {0, 2}
+    assert set(ivf.postings(2)) == {1, 2}
+    padded = ivf.as_padded(4)
+    assert padded.shape == (3, 4)
+    assert set(padded[1][padded[1] >= 0]) == {0, 2}
+
+
+# ---------------------------------------------------------------------------
+# SPLADE index
+# ---------------------------------------------------------------------------
+
+def test_splade_host_vs_jax_scoring(rng):
+    n_docs, vocab, T = 200, 300, 12
+    ids = rng.integers(0, vocab, (n_docs, T)).astype(np.int32)
+    w = (rng.random((n_docs, T)) + 0.1).astype(np.float32)
+    idx = build_splade_index(ids, w, vocab, n_docs)
+    q_ids = rng.integers(0, vocab, 8).astype(np.int32)
+    q_w = (rng.random(8) + 0.2).astype(np.float32)
+    pids_h, scores_h = idx.score_host(q_ids, q_w, k=20)
+    padded_p, padded_i = idx.as_padded(idx.term_offsets.max() + 1
+                                       if len(idx.pids) else 1)
+    max_df = int(np.diff(idx.term_offsets).max())
+    padded_p, padded_i = idx.as_padded(max_df)
+    pids_j, scores_j = splade_score_jax_padded(
+        jnp.asarray(padded_p), jnp.asarray(padded_i), idx.quantum,
+        n_docs, jnp.asarray(q_ids), jnp.asarray(q_w), 20)
+    np.testing.assert_allclose(np.sort(scores_h)[::-1],
+                               np.sort(np.asarray(scores_j))[::-1],
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_splade_quantisation_error_small(rng):
+    n_docs, vocab, T = 100, 200, 8
+    ids = rng.integers(0, vocab, (n_docs, T)).astype(np.int32)
+    w = (rng.random((n_docs, T)) + 0.1).astype(np.float32)
+    idx = build_splade_index(ids, w, vocab, n_docs)
+    # reconstruct each document's term weights from the postings
+    recon = np.zeros((n_docs, vocab), np.float32)
+    for t in range(vocab):
+        s, e = idx.term_offsets[t], idx.term_offsets[t + 1]
+        np.add.at(recon[:, t], idx.pids[s:e],
+                  idx.impacts[s:e].astype(np.float32) * idx.quantum)
+    dense = np.zeros_like(recon)
+    for d in range(n_docs):
+        np.add.at(dense[d], ids[d], w[d])
+    assert np.abs(recon - dense).max() <= idx.quantum
+
+
+# ---------------------------------------------------------------------------
+# PagedStore
+# ---------------------------------------------------------------------------
+
+def test_store_mmap_equals_ram(tmp_path, rng):
+    n, pd = 300, 16
+    res = rng.integers(0, 256, (n, pd)).astype(np.uint8)
+    codes = rng.integers(0, 64, n).astype(np.int32)
+    PagedStore.write(tmp_path, codes, res, dim=32, nbits=4)
+    ram = PagedStore(tmp_path, mode="ram")
+    mm = PagedStore(tmp_path, mode="mmap")
+    ids = rng.integers(0, n, 40)
+    c1, r1 = ram.gather_tokens(ids)
+    c2, r2 = mm.gather_tokens(ids)
+    np.testing.assert_array_equal(c1, c2)
+    np.testing.assert_array_equal(r1, r2)
+
+
+def test_store_page_accounting(tmp_path, rng):
+    n, pd = 4096, 64   # row = 64 B → 64 rows per 4 KiB page
+    res = rng.integers(0, 256, (n, pd)).astype(np.uint8)
+    codes = np.zeros(n, np.int32)
+    PagedStore.write(tmp_path, codes, res, dim=128, nbits=4)
+    st_ = PagedStore(tmp_path, mode="mmap")
+    st_.stats.reset()
+    st_.gather_tokens(np.arange(64))          # exactly one page
+    assert st_.stats.pages_touched == 1
+    st_.gather_tokens(np.arange(64))          # same page again
+    assert len(st_.stats.unique_pages) == 1
+    st_.gather_tokens(np.array([0, 64, 128]))  # three pages (one seen)
+    assert len(st_.stats.unique_pages) == 3
+    assert 0 < st_.resident_fraction_estimate() < 1

@@ -1,0 +1,181 @@
+"""Per-kernel validation: interpret-mode Pallas body vs pure-jnp oracle
+across shape/dtype sweeps, plus hypothesis property tests on the
+oracles themselves."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.index.residual import unpack_codes
+from repro.kernels.decompress_maxsim.ops import decompress_maxsim_scores
+from repro.kernels.maxsim.ops import maxsim_scores
+from repro.kernels.maxsim.ref import maxsim_scores_ref
+from repro.kernels.splade_score.ops import splade_block_scores
+
+
+# ---------------------------------------------------------------------------
+# maxsim
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("C,Ld,Lq,d,block_c", [
+    (16, 24, 32, 128, 16),
+    (20, 8, 8, 64, 8),        # C not multiple of block (pads)
+    (1, 180, 32, 128, 16),    # single candidate
+    (64, 17, 5, 32, 32),      # odd doc length
+])
+def test_maxsim_interpret_matches_ref(C, Ld, Lq, d, block_c):
+    k = jax.random.PRNGKey(C * 101 + Ld)
+    q = jax.random.normal(k, (Lq, d), jnp.float32)
+    docs = jax.random.normal(jax.random.fold_in(k, 1), (C, Ld, d))
+    valid = jax.random.bernoulli(jax.random.fold_in(k, 2), 0.8, (C, Ld))
+    qv = jax.random.bernoulli(jax.random.fold_in(k, 3), 0.9, (Lq,))
+    a = maxsim_scores(q, docs, valid, qv, impl="interpret", block_c=block_c)
+    b = maxsim_scores(q, docs, valid, qv, impl="ref")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_maxsim_dtypes(dtype):
+    k = jax.random.PRNGKey(7)
+    q = jax.random.normal(k, (8, 64), dtype)
+    docs = jax.random.normal(jax.random.fold_in(k, 1), (16, 12, 64), dtype)
+    valid = jnp.ones((16, 12), bool)
+    a = maxsim_scores(q, docs, valid, impl="interpret")
+    b = maxsim_scores(q, docs, valid, impl="ref")
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=tol,
+                               atol=tol)
+
+
+def test_maxsim_all_invalid_doc_scores_zero():
+    q = jnp.ones((4, 16))
+    docs = jnp.ones((3, 5, 16))
+    valid = jnp.array([[True] * 5, [False] * 5, [True] * 5])
+    s = maxsim_scores(q, docs, valid, impl="ref")
+    assert float(s[1]) == 0.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 10), st.integers(2, 12), st.integers(2, 8),
+       st.integers(0, 2 ** 31 - 1))
+def test_maxsim_doc_token_permutation_invariant(C, Ld, Lq, seed):
+    """MaxSim is a max over doc tokens — permuting them is a no-op."""
+    k = jax.random.PRNGKey(seed)
+    q = jax.random.normal(k, (Lq, 16))
+    docs = jax.random.normal(jax.random.fold_in(k, 1), (C, Ld, 16))
+    valid = jax.random.bernoulli(jax.random.fold_in(k, 2), 0.7, (C, Ld))
+    perm = jax.random.permutation(jax.random.fold_in(k, 3), Ld)
+    a = maxsim_scores_ref(q, docs, valid)
+    b = maxsim_scores_ref(q, docs[:, perm], valid[:, perm])
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 8), st.integers(0, 2 ** 31 - 1))
+def test_maxsim_padding_tokens_never_change_scores(C, Ld, seed):
+    """Appending invalid tokens must not move any score."""
+    k = jax.random.PRNGKey(seed)
+    q = jax.random.normal(k, (4, 8))
+    docs = jax.random.normal(jax.random.fold_in(k, 1), (C, Ld, 8))
+    valid = jnp.ones((C, Ld), bool)
+    pad = 100.0 * jax.random.normal(jax.random.fold_in(k, 2), (C, 3, 8))
+    docs2 = jnp.concatenate([docs, pad], axis=1)
+    valid2 = jnp.concatenate([valid, jnp.zeros((C, 3), bool)], axis=1)
+    np.testing.assert_allclose(np.asarray(maxsim_scores_ref(q, docs, valid)),
+                               np.asarray(maxsim_scores_ref(q, docs2, valid2)),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# decompress_maxsim (fused)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("nbits,gather,C,Ld,K", [
+    (4, "take", 16, 24, 64),
+    (4, "onehot", 16, 24, 64),
+    (2, "take", 8, 12, 32),
+    (2, "onehot", 24, 8, 16),
+])
+def test_decompress_maxsim_interpret_matches_ref(nbits, gather, C, Ld, K):
+    d = 64
+    k = jax.random.PRNGKey(nbits * 7 + C)
+    q = jax.random.normal(k, (16, d))
+    packed = jax.random.randint(jax.random.fold_in(k, 1),
+                                (C, Ld, d * nbits // 8), 0, 256, jnp.int32
+                                ).astype(jnp.uint8)
+    cids = jax.random.randint(jax.random.fold_in(k, 2), (C, Ld), 0, K)
+    valid = jax.random.bernoulli(jax.random.fold_in(k, 3), 0.85, (C, Ld))
+    cent = jax.random.normal(jax.random.fold_in(k, 4), (K, d))
+    bw = jnp.linspace(-0.3, 0.3, 2 ** nbits)
+    a = decompress_maxsim_scores(q, packed, cids, valid, cent, bw,
+                                 nbits=nbits, impl="interpret",
+                                 gather=gather, block_c=8)
+    b = decompress_maxsim_scores(q, packed, cids, valid, cent, bw,
+                                 nbits=nbits, impl="ref")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3,
+                               atol=1e-3)
+
+
+def test_fused_equals_decompress_then_maxsim():
+    """The fusion is exact: same numbers as the two-step pipeline."""
+    nbits, C, Ld, K, d = 4, 12, 10, 32, 64
+    k = jax.random.PRNGKey(3)
+    q = jax.random.normal(k, (8, d))
+    packed = jax.random.randint(jax.random.fold_in(k, 1),
+                                (C, Ld, d // 2), 0, 256).astype(jnp.uint8)
+    cids = jax.random.randint(jax.random.fold_in(k, 2), (C, Ld), 0, K)
+    valid = jnp.ones((C, Ld), bool)
+    cent = jax.random.normal(jax.random.fold_in(k, 4), (K, d))
+    bw = jnp.linspace(-0.2, 0.2, 16)
+    codes = unpack_codes(packed, nbits)
+    emb = cent[cids] + bw[codes.astype(jnp.int32)]
+    two_step = maxsim_scores(q, emb, valid, impl="ref")
+    fused = decompress_maxsim_scores(q, packed, cids, valid, cent, bw,
+                                     nbits=nbits, impl="ref")
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(two_step),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# splade_score
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("Qt,max_df,n_docs,block_d,chunk", [
+    (8, 128, 500, 256, 128),
+    (4, 64, 1000, 512, 256),
+    (16, 32, 300, 128, 512),   # E not multiple of chunk (pads)
+])
+def test_splade_interpret_matches_ref(Qt, max_df, n_docs, block_d, chunk):
+    k = jax.random.PRNGKey(Qt + max_df)
+    pids = jax.random.randint(k, (Qt, max_df), -1, n_docs, jnp.int32)
+    imps = jax.random.uniform(jax.random.fold_in(k, 1), (Qt, max_df))
+    w = jax.random.uniform(jax.random.fold_in(k, 2), (Qt,))
+    a = splade_block_scores(pids, imps, w, n_docs=n_docs,
+                            impl="interpret", block_d=block_d, chunk=chunk)
+    b = splade_block_scores(pids, imps, w, n_docs=n_docs, impl="ref")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                               atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 32), st.integers(0, 2 ** 31 - 1))
+def test_splade_ref_is_exact_posting_sum(Qt, max_df, seed):
+    """Oracle equals a literal python loop over postings."""
+    rng = np.random.default_rng(seed)
+    n_docs = 50
+    pids = rng.integers(-1, n_docs, (Qt, max_df)).astype(np.int32)
+    imps = rng.random((Qt, max_df)).astype(np.float32)
+    w = rng.random(Qt).astype(np.float32)
+    expected = np.zeros(n_docs, np.float32)
+    for t in range(Qt):
+        for j in range(max_df):
+            if pids[t, j] >= 0:
+                expected[pids[t, j]] += w[t] * imps[t, j]
+    got = np.asarray(splade_block_scores(
+        jnp.asarray(pids), jnp.asarray(imps), jnp.asarray(w),
+        n_docs=n_docs, impl="ref"))
+    np.testing.assert_allclose(got, expected, rtol=1e-4, atol=1e-5)

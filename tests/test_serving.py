@@ -1,0 +1,116 @@
+"""Concurrent serving: queue/worker mechanics, latency accounting,
+failure replacement, drain, Poisson load generation, TCP front."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.serving.engine import Request, ServeEngine
+from repro.serving.loadgen import run_poisson_load
+from repro.serving.server import RetrievalServer, TCPRetrievalServer, tcp_query
+
+
+class FakeRetriever:
+    """Deterministic-latency stand-in for MultiStageRetriever."""
+
+    def __init__(self, service_s=0.002, fail_qids=()):
+        self.service_s = service_s
+        self.fail_qids = set(fail_qids)
+        self.calls = 0
+
+    def search(self, method, q_emb=None, term_ids=None, term_weights=None,
+               alpha=None, k=10):
+        self.calls += 1
+        if self.service_s:
+            time.sleep(self.service_s)
+        if q_emb is not None and int(q_emb[0]) in self.fail_qids:
+            raise RuntimeError("injected failure")
+        return np.arange(k), np.linspace(1, 0, k)
+
+
+def make_server(n_threads=2, **kw):
+    srv = RetrievalServer(ServeEngine(FakeRetriever(**kw)),
+                          n_threads=n_threads)
+    srv.start()
+    return srv
+
+
+def test_serves_concurrent_requests():
+    srv = make_server(n_threads=4)
+    futs = [srv.submit(Request(qid=i, method="hybrid",
+                               q_emb=np.zeros(2))) for i in range(32)]
+    results = [f.result(timeout=30) for f in futs]
+    assert len(results) == 32
+    assert all(r.latency >= r.service_time - 1e-6 for r in results)
+    assert srv.health()["served"] == 32
+    srv.stop()
+
+
+def test_failure_is_isolated_and_counted():
+    srv = make_server(n_threads=2, fail_qids={5})
+    ok = [srv.submit(Request(qid=i, method="hybrid",
+                             q_emb=np.full(2, i))) for i in range(8)]
+    with pytest.raises(RuntimeError):
+        ok[5].result(timeout=10)
+    for i, f in enumerate(ok):
+        if i != 5:
+            f.result(timeout=10)
+    h = srv.health()
+    assert h["failed"] == 1
+    assert h["workers"] == 2     # workers survive failures
+    srv.stop()
+
+
+def test_drain_completes_queue():
+    srv = make_server(n_threads=1, service_s=0.005)
+    futs = [srv.submit(Request(qid=i, method="rerank",
+                               q_emb=np.zeros(2))) for i in range(10)]
+    srv.drain()
+    assert all(f.done() for f in futs)
+    srv.stop()
+
+
+def test_poisson_load_reports_percentiles():
+    srv = make_server(n_threads=1, service_s=0.002)
+    reqs = [Request(qid=i, method="hybrid", q_emb=np.zeros(2))
+            for i in range(40)]
+    res = run_poisson_load(srv, reqs, qps=400.0, seed=0)
+    assert res.p95 >= res.p50 > 0
+    assert len(res.latencies) == 40
+    assert res.achieved_qps > 0
+    srv.stop()
+
+
+def test_saturation_raises_latency():
+    """Offered load ≫ service rate ⇒ queueing dominates p95 — the knee
+    the paper's Fig 1/2 shows."""
+    service = 0.004   # 250 QPS capacity single-thread
+    low_srv = make_server(n_threads=1, service_s=service)
+    reqs = [Request(qid=i, method="hybrid", q_emb=np.zeros(2))
+            for i in range(60)]
+    low = run_poisson_load(low_srv, reqs, qps=50.0, seed=1)
+    low_srv.stop()
+    hi_srv = make_server(n_threads=1, service_s=service)
+    hi = run_poisson_load(hi_srv, reqs, qps=2000.0, seed=1)
+    hi_srv.stop()
+    assert hi.p95 > 3 * low.p95
+
+
+def test_tcp_front_roundtrip():
+    srv = make_server(n_threads=1)
+    tcp = TCPRetrievalServer(("127.0.0.1", 0), srv)
+    port = tcp.server_address[1]
+    t = threading.Thread(target=tcp.serve_forever, daemon=True)
+    t.start()
+    try:
+        out = tcp_query("127.0.0.1", port,
+                        {"qid": 7, "method": "hybrid",
+                         "q_emb": [0.0, 0.0], "k": 5})
+        assert out["qid"] == 7
+        assert len(out["pids"]) == 5
+        assert out["latency"] > 0
+    finally:
+        tcp.shutdown()
+        srv.stop()

@@ -1,0 +1,225 @@
+"""Training substrate: optimizer semantics (incl. 8-bit state),
+checkpoint/restart exactness, preemption, straggler detection, gradient
+compression with error feedback."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.training import checkpoint as C
+from repro.training.compression import (CompressionCfg, compress_tree,
+                                        compression_ratio, ef_init)
+from repro.training.optimizer import (AdamWCfg, adamw_init, adamw_update,
+                                      dequantize_q8, lr_schedule,
+                                      quantize_q8)
+from repro.training.train_loop import LoopCfg, SeekableData, run
+
+
+# ---------------------------------------------------------------------------
+# quantisation
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 300), st.floats(0.01, 100.0),
+       st.integers(0, 2 ** 31 - 1))
+def test_q8_roundtrip_error_bound(rows, cols, scale, seed):
+    """Block-quantised roundtrip error ≤ blockmax/254 per element."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(rows, cols)).astype(np.float32) * scale)
+    xr = dequantize_q8(quantize_q8(x), x.shape)
+    blockmax = float(jnp.max(jnp.abs(x)))
+    assert float(jnp.max(jnp.abs(x - xr))) <= blockmax / 127.0 + 1e-7
+
+
+def test_quantized_adam_tracks_exact_adam():
+    """8-bit state optimizer converges to the same optimum on a convex
+    problem (within quantisation noise)."""
+    W = jax.random.normal(jax.random.PRNGKey(0), (6, 1))
+
+    def loss(params, X):
+        return jnp.mean((X @ params["w"] - X @ W) ** 2)
+
+    X = jax.random.normal(jax.random.PRNGKey(1), (128, 6))
+    results = {}
+    for quant in (False, True):
+        cfg = AdamWCfg(lr=0.03, weight_decay=0.0, quantize_state=quant,
+                       warmup_steps=5, total_steps=400)
+        params = {"w": jnp.zeros((6, 1))}
+        state = adamw_init(params, cfg)
+        for _ in range(150):
+            g = jax.grad(loss)(params, X)
+            params, state, _ = adamw_update(g, state, params, cfg)
+        results[quant] = float(loss(params, X))
+    assert results[True] < 1e-2
+    assert results[False] < 1e-3
+
+
+def test_lr_schedule_shape():
+    cfg = AdamWCfg(lr=1.0, warmup_steps=10, total_steps=100,
+                   min_lr_frac=0.1)
+    lrs = [float(lr_schedule(cfg, jnp.asarray(s))) for s in range(0, 101, 5)]
+    assert lrs[0] == 0.0
+    assert abs(max(lrs) - 1.0) < 0.15        # peaks near warmup end
+    assert abs(lrs[-1] - 0.1) < 1e-3         # decays to min_lr_frac
+    assert all(a >= b - 1e-9 for a, b in zip(lrs[2:], lrs[3:]))  # mono dec
+
+
+def test_grad_clip_applied():
+    cfg = AdamWCfg(grad_clip=1.0)
+    params = {"w": jnp.zeros(4)}
+    state = adamw_init(params, cfg)
+    g = {"w": jnp.full(4, 100.0)}
+    _, _, m = adamw_update(g, state, params, cfg)
+    assert float(m["grad_norm"]) > 1.0   # pre-clip norm reported
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / restart
+# ---------------------------------------------------------------------------
+
+def _make_problem():
+    W = jax.random.normal(jax.random.PRNGKey(42), (5, 1))
+
+    def make_batch(step):
+        k = jax.random.PRNGKey(1000 + step)
+        X = jax.random.normal(k, (16, 5))
+        return {"x": X, "y": X @ W}
+
+    def loss_fn(params, batch):
+        l = jnp.mean((batch["x"] @ params["w"] - batch["y"]) ** 2)
+        return l, {"mse": l}
+
+    return make_batch, loss_fn
+
+
+def test_restart_is_bit_exact(tmp_path):
+    """5 steps + restart + 5 steps == 10 straight steps."""
+    make_batch, loss_fn = _make_problem()
+    opt = AdamWCfg(lr=0.05, weight_decay=0.0, warmup_steps=0,
+                   total_steps=1000, min_lr_frac=1.0)
+    p0 = {"w": jnp.zeros((5, 1))}
+
+    straight, _, rep_s = run(loss_fn, p0, SeekableData(make_batch), opt,
+                             LoopCfg(total_steps=10, ckpt_every=100))
+
+    d = tmp_path / "ck"
+    run(loss_fn, p0, SeekableData(make_batch), opt,
+        LoopCfg(total_steps=5, ckpt_every=5, ckpt_dir=str(d)))
+    resumed, _, rep_r = run(loss_fn, p0, SeekableData(make_batch), opt,
+                            LoopCfg(total_steps=10, ckpt_every=5,
+                                    ckpt_dir=str(d)))
+    assert rep_r.resumed_from == 5
+    np.testing.assert_array_equal(np.asarray(straight["w"]),
+                                  np.asarray(resumed["w"]))
+
+
+def test_preemption_saves_and_resumes(tmp_path):
+    make_batch, loss_fn = _make_problem()
+    opt = AdamWCfg(lr=0.05, weight_decay=0.0)
+    p0 = {"w": jnp.zeros((5, 1))}
+    d = tmp_path / "ck"
+    counter = {"n": 0}
+
+    def preempt():
+        counter["n"] += 1
+        return counter["n"] > 3     # preempt after 3 steps
+
+    _, _, rep = run(loss_fn, p0, SeekableData(make_batch), opt,
+                    LoopCfg(total_steps=50, ckpt_every=100,
+                            ckpt_dir=str(d)), preempt_flag=preempt)
+    assert rep.preempted
+    assert C.latest_step(d) == rep.final_step
+    _, _, rep2 = run(loss_fn, p0, SeekableData(make_batch), opt,
+                     LoopCfg(total_steps=6, ckpt_every=100,
+                             ckpt_dir=str(d)))
+    assert rep2.resumed_from == rep.final_step
+    assert rep2.final_step == 6
+
+
+def test_atomic_commit_never_leaves_partial(tmp_path):
+    tree = {"a": jnp.arange(10), "b": {"c": jnp.ones((3, 3))}}
+    C.save_checkpoint(tmp_path, 1, tree)
+    C.save_checkpoint(tmp_path, 2, tree)
+    # a .tmp dir from a "crashed" save must be invisible
+    (tmp_path / "step_3.tmp").mkdir()
+    assert C.latest_step(tmp_path) == 2
+    step, loaded = C.load_checkpoint(tmp_path, template=tree)
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(loaded["a"]), np.arange(10))
+
+
+def test_checkpoint_validates_structure(tmp_path):
+    tree = {"a": jnp.arange(4)}
+    C.save_checkpoint(tmp_path, 1, tree)
+    with pytest.raises(ValueError):
+        C.load_checkpoint(tmp_path, template={"b": jnp.arange(4)})
+    with pytest.raises(ValueError):
+        C.load_checkpoint(tmp_path, template={"a": jnp.arange(5)})
+
+
+def test_prune_keeps_latest(tmp_path):
+    tree = {"a": jnp.zeros(2)}
+    for s in (1, 2, 3, 4, 5):
+        C.save_checkpoint(tmp_path, s, tree)
+    C.prune_checkpoints(tmp_path, keep=2)
+    assert C.latest_step(tmp_path) == 5
+    steps = sorted(int(p.name.split("_")[1])
+                   for p in tmp_path.iterdir() if p.name.startswith("step_"))
+    assert steps == [4, 5]
+
+
+def test_straggler_detection():
+    make_batch, loss_fn = _make_problem()
+
+    class SlowData(SeekableData):
+        def batch(self, step):
+            if step == 12:
+                time.sleep(0.3)     # inject a straggler
+            return self.make_batch(step)
+
+    opt = AdamWCfg(lr=0.01)
+    _, _, rep = run(loss_fn, {"w": jnp.zeros((5, 1))},
+                    SlowData(make_batch), opt,
+                    LoopCfg(total_steps=20, straggler_factor=3.0))
+    assert 12 in rep.straggler_steps
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+def test_error_feedback_accumulates_dropped_mass():
+    g = {"w": jnp.asarray([1.0, 0.01, 0.02, 2.0])}
+    cfg = CompressionCfg(kind="topk", topk_frac=0.5)
+    ef = ef_init(g)
+    sent, ef = compress_tree(g, ef, cfg)
+    # top-2 kept, small entries in the residual
+    np.testing.assert_allclose(np.asarray(sent["w"]), [1.0, 0, 0, 2.0])
+    np.testing.assert_allclose(np.asarray(ef["w"]), [0, 0.01, 0.02, 0])
+    # next round the residual is re-injected
+    sent2, ef2 = compress_tree(
+        {"w": jnp.asarray([0.0, 0.03, 0.0, 0.0])}, ef, cfg)
+    np.testing.assert_allclose(np.asarray(sent2["w"]), [0, 0.04, 0.02, 0],
+                               atol=1e-7)
+
+
+@pytest.mark.parametrize("kind", ["q8", "topk"])
+def test_compressed_training_still_converges(kind):
+    make_batch, loss_fn = _make_problem()
+    opt = AdamWCfg(lr=0.05, weight_decay=0.0, warmup_steps=0,
+                   total_steps=1000, min_lr_frac=1.0)
+    comp = CompressionCfg(kind=kind, topk_frac=0.25)
+    _, _, rep = run(loss_fn, {"w": jnp.zeros((5, 1))},
+                    SeekableData(make_batch), opt,
+                    LoopCfg(total_steps=80, compression=comp))
+    assert rep.losses[-1] < 0.02, rep.losses[-5:]
+
+
+def test_compression_ratio_values():
+    assert compression_ratio(CompressionCfg("q8")) < 0.27
+    assert compression_ratio(CompressionCfg("topk", 0.01)) == 0.02
+    assert compression_ratio(CompressionCfg("none")) == 1.0
