@@ -1,9 +1,12 @@
 """Fig 1/2: p95 latency vs offered QPS per method under Poisson
 arrivals through the concurrent server — the paper's serving
 methodology (client-observed latency includes queueing; saturation
-knee at the service-rate reciprocal)."""
+knee at the service-rate reciprocal) — plus a throughput-vs-batch-size
+sweep for the cross-query micro-batcher."""
 
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
@@ -13,6 +16,7 @@ from repro.serving.loadgen import run_poisson_load
 from repro.serving.server import RetrievalServer
 
 METHODS = ["splade", "rerank", "hybrid", "colbert"]
+BATCH_SIZES = (1, 4, 16)
 
 
 def _requests(corpus, method, n):
@@ -60,6 +64,35 @@ def measure(name: str = "marco", n_queries: int = 60,
     return out
 
 
+def measure_batch_sweep(name: str = "marco", method: str = "hybrid",
+                        n_queries: int = 96,
+                        batch_sizes=BATCH_SIZES):
+    """Offline throughput (QPS) of the micro-batched server at several
+    ``max_batch`` settings, all requests offered up-front so the batcher
+    coalesces maximally. max_batch=1 is the sequential baseline."""
+    corpus, index, sidx, retr = dataset(name, mode="mmap")
+    out = {}
+    for bs in batch_sizes:
+        srv = RetrievalServer(ServeEngine(retr), n_threads=1, max_batch=bs,
+                              batch_timeout_ms=4.0)
+        srv.start()
+        for r in _requests(corpus, method, 8):      # warm single-query path
+            srv.submit(r).result(timeout=300)
+        # warm the batched bucket: a burst deep enough to coalesce fully
+        for f in [srv.submit(r) for r in _requests(corpus, method, 2 * bs)]:
+            f.result(timeout=600)
+        t0 = time.perf_counter()
+        futs = [srv.submit(r) for r in _requests(corpus, method, n_queries)]
+        for f in futs:
+            f.result(timeout=600)
+        wall = time.perf_counter() - t0
+        srv.stop()
+        out[bs] = {"qps": n_queries / wall, "wall_s": wall}
+        print(f"batch={bs:3d}  qps={out[bs]['qps']:7.1f}  "
+              f"wall={wall * 1e3:7.1f}ms")
+    return out
+
+
 def main(quick: bool = False):
     table = {"marco": measure("marco", n_queries=40 if quick else 60)}
     if not quick:
@@ -73,6 +106,11 @@ def main(quick: bool = False):
         for m in METHODS:
             pts = res[m]["points"]
             assert pts[-1]["p95"] > 1.5 * pts[0]["p95"], (name, m)
+    sweep = measure_batch_sweep("marco",
+                                n_queries=48 if quick else 96)
+    table["marco"]["batch_sweep"] = {str(b): v for b, v in sweep.items()}
+    # cross-query batching must pay for itself once the batch is deep
+    assert sweep[16]["qps"] >= sweep[1]["qps"], sweep
     save("latency_fig12", table)
     return table
 

@@ -14,6 +14,7 @@ import pathlib
 import sys
 import tempfile
 import threading
+import time
 
 sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))
 
@@ -54,11 +55,17 @@ def main():
     ap.add_argument("--method", default="hybrid")
     ap.add_argument("--n", type=int, default=50)
     ap.add_argument("--threads", type=int, default=1)
+    ap.add_argument("--max-batch", type=int, default=1,
+                    help="micro-batch size (1 = request-at-a-time)")
+    ap.add_argument("--batch-timeout-ms", type=float, default=2.0,
+                    help="max wait to coalesce a micro-batch")
     args = ap.parse_args()
 
     print("building index + retriever ...")
     corpus, retr = build_stack()
-    server = RetrievalServer(ServeEngine(retr), n_threads=args.threads)
+    server = RetrievalServer(ServeEngine(retr), n_threads=args.threads,
+                             max_batch=args.max_batch,
+                             batch_timeout_ms=args.batch_timeout_ms)
     server.start()
 
     def reqs(n):
@@ -71,16 +78,29 @@ def main():
     # warm up + measure capacity
     for r in reqs(8):
         server.submit(r).result(timeout=120)
-    svc = np.mean([server.submit(r).result(timeout=120).service_time
-                   for r in reqs(8)])
-    cap = 1.0 / svc
+    if args.max_batch > 1:
+        # warm the coalesced batch shapes, then measure capacity as burst
+        # throughput — a lone probe request would pay the full
+        # batch_timeout_ms coalescing window and understate capacity
+        for f in [server.submit(r) for r in reqs(2 * args.max_batch)]:
+            f.result(timeout=120)
+        n_cap = 4 * args.max_batch
+        t0 = time.perf_counter()
+        for f in [server.submit(r) for r in reqs(n_cap)]:
+            f.result(timeout=120)
+        cap = n_cap / (time.perf_counter() - t0)
+        svc = 1.0 / cap
+    else:
+        svc = np.mean([server.submit(r).result(timeout=120).service_time
+                       for r in reqs(8)])
+        cap = 1.0 / svc
     print(f"service time {svc * 1e3:.1f} ms → capacity ≈ {cap:.1f} QPS "
-          f"({args.threads} thread(s))\n")
+          f"({args.threads} thread(s), max_batch={args.max_batch})\n")
     print(f"{'offered':>10s} {'p50':>9s} {'p95':>9s} {'p99':>9s} "
           f"{'achieved':>9s}")
     for frac in (0.3, 0.6, 0.9, 1.5):
         res = run_poisson_load(server, reqs(args.n), qps=cap * frac,
-                               seed=0)
+                               seed=0, burst=args.max_batch)
         s = res.summary()
         print(f"{s['offered_qps']:8.1f}/s {s['p50'] * 1e3:7.1f}ms "
               f"{s['p95'] * 1e3:7.1f}ms {s['p99'] * 1e3:7.1f}ms "

@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# Tier-1 verification — run this per PR; regressions here block merge.
+# Mirrors ROADMAP.md's "Tier-1 verify" command.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q "$@"

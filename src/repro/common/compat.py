@@ -1,0 +1,33 @@
+"""Version-compatibility shims for the installed jax.
+
+``jax.sharding.AxisType`` (explicit/auto mesh axis types) only exists on
+newer jax releases; the pinned 0.4.x raises ``AttributeError`` on access.
+Every mesh construction in the repo goes through :func:`make_mesh` so the
+``axis_types`` kwarg is passed exactly when the runtime supports it.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def has_axis_type() -> bool:
+    return getattr(jax.sharding, "AxisType", None) is not None
+
+
+def mesh_axis_types_kwargs(n_axes: int) -> dict:
+    """``{"axis_types": (AxisType.Auto,) * n_axes}`` when supported, else
+    ``{}`` — splat into ``jax.make_mesh`` calls."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
+def make_mesh(shape, axis_names, *, devices=None):
+    """``jax.make_mesh`` with Auto axis types on jax versions that have
+    them and plain construction on those that don't."""
+    kwargs = mesh_axis_types_kwargs(len(tuple(shape)))
+    if devices is not None:
+        kwargs["devices"] = devices
+    return jax.make_mesh(shape, axis_names, **kwargs)

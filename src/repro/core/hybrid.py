@@ -43,12 +43,23 @@ def linear_scale(x, mask):
 NORMALIZERS = {"znorm": znorm, "minmax": minmax_norm, "linear": linear_scale}
 
 
-def hybrid_scores(splade_scores, colbert_scores, mask, *, alpha: float,
+def hybrid_scores(splade_scores, colbert_scores, mask, *, alpha,
                   normalizer: str = "znorm"):
     """Both score arrays: (..., C) aligned on the same candidate list.
-    α = 0 → pure Rerank (ColBERT order); α = 1 → pure SPLADE."""
+    α = 0 → pure Rerank (ColBERT order); α = 1 → pure SPLADE.
+
+    ``alpha`` is a scalar, or — for batched (B, C) inputs — a (B,) array
+    of per-query interpolation weights."""
     norm = NORMALIZERS[normalizer]
+    # padded slots may carry -inf (e.g. rerank scores for -1 pids);
+    # zero them before the stats so 0·(-inf)=NaN cannot poison the
+    # masked mean/std — they are re-masked to -inf on the way out
+    splade_scores = jnp.where(mask, splade_scores, 0.0)
+    colbert_scores = jnp.where(mask, colbert_scores, 0.0)
     ns = norm(splade_scores, mask)
     nc = norm(colbert_scores, mask)
+    alpha = jnp.asarray(alpha, jnp.float32)
+    if alpha.ndim:
+        alpha = alpha[..., None]          # broadcast over the C axis
     out = alpha * ns + (1.0 - alpha) * nc
     return jnp.where(mask, out, -jnp.inf)

@@ -38,9 +38,9 @@ class MultiStageRetriever:
 
     # ------------------------------------------------------------------
     def run_splade(self, term_ids, term_weights, k: Optional[int] = None):
-        return self.splade.score_host(np.asarray(term_ids),
-                                      np.asarray(term_weights),
-                                      k or self.params.first_k)
+        return self.splade.score_host(
+            np.asarray(term_ids), np.asarray(term_weights),
+            self.params.first_k if k is None else k)
 
     # ------------------------------------------------------------------
     def search(self, method: str, q_emb=None, term_ids=None,
@@ -48,7 +48,7 @@ class MultiStageRetriever:
                k: Optional[int] = None):
         """Returns (pids (k,), scores (k,)), -1 padded, descending."""
         p = self.params
-        k = k or p.k
+        k = p.k if k is None else k
         alpha = p.alpha if alpha is None else alpha
 
         if method == "colbert":
@@ -73,3 +73,89 @@ class MultiStageRetriever:
         order = np.argsort(-final, kind="stable")[:k]
         out_pids = np.where(final[order] > -np.inf, pids[order], -1)
         return out_pids, final[order]
+
+    # ------------------------------------------------------------------
+    def search_batch(self, method, q_embs=None, term_ids=None,
+                     term_weights=None, alpha=None, k: Optional[int] = None):
+        """Cross-query batched retrieval over any of the four methods.
+
+        ``method``: one method name for the whole batch, or a sequence of
+        per-query names (mixed batches are grouped and each group runs
+        batched). ``q_embs``/``term_ids``/``term_weights``: per-query
+        sequences (ragged lengths fine). ``alpha``: scalar, per-query
+        sequence, or None (per-params default). Returns
+        (pids (B, k), scores (B, k)) matching per-query :meth:`search`.
+        """
+        p = self.params
+        k = p.k if k is None else k
+        n = len(q_embs) if q_embs is not None else len(term_ids)
+
+        if not isinstance(method, str):
+            methods = list(method)
+            if len(set(methods)) > 1:
+                return self._search_batch_mixed(methods, q_embs, term_ids,
+                                                term_weights, alpha, k)
+            method = methods[0]
+
+        alphas = self._alpha_array(alpha, n)
+
+        if method == "colbert":
+            pids, scores, _ = self.searcher.search_batch(q_embs, k=k)
+            return pids, scores
+
+        # SPLADE first stage: host CSR scoring per query (the PISA tier)
+        sp = [self.run_splade(term_ids[i], term_weights[i], p.first_k)
+              for i in range(n)]
+        pids_b = np.stack([x[0] for x in sp])          # (B, first_k)
+        s_scores = np.stack([x[1] for x in sp])
+        if method == "splade":
+            return pids_b[:, :k], s_scores[:, :k]
+
+        # batched ColBERT rescoring: one dedup gather + one dispatch
+        c_scores = self.searcher.rerank_batch(q_embs, pids_b)
+        mask = pids_b >= 0
+        if method == "rerank":
+            final = np.where(mask, c_scores, -np.inf)
+        elif method == "hybrid":
+            final = np.asarray(hybrid_mod.hybrid_scores(
+                jnp.asarray(s_scores), jnp.asarray(c_scores),
+                jnp.asarray(mask), alpha=jnp.asarray(alphas),
+                normalizer=p.normalizer))
+        else:
+            raise ValueError(method)
+
+        order = np.argsort(-final, axis=1, kind="stable")[:, :k]
+        sorted_final = np.take_along_axis(final, order, axis=1)
+        out_pids = np.where(sorted_final > -np.inf,
+                            np.take_along_axis(pids_b, order, axis=1), -1)
+        return out_pids, sorted_final
+
+    def _alpha_array(self, alpha, n: int) -> np.ndarray:
+        if alpha is None:
+            return np.full(n, self.params.alpha, np.float32)
+        if np.ndim(alpha) == 0:
+            return np.full(n, float(alpha), np.float32)
+        return np.asarray([self.params.alpha if a is None else float(a)
+                           for a in alpha], np.float32)
+
+    def _search_batch_mixed(self, methods, q_embs, term_ids, term_weights,
+                            alpha, k: int):
+        """Group a mixed-method batch by method, run each group batched,
+        and scatter results back into request order."""
+        n = len(methods)
+        alphas = self._alpha_array(alpha, n)
+        out_pids = np.full((n, k), -1, np.int64)
+        out_scores = np.full((n, k), -np.inf, np.float32)
+        for m in dict.fromkeys(methods):
+            idx = [i for i, mi in enumerate(methods) if mi == m]
+            pick = (lambda seq: None if seq is None
+                    else [seq[i] for i in idx])
+            pids, scores = self.search_batch(
+                m, q_embs=pick(q_embs), term_ids=pick(term_ids),
+                term_weights=pick(term_weights), alpha=alphas[idx], k=k)
+            # splade-first groups return min(k, first_k) columns — scatter
+            # into the prefix, leaving the (-1, -inf) tail as padding
+            w = pids.shape[1]
+            out_pids[idx, :w] = pids
+            out_scores[idx, :w] = scores
+        return out_pids, out_scores

@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.index.builder import ColBERTIndex
 from repro.index.residual import unpack_codes
+from repro.kernels.decompress_maxsim.ops import decompress_maxsim_scores_batch
 from repro.models.colbert import maxsim
 
 
@@ -89,6 +90,82 @@ def stage4_exact_score(q_emb, packed, cids, valid, centroids,
 
 
 # --------------------------------------------------------------------------
+# batched stage kernels (cross-query micro-batches)
+# --------------------------------------------------------------------------
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1).bit_length())
+
+
+def pad_query_batch(q_embs, lq_multiple: int = 4):
+    """Stack ragged queries. q_embs: sequence of (Lq_i, d) arrays or an
+    already-stacked (B, Lq, d) array → ((B, Lq_pad, d) f32 zero-padded,
+    (B, Lq_pad) bool validity).
+
+    ``Lq_pad`` rounds the longest query up to ``lq_multiple`` so ragged
+    batches reuse a small set of compiled shapes instead of recompiling
+    the batched stages per distinct length."""
+    arrs = [np.asarray(qe, np.float32) for qe in q_embs]
+    d = arrs[0].shape[-1]
+    lq_pad = -(-max(a.shape[0] for a in arrs) // lq_multiple) * lq_multiple
+    q = np.zeros((len(arrs), lq_pad, d), np.float32)
+    valid = np.zeros((len(arrs), lq_pad), bool)
+    for i, a in enumerate(arrs):
+        q[i, :a.shape[0]] = a
+        valid[i, :a.shape[0]] = True
+    return jnp.asarray(q), jnp.asarray(valid)
+
+
+def _pad_batch_rows(q, q_valid, *extra):
+    """Pad the batch dim to the next power of two by replicating the
+    last real row (of ``q``/``q_valid`` and each array in ``extra``), so
+    compiled batched stages are reused across nearby batch sizes and the
+    padding rows add no new pids to the deduplicated host gathers.
+    Returns (B_real, q, q_valid, *extra)."""
+    B = q.shape[0]
+    Bp = _next_pow2(B)
+    if Bp == B:
+        return (B, q, q_valid) + extra
+    reps = Bp - B
+
+    def pad(x):
+        if isinstance(x, np.ndarray):
+            return np.concatenate([x, np.repeat(x[-1:], reps, axis=0)],
+                                  axis=0)
+        return jnp.concatenate([x, jnp.repeat(x[-1:], reps, axis=0)],
+                               axis=0)
+
+    return (B, pad(q), pad(q_valid)) + tuple(pad(x) for x in extra)
+
+
+@functools.partial(jax.jit, static_argnames=("nprobe",))
+def stage1_centroid_probe_batch(q_emb, q_valid, centroids, nprobe: int):
+    """q_emb (B, Lq, d), q_valid (B, Lq), centroids (K, d) →
+    (scores_c (B, Lq, K), cids (B, Lq, nprobe))."""
+    s = jnp.einsum("bqd,kd->bqk", q_emb, centroids,
+                   preferred_element_type=jnp.float32)
+    _, cids = jax.lax.top_k(s, nprobe)
+    # padded query tokens must not widen the candidate set: replicate the
+    # first (always-real) token's probes, which add nothing new
+    cids = jnp.where(q_valid[..., None], cids, cids[:, :1, :])
+    return s, cids.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("cap",))
+def stage2_candidates_batch(ivf_padded, cids, cap: int):
+    """cids (B, Lq, nprobe) → per-query unique candidates (B, cap)."""
+    return jax.vmap(lambda c: stage2_candidates(ivf_padded, c, cap))(cids)
+
+
+@jax.jit
+def stage3_approx_score_batch(scores_c, cand_codes, cand_valid, q_valid):
+    """Batched centroid-interaction approximation: scores_c (B, Lq, K),
+    cand_codes/cand_valid (B, C, Ld), q_valid (B, Lq) → (B, C)."""
+    return jax.vmap(stage3_approx_score)(scores_c, cand_codes, cand_valid,
+                                         q_valid.astype(jnp.float32))
+
+
+# --------------------------------------------------------------------------
 # Orchestrator
 # --------------------------------------------------------------------------
 
@@ -113,7 +190,7 @@ class PLAIDSearcher:
     def search(self, q_emb: np.ndarray, k: Optional[int] = None):
         """q_emb: (Lq, dim). Returns (pids (k,), scores (k,)) desc."""
         p = self.params
-        k = k or p.k
+        k = p.k if k is None else k
         q = jnp.asarray(q_emb)
         scores_c, cids = stage1_centroid_probe(q, self.centroids, p.nprobe)
         cand = stage2_candidates(self.ivf_padded, cids, p.candidate_cap)
@@ -121,10 +198,11 @@ class PLAIDSearcher:
         cand_np = np.asarray(cand)
         n_real = int((cand_np >= 0).sum())
         if self.device_resident:
-            codes, packed, valid = self._gather_device(cand)
+            codes, _, valid = self._gather_device(cand)
         else:
-            codes_np, packed_np, valid_np = \
-                self.index.gather_doc_tokens(cand_np)
+            # codes-only gather: the approximate stage must not fault
+            # residual mmap pages (the paper's access-minimisation claim)
+            codes_np, valid_np = self.index.gather_doc_codes(cand_np)
             codes, valid = jnp.asarray(codes_np), jnp.asarray(valid_np)
 
         approx = stage3_approx_score(scores_c, codes, valid)
@@ -156,6 +234,65 @@ class PLAIDSearcher:
         out_scores[:k_eff] = np.asarray(top_s)
         return out_pids, out_scores, {"candidates": n_real}
 
+    # -- batched full PLAID (stages 1-4 over a query micro-batch) ----------
+    def search_batch(self, q_embs, k: Optional[int] = None):
+        """Cross-query batched PLAID. q_embs: sequence of (Lq_i, dim)
+        arrays (ragged lengths fine) or a stacked (B, Lq, dim) array.
+        Returns (pids (B, k), scores (B, k), aux list) — per-query
+        results identical to :meth:`search` within fp tolerance.
+
+        Host candidate gathers are deduplicated across the batch, so
+        co-batched queries share mmap page touches; device stages run on
+        stacked (B, ...) inputs in a single dispatch each."""
+        p = self.params
+        k = p.k if k is None else k
+        q, q_valid = pad_query_batch(q_embs)
+        B, q, q_valid = _pad_batch_rows(q, q_valid)
+
+        scores_c, cids = stage1_centroid_probe_batch(q, q_valid,
+                                                     self.centroids, p.nprobe)
+        cand = stage2_candidates_batch(self.ivf_padded, cids,
+                                       p.candidate_cap)       # (Bp, cap)
+        cand_np = np.asarray(cand)
+        n_real = (cand_np[:B] >= 0).sum(axis=1)
+
+        if self.device_resident:
+            codes, _, valid = self._gather_device_batch(cand)
+        else:
+            codes_np, _, valid_np = self._dedup_gather(cand_np,
+                                                       codes_only=True)
+            codes, valid = jnp.asarray(codes_np), jnp.asarray(valid_np)
+
+        approx = stage3_approx_score_batch(scores_c, codes, valid, q_valid)
+        approx = jnp.where(cand >= 0, approx, -jnp.inf)
+        ndocs = min(p.ndocs, p.candidate_cap)
+        _, keep = jax.lax.top_k(approx, ndocs)
+        final_pids = jnp.take_along_axis(cand, keep, axis=1)  # (B, ndocs)
+
+        if self.device_resident:
+            f_codes, f_packed, f_valid = self._gather_device_batch(final_pids)
+        else:
+            # the only residual access — one deduplicated gather for the
+            # whole batch (shared pages accounted once)
+            c_np, r_np, v_np = self._dedup_gather(np.asarray(final_pids),
+                                                  codes_only=False)
+            f_codes, f_packed, f_valid = (jnp.asarray(c_np),
+                                          jnp.asarray(r_np),
+                                          jnp.asarray(v_np))
+
+        exact = decompress_maxsim_scores_batch(
+            q, f_packed, f_codes.astype(jnp.int32), f_valid, self.centroids,
+            self.bucket_weights, nbits=self.index.nbits, q_valid=q_valid)
+        exact = jnp.where(final_pids >= 0, exact, -jnp.inf)
+        k_eff = min(k, ndocs)
+        top_s, idx = jax.lax.top_k(exact, k_eff)
+        out_pids = np.full((B, k), -1, np.int64)
+        out_scores = np.full((B, k), -np.inf, np.float32)
+        out_pids[:, :k_eff] = np.asarray(
+            jnp.take_along_axis(final_pids, idx, axis=1))[:B]
+        out_scores[:, :k_eff] = np.asarray(top_s)[:B]
+        return out_pids, out_scores, [{"candidates": int(n)} for n in n_real]
+
     # -- rerank-only (stage 4 on external candidates) ----------------------
     def rerank(self, q_emb: np.ndarray, pids: np.ndarray):
         """Exact MaxSim for given candidates (the paper's Rerank path).
@@ -171,6 +308,49 @@ class PLAIDSearcher:
                                     self.bucket_weights, self.index.nbits)
         return np.asarray(jnp.where(jnp.asarray(pids) >= 0, scores, -jnp.inf))
 
+    # -- batched rerank (stage 4 over a query micro-batch) -----------------
+    def rerank_batch(self, q_embs, pids: np.ndarray):
+        """Exact MaxSim for per-query candidate lists. q_embs: sequence of
+        (Lq_i, dim) arrays or stacked (B, Lq, dim); pids: (B, C) (−1 pad).
+        Returns scores (B, C) aligned with pids — one residual gather
+        (deduplicated across the batch) and one scoring dispatch."""
+        q, q_valid = pad_query_batch(q_embs)
+        pids = np.asarray(pids)
+        B, q, q_valid, pids_p = _pad_batch_rows(q, q_valid, pids)
+        if self.device_resident:
+            codes, packed, valid = self._gather_device_batch(
+                jnp.asarray(pids_p))
+        else:
+            c_np, r_np, v_np = self._dedup_gather(pids_p, codes_only=False)
+            codes, packed, valid = (jnp.asarray(c_np), jnp.asarray(r_np),
+                                    jnp.asarray(v_np))
+        scores = decompress_maxsim_scores_batch(
+            q, packed, codes.astype(jnp.int32), valid, self.centroids,
+            self.bucket_weights, nbits=self.index.nbits, q_valid=q_valid)
+        return np.asarray(jnp.where(jnp.asarray(pids_p) >= 0, scores,
+                                    -jnp.inf))[:B]
+
+    # -- deduplicated host gather (shared mmap pages per batch) ------------
+    def _dedup_gather(self, pids_b: np.ndarray, *, codes_only: bool):
+        """pids_b (B, C) (−1 pad) → per-query (codes (B, C, Ld),
+        packed (B, C, Ld, pd) | None, valid (B, C, Ld)) through ONE
+        PagedStore gather over the deduplicated pid set, so co-batched
+        queries fault each index page at most once."""
+        real = pids_b[pids_b >= 0]
+        uniq = np.unique(real) if real.size else np.zeros(1, np.int64)
+        if codes_only:
+            codes_u, valid_u = self.index.gather_doc_codes(uniq)
+            packed_u = None
+        else:
+            codes_u, packed_u, valid_u = self.index.gather_doc_tokens(uniq)
+        pos = np.searchsorted(uniq, np.clip(pids_b, 0, None))
+        pos = np.minimum(pos, len(uniq) - 1)
+        mask = (pids_b >= 0)[..., None]
+        codes = codes_u[pos]
+        valid = valid_u[pos] & mask
+        packed = None if packed_u is None else packed_u[pos]
+        return codes, packed, valid
+
     # -- device-resident gather --------------------------------------------
     def _gather_device(self, pids):
         idx = self.index
@@ -183,3 +363,11 @@ class PLAIDSearcher:
         valid = (jnp.arange(idx.doc_maxlen)[None, :] <
                  self.dev_doclens[safe][:, None]) & (pids >= 0)[:, None]
         return codes, packed, valid
+
+    def _gather_device_batch(self, pids):
+        """pids (B, C) → device arrays reshaped to (B, C, Ld[, pd])."""
+        B, C = pids.shape
+        codes, packed, valid = self._gather_device(pids.reshape(-1))
+        ld = self.index.doc_maxlen
+        return (codes.reshape(B, C, ld), packed.reshape(B, C, ld, -1),
+                valid.reshape(B, C, ld))

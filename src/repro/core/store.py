@@ -45,14 +45,18 @@ def rss_bytes() -> int:
 class AccessStats:
     gathers: int = 0
     tokens_read: int = 0
-    pages_touched: int = 0
-    unique_pages: Optional[set] = None
+    pages_touched: int = 0            # residual pages, cumulative
+    unique_pages: Optional[set] = None  # residual pages, deduplicated
+    residual_gathers: int = 0         # gathers that faulted residual rows
+    residual_tokens_read: int = 0     # rows read from the residual file
 
     def reset(self):
         self.gathers = 0
         self.tokens_read = 0
         self.pages_touched = 0
         self.unique_pages = set()
+        self.residual_gathers = 0
+        self.residual_tokens_read = 0
 
 
 class PagedStore:
@@ -95,17 +99,33 @@ class PagedStore:
 
     def gather_ranges(self, starts: np.ndarray, length: int):
         """Uniform-stride gather: rows [s, s+length) per start (clamped)."""
-        idx = starts[:, None] + np.arange(length)[None, :]
-        idx = np.minimum(idx, self.n_tokens - 1)
-        flat = idx.reshape(-1)
+        flat = self._range_ids(starts, length)
         res = self.residuals[flat].reshape(len(starts), length, self.packed_dim)
         cds = self.codes[flat].reshape(len(starts), length)
         self._account(flat)
         return cds, res
 
-    def _account(self, token_ids):
+    def gather_codes_ranges(self, starts: np.ndarray, length: int):
+        """Codes-only uniform-stride gather for the approximate stage:
+        reads centroid ids and *never touches a residual page* — the
+        access pattern the paper's stage 3 relies on in mmap mode."""
+        flat = self._range_ids(starts, length)
+        cds = self.codes[flat].reshape(len(starts), length)
+        self._account(flat, residuals=False)
+        return cds
+
+    def _range_ids(self, starts: np.ndarray, length: int):
+        idx = starts[:, None] + np.arange(length)[None, :]
+        idx = np.minimum(idx, self.n_tokens - 1)
+        return idx.reshape(-1)
+
+    def _account(self, token_ids, residuals: bool = True):
         self.stats.gathers += 1
         self.stats.tokens_read += int(token_ids.size)
+        if not residuals:
+            return
+        self.stats.residual_gathers += 1
+        self.stats.residual_tokens_read += int(token_ids.size)
         # which 4 KiB pages of residuals.bin do these rows touch?
         byte_lo = token_ids.astype(np.int64) * self.packed_dim
         pages = np.unique(byte_lo // PAGE_BYTES)

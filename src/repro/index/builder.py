@@ -118,6 +118,19 @@ class ColBERTIndex:
         safe = np.clip(pids, 0, self.n_docs - 1)
         starts = self.doc_offsets[safe]
         cds, res = self.store.gather_ranges(starts, self.doc_maxlen)
+        valid = self._doc_valid(pids, safe)
+        return cds, res, valid
+
+    def gather_doc_codes(self, pids: np.ndarray):
+        """→ (cids (C, Ld), valid (C, Ld)): centroid ids only, for the
+        codes-only approximate stage. Touches zero residual pages."""
+        pids = np.asarray(pids)
+        safe = np.clip(pids, 0, self.n_docs - 1)
+        starts = self.doc_offsets[safe]
+        cds = self.store.gather_codes_ranges(starts, self.doc_maxlen)
+        return cds, self._doc_valid(pids, safe)
+
+    def _doc_valid(self, pids, safe):
         valid = (np.arange(self.doc_maxlen)[None, :] < self.doclens[safe][:, None])
         valid &= (pids >= 0)[:, None]
-        return cds, res, valid
+        return valid

@@ -1,4 +1,9 @@
-from repro.kernels.decompress_maxsim.ops import decompress_maxsim_scores
-from repro.kernels.decompress_maxsim.ref import decompress_maxsim_ref
+from repro.kernels.decompress_maxsim.ops import (
+    decompress_maxsim_scores,
+    decompress_maxsim_scores_batch,
+)
+from repro.kernels.decompress_maxsim.ref import (decompress_maxsim_batch_ref,
+                                                 decompress_maxsim_ref)
 
-__all__ = ["decompress_maxsim_scores", "decompress_maxsim_ref"]
+__all__ = ["decompress_maxsim_scores", "decompress_maxsim_scores_batch",
+           "decompress_maxsim_ref", "decompress_maxsim_batch_ref"]

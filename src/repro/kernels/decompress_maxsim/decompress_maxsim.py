@@ -61,16 +61,11 @@ def _decode_tile(packed, cids, centroids, weights_oh, nbits, gather):
     return base + res
 
 
-def _kernel(q_ref, packed_ref, cids_ref, valid_ref, qvalid_ref,
-            centroids_ref, weights_ref, out_ref, *, nbits, gather):
-    q = q_ref[...]                          # (Lq, d)
-    packed = packed_ref[...]                # (BC, Ld, d/cpb)
-    cids = cids_ref[...]                    # (BC, Ld)
-    valid = valid_ref[...]                  # (BC, Ld) int8
-    qv = qvalid_ref[...]                    # (Lq,) int8
-    centroids = centroids_ref[...]          # (K, d) — VMEM resident
-    weights = weights_ref[...]              # (2^nbits,)
-
+def _score_tile(q, packed, cids, valid, qv, centroids, weights, nbits,
+                gather):
+    """Shared kernel body: decode one (BC, Ld) tile in-VMEM and score it.
+    q (Lq, d); packed (BC, Ld, d/cpb); cids/valid (BC, Ld); qv (Lq,);
+    centroids (K, d); weights (2^nbits,) → (BC,) f32."""
     bc, ld = cids.shape
     emb = _decode_tile(packed.reshape(bc * ld, -1), cids.reshape(-1),
                        centroids, weights, nbits, gather)     # (BC·Ld, d)
@@ -82,7 +77,25 @@ def _kernel(q_ref, packed_ref, cids_ref, valid_ref, qvalid_ref,
     per_q = jnp.max(s, axis=-1)
     per_q = jnp.where(per_q <= NEG / 2, 0.0, per_q)
     per_q = per_q * (qv[:, None] != 0).astype(per_q.dtype)
-    out_ref[...] = jnp.sum(per_q, axis=0)
+    return jnp.sum(per_q, axis=0)
+
+
+def _kernel(q_ref, packed_ref, cids_ref, valid_ref, qvalid_ref,
+            centroids_ref, weights_ref, out_ref, *, nbits, gather):
+    out_ref[...] = _score_tile(q_ref[...], packed_ref[...], cids_ref[...],
+                               valid_ref[...], qvalid_ref[...],
+                               centroids_ref[...], weights_ref[...],
+                               nbits, gather)
+
+
+def _batch_kernel(q_ref, packed_ref, cids_ref, valid_ref, qvalid_ref,
+                  centroids_ref, weights_ref, out_ref, *, nbits, gather):
+    # leading grid axis walks the query batch; centroid/bucket tables
+    # stay batch-invariant VMEM residents
+    out_ref[0, :] = _score_tile(q_ref[0], packed_ref[0], cids_ref[0],
+                                valid_ref[0], qvalid_ref[0],
+                                centroids_ref[...], weights_ref[...],
+                                nbits, gather)
 
 
 @functools.partial(jax.jit,
@@ -110,5 +123,38 @@ def decompress_maxsim_pallas(q, packed, cids, valid, q_valid, centroids,
         ],
         out_specs=pl.BlockSpec((block_c,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((C,), jnp.float32),
+        interpret=interpret,
+    )(q, packed, cids, valid, q_valid, centroids, bucket_weights)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("nbits", "block_c", "gather", "interpret"))
+def decompress_maxsim_pallas_batch(q, packed, cids, valid, q_valid,
+                                   centroids, bucket_weights, *, nbits: int,
+                                   block_c: int = 16, gather: str = "take",
+                                   interpret: bool = False):
+    """Batched fused scoring: q (B, Lq, d); packed (B, C, Ld, pd);
+    cids/valid (B, C, Ld); q_valid (B, Lq) → (B, C). The whole batch is
+    one kernel launch — stage 4 scores B queries in one dispatch."""
+    B, C, Ld, pd = packed.shape
+    Lq, d = q.shape[1:]
+    K = centroids.shape[0]
+    assert C % block_c == 0
+    grid = (B, C // block_c)
+    kernel = functools.partial(_batch_kernel, nbits=nbits, gather=gather)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Lq, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, block_c, Ld, pd), lambda b, i: (b, i, 0, 0)),
+            pl.BlockSpec((1, block_c, Ld), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_c, Ld), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, Lq), lambda b, i: (b, 0)),
+            pl.BlockSpec((K, d), lambda b, i: (0, 0)),   # whole table
+            pl.BlockSpec((1 << nbits,), lambda b, i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c), lambda b, i: (b, i)),
+        out_shape=jax.ShapeDtypeStruct((B, C), jnp.float32),
         interpret=interpret,
     )(q, packed, cids, valid, q_valid, centroids, bucket_weights)

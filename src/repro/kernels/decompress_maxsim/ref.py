@@ -1,5 +1,8 @@
 """Pure-jnp oracle: residual decompression followed by MaxSim."""
 
+import functools
+
+import jax
 import jax.numpy as jnp
 
 from repro.index.residual import unpack_codes
@@ -15,3 +18,17 @@ def decompress_maxsim_ref(q, packed, cids, doc_valid, centroids,
     emb = centroids[cids] + bucket_weights[codes.astype(jnp.int32)]
     emb = emb * doc_valid[..., None]
     return maxsim_scores_ref(q, emb, doc_valid, q_valid)
+
+
+def decompress_maxsim_batch_ref(q, packed, cids, doc_valid, centroids,
+                                bucket_weights, nbits, q_valid=None):
+    """Leading-batch-dim oracle: q (B, Lq, d); packed (B, C, Ld, pd);
+    cids/doc_valid (B, C, Ld); q_valid optional (B, Lq) → (B, C) f32."""
+    fn = functools.partial(decompress_maxsim_ref, nbits=nbits)
+    if q_valid is None:
+        return jax.vmap(lambda a, b, c, d: fn(a, b, c, d, centroids,
+                                              bucket_weights))(
+            q, packed, cids, doc_valid)
+    return jax.vmap(lambda a, b, c, d, e: fn(a, b, c, d, centroids,
+                                             bucket_weights, q_valid=e))(
+        q, packed, cids, doc_valid, q_valid)

@@ -1,4 +1,6 @@
-from repro.kernels.maxsim.ops import maxsim_scores
-from repro.kernels.maxsim.ref import maxsim_scores_ref
+from repro.kernels.maxsim.ops import maxsim_scores, maxsim_scores_batch
+from repro.kernels.maxsim.ref import (maxsim_scores_batch_ref,
+                                      maxsim_scores_ref)
 
-__all__ = ["maxsim_scores", "maxsim_scores_ref"]
+__all__ = ["maxsim_scores", "maxsim_scores_batch", "maxsim_scores_ref",
+           "maxsim_scores_batch_ref"]

@@ -25,11 +25,9 @@ from jax.experimental import pallas as pl
 NEG = -1e30
 
 
-def _maxsim_kernel(q_ref, docs_ref, valid_ref, qvalid_ref, out_ref):
-    q = q_ref[...]                        # (Lq, d)
-    docs = docs_ref[...]                  # (BC, Ld, d)
-    valid = valid_ref[...]                # (BC, Ld) int8
-    qv = qvalid_ref[...]                  # (Lq,) int8  (padded query tokens)
+def _maxsim_tile(q, docs, valid, qv):
+    """Shared kernel body. q (Lq, d); docs (BC, Ld, d); valid (BC, Ld)
+    int8; qv (Lq,) int8 → (BC,) f32 partial scores."""
     bc, ld, d = docs.shape
     lq = q.shape[0]
 
@@ -42,7 +40,19 @@ def _maxsim_kernel(q_ref, docs_ref, valid_ref, qvalid_ref, out_ref):
     per_q = jnp.max(s, axis=-1)                       # (Lq, BC)
     per_q = jnp.where(per_q <= NEG / 2, 0.0, per_q)   # all-invalid docs
     per_q = per_q * (qv[:, None] != 0).astype(per_q.dtype)
-    out_ref[...] = jnp.sum(per_q, axis=0)             # (BC,)
+    return jnp.sum(per_q, axis=0)                     # (BC,)
+
+
+def _maxsim_kernel(q_ref, docs_ref, valid_ref, qvalid_ref, out_ref):
+    out_ref[...] = _maxsim_tile(q_ref[...], docs_ref[...], valid_ref[...],
+                                qvalid_ref[...])
+
+
+def _maxsim_batch_kernel(q_ref, docs_ref, valid_ref, qvalid_ref, out_ref):
+    # leading grid axis walks the query batch; blocks carry a size-1
+    # batch dim that is squeezed before the shared tile body
+    out_ref[0, :] = _maxsim_tile(q_ref[0], docs_ref[0], valid_ref[0],
+                                 qvalid_ref[0])
 
 
 @functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
@@ -65,5 +75,33 @@ def maxsim_pallas(q, docs, doc_valid, q_valid, *, block_c: int = 16,
         ],
         out_specs=pl.BlockSpec((block_c,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((C,), jnp.float32),
+        interpret=interpret,
+    )(q, docs, doc_valid, q_valid)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
+def maxsim_pallas_batch(q, docs, doc_valid, q_valid, *, block_c: int = 16,
+                        interpret: bool = False):
+    """Batched stage-4 dispatch: q (B, Lq, d) f32; docs (B, C, Ld, d) f32;
+    doc_valid (B, C, Ld) int8; q_valid (B, Lq) int8 → (B, C) f32.
+
+    The grid gains a leading batch axis; Q/q_valid blocks are per-batch
+    resident so the whole batch is one kernel launch (one dispatch for B
+    queries instead of B)."""
+    B, C, Ld, d = docs.shape
+    Lq = q.shape[1]
+    assert C % block_c == 0, (C, block_c)
+    grid = (B, C // block_c)
+    return pl.pallas_call(
+        _maxsim_batch_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Lq, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, block_c, Ld, d), lambda b, i: (b, i, 0, 0)),
+            pl.BlockSpec((1, block_c, Ld), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, Lq), lambda b, i: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c), lambda b, i: (b, i)),
+        out_shape=jax.ShapeDtypeStruct((B, C), jnp.float32),
         interpret=interpret,
     )(q, docs, doc_valid, q_valid)

@@ -9,8 +9,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.common.utils import round_up
-from repro.kernels.maxsim.maxsim import maxsim_pallas
-from repro.kernels.maxsim.ref import maxsim_scores_ref
+from repro.kernels.maxsim.maxsim import maxsim_pallas, maxsim_pallas_batch
+from repro.kernels.maxsim.ref import (maxsim_scores_batch_ref,
+                                      maxsim_scores_ref)
 
 
 @functools.partial(jax.jit, static_argnames=("impl", "block_c"))
@@ -39,3 +40,33 @@ def maxsim_scores(q, docs, doc_valid, q_valid=None, *, impl: str = "auto",
                         q_valid.astype(jnp.int8),
                         block_c=block_c, interpret=(impl == "interpret"))
     return out[:C]
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_c"))
+def maxsim_scores_batch(q, docs, doc_valid, q_valid=None, *,
+                        impl: str = "auto", block_c: int = 16):
+    """Cross-query batched late-interaction scores.
+
+    q: (B, Lq, d); docs: (B, C, Ld, d); doc_valid: (B, C, Ld) bool;
+    q_valid: optional (B, Lq) bool (False for padded query tokens of
+    ragged-length batches) → (B, C) f32. One dispatch for the batch.
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if q_valid is None:
+        q_valid = jnp.ones(q.shape[:2], bool)
+    if impl == "ref":
+        return maxsim_scores_batch_ref(q, docs, doc_valid, q_valid)
+
+    B, C, Ld, d = docs.shape
+    Cp = round_up(max(C, 1), block_c)
+    if Cp != C:
+        docs = jnp.pad(docs, ((0, 0), (0, Cp - C), (0, 0), (0, 0)))
+        doc_valid = jnp.pad(doc_valid, ((0, 0), (0, Cp - C), (0, 0)))
+    out = maxsim_pallas_batch(q.astype(jnp.float32),
+                              docs.astype(jnp.float32),
+                              doc_valid.astype(jnp.int8),
+                              q_valid.astype(jnp.int8),
+                              block_c=block_c,
+                              interpret=(impl == "interpret"))
+    return out[:, :C]

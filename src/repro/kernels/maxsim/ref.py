@@ -1,5 +1,6 @@
 """Pure-jnp oracle for the MaxSim late-interaction kernel."""
 
+import jax
 import jax.numpy as jnp
 
 
@@ -18,3 +19,12 @@ def maxsim_scores_ref(q, docs, doc_valid, q_valid=None):
     if q_valid is not None:
         per_q = per_q * q_valid[None, :].astype(per_q.dtype)
     return jnp.sum(per_q, axis=-1)
+
+
+def maxsim_scores_batch_ref(q, docs, doc_valid, q_valid=None):
+    """Leading-batch-dim oracle: q (B, Lq, d); docs (B, C, Ld, d);
+    doc_valid (B, C, Ld); q_valid optional (B, Lq) → (B, C) f32."""
+    if q_valid is None:
+        return jax.vmap(
+            lambda a, b, c: maxsim_scores_ref(a, b, c))(q, docs, doc_valid)
+    return jax.vmap(maxsim_scores_ref)(q, docs, doc_valid, q_valid)

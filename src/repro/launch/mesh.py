@@ -8,9 +8,7 @@ from __future__ import annotations
 
 import jax
 
-
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+from repro.common.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -19,14 +17,13 @@ def make_production_mesh(*, multi_pod: bool = False):
     n = 1
     for s in shape:
         n *= s
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)),
-                         devices=jax.devices()[:n])
+    return make_mesh(shape, axes, devices=jax.devices()[:n])
 
 
 def make_local_mesh():
     """1-device mesh with the production axis names — lets the same
     pjit'd code paths run in tests/benchmarks on one CPU device."""
-    return jax.make_mesh((1, 1), ("data", "model"), axis_types=_auto(2))
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def mesh_device_count(mesh) -> int:

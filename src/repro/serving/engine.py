@@ -68,3 +68,31 @@ class ServeEngine:
         return Result(qid=req.qid, pids=pids, scores=scores,
                       t_arrival=req.t_arrival, t_start=t_start,
                       t_done=t_done)
+
+    def process_batch(self, reqs: list[Request]) -> list[Result]:
+        """Score a micro-batch in one batched retriever call per method
+        group. Per-request results are identical (within fp tolerance) to
+        :meth:`process`; requests keep their own ``k``/``alpha``.
+
+        Falls back to sequential processing when the retriever has no
+        ``search_batch`` (e.g. test doubles)."""
+        if len(reqs) == 1 or not hasattr(self.retriever, "search_batch"):
+            return [self.process(r) for r in reqs]
+
+        t_start = time.perf_counter()
+        methods = [r.method for r in reqs]
+        k_max = max(r.k for r in reqs)
+        alphas = [r.alpha for r in reqs]
+        pids, scores = self.retriever.search_batch(
+            methods,
+            q_embs=[r.q_emb for r in reqs],
+            term_ids=[r.term_ids for r in reqs],
+            term_weights=[r.term_weights for r in reqs],
+            alpha=None if all(a is None for a in alphas) else alphas,
+            k=k_max)
+        t_done = time.perf_counter()
+        with self._lock:
+            self.served += len(reqs)
+        return [Result(qid=r.qid, pids=pids[i][:r.k], scores=scores[i][:r.k],
+                       t_arrival=r.t_arrival, t_start=t_start, t_done=t_done)
+                for i, r in enumerate(reqs)]

@@ -52,6 +52,7 @@ class LoadResult:
 def run_poisson_load(server: RetrievalServer, requests: list[Request],
                      qps: float, seed: int = 0,
                      time_scale: float = 1.0,
+                     burst: int = 1,
                      on_result: Optional[Callable] = None) -> LoadResult:
     """Submit ``requests`` with Poisson(qps) inter-arrival gaps.
 
@@ -59,15 +60,22 @@ def run_poisson_load(server: RetrievalServer, requests: list[Request],
     > 1 compresses the arrival process for smoke tests where only
     mechanics matter — it distorts queueing, so benchmarks use 1.0 and
     instead choose QPS relative to the measured service rate.
+
+    ``burst`` > 1 submits requests in groups of that size per arrival
+    (total rate still ``qps``) — the arrival pattern that lets the
+    server's micro-batcher coalesce co-arriving queries.
     """
     rng = np.random.default_rng(seed)
-    gaps = rng.exponential(1.0 / qps, len(requests)) / time_scale
+    burst = max(1, burst)
+    n_arrivals = -(-len(requests) // burst)
+    gaps = rng.exponential(burst / qps, n_arrivals) / time_scale
 
     futures = []
     t0 = time.perf_counter()
-    for req, gap in zip(requests, gaps):
+    for i, gap in zip(range(0, len(requests), burst), gaps):
         time.sleep(gap)
-        futures.append(server.submit(req))
+        for req in requests[i:i + burst]:
+            futures.append(server.submit(req))
 
     lat, svc = [], []
     for fut in futures:

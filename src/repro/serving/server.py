@@ -1,4 +1,5 @@
-"""Concurrent serving: bounded queue + worker pool, plus a TCP front.
+"""Concurrent serving: bounded queue + worker pool with cross-query
+micro-batching, plus a TCP front.
 
 Mirrors the paper's server-client architecture: clients submit queries
 that are queued and served by ``n_threads`` workers (the paper tunes
@@ -6,10 +7,18 @@ this and lands on 1 under load — we keep it a knob and reproduce that
 finding in benchmarks/bench_latency.py). Latency is measured from
 arrival (enqueue) to completion, so queueing delay is included.
 
-Fault tolerance: ``drain()`` completes in-flight work; a worker that
-dies on an exception marks the request failed and the pool replaces
-it; ``health()`` reports queue depth and served counts for external
-monitors.
+Micro-batching: with ``max_batch > 1`` a worker that pops a request
+keeps collecting queued requests for up to ``batch_timeout_ms`` (or
+until ``max_batch``) and serves the group through
+``ServeEngine.process_batch`` — one batched device dispatch per stage
+and deduplicated mmap gathers across co-batched queries. ``max_batch=1``
+preserves strict request-at-a-time behaviour.
+
+Fault tolerance: ``drain()`` completes in-flight work; a failing batch
+is retried request-by-request so one poisoned query cannot fail its
+co-batched neighbours; ``stop()`` fails still-queued futures instead of
+leaving clients waiting forever; ``health()`` reports queue depth and
+served counts for external monitors.
 """
 
 from __future__ import annotations
@@ -30,9 +39,12 @@ from repro.serving.engine import Request, Result, ServeEngine
 
 class RetrievalServer:
     def __init__(self, engine: ServeEngine, n_threads: int = 1,
-                 max_queue: int = 4096):
+                 max_queue: int = 4096, max_batch: int = 1,
+                 batch_timeout_ms: float = 2.0):
         self.engine = engine
         self.n_threads = n_threads
+        self.max_batch = max(1, max_batch)
+        self.batch_timeout_ms = batch_timeout_ms
         self.queue: queue.Queue = queue.Queue(maxsize=max_queue)
         self.workers: list[threading.Thread] = []
         self.running = False
@@ -48,27 +60,85 @@ class RetrievalServer:
             t.start()
             self.workers.append(t)
 
+    def _collect_batch(self, first):
+        """Coalesce queued requests behind ``first`` until ``max_batch``
+        or ``batch_timeout_ms`` elapses (micro-batching window)."""
+        batch = [first]
+        deadline = time.perf_counter() + self.batch_timeout_ms / 1e3
+        while len(batch) < self.max_batch:
+            remaining = deadline - time.perf_counter()
+            if remaining <= 0:
+                break
+            try:
+                batch.append(self.queue.get(timeout=remaining))
+            except queue.Empty:
+                break
+        return batch
+
     def _worker(self):
         while self.running:
             try:
                 item = self.queue.get(timeout=0.1)
             except queue.Empty:
                 continue
-            req, fut = item
+            batch = (self._collect_batch(item) if self.max_batch > 1
+                     else [item])
             try:
-                fut.set_result(self.engine.process(req))
-            except Exception as e:  # replace-on-failure semantics
-                with self._lock:
-                    self.failed += 1
-                fut.set_exception(e)
+                if len(batch) == 1:
+                    self._serve_one(*batch[0])
+                else:
+                    self._serve_batch(batch)
             finally:
-                self.queue.task_done()
+                for _ in batch:
+                    self.queue.task_done()
+
+    def _serve_one(self, req, fut, claimed: bool = False):
+        # claim the future before any work: once RUNNING, a concurrent
+        # client cancel() can no longer race our set_result/set_exception
+        if not claimed and not fut.set_running_or_notify_cancel():
+            return                       # cancelled while queued
+        try:
+            res = self.engine.process(req)
+        except Exception as e:  # replace-on-failure semantics
+            with self._lock:
+                self.failed += 1
+            fut.set_exception(e)
+            return
+        fut.set_result(res)
+
+    def _serve_batch(self, batch):
+        claimed = [(req, fut) for req, fut in batch
+                   if fut.set_running_or_notify_cancel()]
+        if not claimed:
+            return
+        try:
+            results = self.engine.process_batch([req for req, _ in claimed])
+        except Exception:
+            # isolate the poisoned request: retry individually so one bad
+            # query cannot fail its co-batched neighbours
+            for req, fut in claimed:
+                self._serve_one(req, fut, claimed=True)
+            return
+        for (_, fut), res in zip(claimed, results):
+            fut.set_result(res)
 
     def stop(self):
         self.running = False
         for t in self.workers:
             t.join(timeout=2.0)
         self.workers.clear()
+        # fail whatever never got served — clients must not hang forever
+        # on futures nobody will complete
+        while True:
+            try:
+                req, fut = self.queue.get_nowait()
+            except queue.Empty:
+                break
+            if fut.set_running_or_notify_cancel():
+                fut.set_exception(
+                    RuntimeError(f"server stopped before serving "
+                                 f"qid={req.qid}"))
+            self.queue.task_done()
 
     def drain(self):
         """Complete all queued work (graceful shutdown step 1)."""
@@ -95,8 +165,10 @@ class RetrievalServer:
 class _Handler(socketserver.StreamRequestHandler):
     def handle(self):
         for line in self.rfile:
+            qid = None
             try:
                 msg = json.loads(line)
+                qid = msg.get("qid")
                 req = Request(
                     qid=msg["qid"], method=msg.get("method", "hybrid"),
                     q_emb=np.asarray(msg["q_emb"], np.float32)
@@ -111,6 +183,8 @@ class _Handler(socketserver.StreamRequestHandler):
                        "latency": res.latency}
             except Exception as e:
                 out = {"error": str(e)}
+                if qid is not None:
+                    out["qid"] = qid
             self.wfile.write((json.dumps(out) + "\n").encode())
             self.wfile.flush()
 

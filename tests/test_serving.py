@@ -63,6 +63,22 @@ def test_failure_is_isolated_and_counted():
     srv.stop()
 
 
+def test_cancel_while_processing_cannot_race_worker():
+    """Workers claim futures (set_running_or_notify_cancel) before
+    scoring, so a client cancel() mid-service fails instead of racing
+    the worker's set_result into an InvalidStateError."""
+    srv = make_server(n_threads=1, service_s=0.05)
+    fut = srv.submit(Request(qid=0, method="hybrid", q_emb=np.zeros(2)))
+    deadline = time.time() + 5
+    while not fut.running() and time.time() < deadline:
+        time.sleep(0.001)
+    assert fut.running()
+    assert not fut.cancel()              # claimed: cancel must lose
+    assert fut.result(timeout=10).qid == 0
+    assert srv.health()["workers"] == 1  # worker survived
+    srv.stop()
+
+
 def test_drain_completes_queue():
     srv = make_server(n_threads=1, service_s=0.005)
     futs = [srv.submit(Request(qid=i, method="rerank",
@@ -111,6 +127,24 @@ def test_tcp_front_roundtrip():
         assert out["qid"] == 7
         assert len(out["pids"]) == 5
         assert out["latency"] > 0
+    finally:
+        tcp.shutdown()
+        srv.stop()
+
+
+def test_tcp_error_response_carries_qid():
+    """A failing request still tells the client which qid failed."""
+    srv = make_server(n_threads=1, fail_qids={9})
+    tcp = TCPRetrievalServer(("127.0.0.1", 0), srv)
+    port = tcp.server_address[1]
+    t = threading.Thread(target=tcp.serve_forever, daemon=True)
+    t.start()
+    try:
+        out = tcp_query("127.0.0.1", port,
+                        {"qid": 9, "method": "hybrid",
+                         "q_emb": [9.0, 9.0], "k": 5})
+        assert "error" in out
+        assert out["qid"] == 9
     finally:
         tcp.shutdown()
         srv.stop()
