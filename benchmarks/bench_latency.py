@@ -2,7 +2,9 @@
 arrivals through the concurrent server — the paper's serving
 methodology (client-observed latency includes queueing; saturation
 knee at the service-rate reciprocal) — plus a throughput-vs-batch-size
-sweep for the cross-query micro-batcher."""
+sweep for the cross-query micro-batcher, a per-stage latency breakdown
+(stage 1 vs stages 2–4), and a stage-1 backend sweep
+(host / jax / pallas, batched vs per-query)."""
 
 from __future__ import annotations
 
@@ -17,6 +19,7 @@ from repro.serving.server import RetrievalServer
 
 METHODS = ["splade", "rerank", "hybrid", "colbert"]
 BATCH_SIZES = (1, 4, 16)
+STAGE1_BACKENDS = ("host", "jax")     # pallas rides on TPU runs only
 
 
 def _requests(corpus, method, n):
@@ -93,10 +96,92 @@ def measure_batch_sweep(name: str = "marco", method: str = "hybrid",
     return out
 
 
+def measure_stage_breakdown(name: str = "marco", method: str = "hybrid",
+                            n_queries: int = 32, backend: str = "host"):
+    """Per-stage latency split for one backend: stage-1 (SPLADE) wall
+    time vs stages 2–4 (rerank + fusion), averaged per query."""
+    corpus, index, sidx, retr = dataset(name, mode="mmap")
+    retr.set_splade_backend(backend)
+    try:
+        for qi in range(4):               # warm compile caches
+            retr.search(method, q_emb=corpus["q_embs"][qi],
+                        term_ids=corpus["q_term_ids"][qi],
+                        term_weights=corpus["q_term_weights"][qi], k=20)
+        retr.reset_stage_stats()
+        t0 = time.perf_counter()
+        for qi in range(n_queries):
+            retr.search(method, q_emb=corpus["q_embs"][qi],
+                        term_ids=corpus["q_term_ids"][qi],
+                        term_weights=corpus["q_term_weights"][qi], k=20)
+        wall = time.perf_counter() - t0
+        st = retr.stage_stats
+        out = {"backend": backend, "method": method,
+               "stage1_ms_per_q": st["stage1_s"] / n_queries * 1e3,
+               "rest_ms_per_q": st["rest_s"] / n_queries * 1e3,
+               "total_ms_per_q": wall / n_queries * 1e3,
+               "stage1_fraction": st["stage1_s"] / max(wall, 1e-12)}
+    finally:
+        retr.set_splade_backend("host")
+    print(f"breakdown[{backend:6s}] stage1={out['stage1_ms_per_q']:6.2f}ms "
+          f"rest={out['rest_ms_per_q']:6.2f}ms "
+          f"({100 * out['stage1_fraction']:4.1f}% stage1)")
+    return out
+
+
+def measure_stage1_backends(name: str = "marco", B: int = 16,
+                            rounds: int = 4,
+                            backends=STAGE1_BACKENDS):
+    """Stage-1 throughput per backend: one batched B-query dispatch vs
+    B per-query dispatches on the same backend (the batching win the
+    tentpole claims — batched must beat the loop)."""
+    corpus, index, sidx, retr = dataset(name, mode="mmap")
+    tids = [corpus["q_term_ids"][i % len(corpus["q_term_ids"])]
+            for i in range(B)]
+    tw = [corpus["q_term_weights"][i % len(corpus["q_term_weights"])]
+          for i in range(B)]
+    out = {}
+    for be in backends:
+        retr.set_splade_backend(be)
+        try:
+            retr.run_splade_batch(tids, tw)           # warm batched shape
+            for i in range(min(4, B)):                # warm B=1 shape
+                retr.run_splade(tids[i], tw[i])
+            t0 = time.perf_counter()
+            for _ in range(rounds):
+                retr.run_splade_batch(tids, tw)
+            t_batch = (time.perf_counter() - t0) / rounds
+            t0 = time.perf_counter()
+            for _ in range(rounds):
+                for i in range(B):
+                    retr.run_splade(tids[i], tw[i])
+            t_loop = (time.perf_counter() - t0) / rounds
+        finally:
+            retr.set_splade_backend("host")
+        out[be] = {"batch_ms": t_batch * 1e3, "loop_ms": t_loop * 1e3,
+                   "speedup": t_loop / max(t_batch, 1e-12),
+                   "batch_qps": B / t_batch, "loop_qps": B / t_loop}
+        print(f"stage1[{be:6s}] B={B:3d}: batched {t_batch * 1e3:7.2f}ms "
+              f"vs {B}x1 {t_loop * 1e3:7.2f}ms "
+              f"→ {out[be]['speedup']:.2f}x")
+    return out
+
+
 def main(quick: bool = False):
     table = {"marco": measure("marco", n_queries=40 if quick else 60)}
     if not quick:
         table["lotte"] = measure("lotte", n_queries=60)
+    sweep = measure_batch_sweep("marco",
+                                n_queries=48 if quick else 96)
+    table["marco"]["batch_sweep"] = {str(b): v for b, v in sweep.items()}
+    table["marco"]["stage_breakdown"] = {
+        be: measure_stage_breakdown("marco", n_queries=16 if quick else 32,
+                                    backend=be)
+        for be in STAGE1_BACKENDS}
+    s1 = measure_stage1_backends("marco", B=16, rounds=2 if quick else 4)
+    table["marco"]["stage1_backends"] = s1
+    save("latency_fig12", table)   # persist before any shape check: a
+    # failed assertion must not discard the minutes of measurements that
+    # would be needed to diagnose it
     # paper-shape checks: splade fastest; saturation raises p95 sharply;
     # rerank/hybrid faster than full mmap'd ColBERT
     for name, res in table.items():
@@ -106,12 +191,11 @@ def main(quick: bool = False):
         for m in METHODS:
             pts = res[m]["points"]
             assert pts[-1]["p95"] > 1.5 * pts[0]["p95"], (name, m)
-    sweep = measure_batch_sweep("marco",
-                                n_queries=48 if quick else 96)
-    table["marco"]["batch_sweep"] = {str(b): v for b, v in sweep.items()}
     # cross-query batching must pay for itself once the batch is deep
     assert sweep[16]["qps"] >= sweep[1]["qps"], sweep
-    save("latency_fig12", table)
+    # a batched B=16 stage-1 dispatch must beat 16 B=1 dispatches on the
+    # device backend (the tentpole's acceptance bar)
+    assert s1["jax"]["batch_ms"] < s1["jax"]["loop_ms"], s1
     return table
 
 

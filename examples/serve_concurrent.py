@@ -31,7 +31,7 @@ from repro.serving.server import (RetrievalServer, TCPRetrievalServer,
                                   tcp_query)
 
 
-def build_stack():
+def build_stack(splade_backend="host", splade_max_df=None):
     cfg = SynthCfg(n_docs=2500, n_queries=200, seed=3)
     corpus = make_corpus(cfg)
     d = tempfile.mkdtemp(prefix="serve_")
@@ -44,8 +44,11 @@ def build_stack():
     searcher = PLAIDSearcher(index, PlaidParams(nprobe=4,
                                                 candidate_cap=1024,
                                                 ndocs=256))
-    retr = MultiStageRetriever(sidx, searcher,
-                               MultiStageParams(first_k=200, alpha=0.3))
+    retr = MultiStageRetriever(
+        sidx, searcher,
+        MultiStageParams(first_k=200, alpha=0.3,
+                         splade_backend=splade_backend,
+                         splade_max_df=splade_max_df))
     return corpus, retr
 
 
@@ -59,13 +62,27 @@ def main():
                     help="micro-batch size (1 = request-at-a-time)")
     ap.add_argument("--batch-timeout-ms", type=float, default=2.0,
                     help="max wait to coalesce a micro-batch")
+    ap.add_argument("--latency-slo-ms", type=float, default=None,
+                    help="adaptive micro-batching: shrink/grow the "
+                         "effective batch cap to keep batch service "
+                         "time (EWMA) under this SLO")
+    ap.add_argument("--splade-backend", default="host",
+                    choices=["host", "jax", "pallas"],
+                    help="stage-1 scorer backend")
+    ap.add_argument("--splade-max-df", type=int, default=None,
+                    help="padded-postings df cap for jax/pallas "
+                         "(memory vs exactness; default: exact)")
     args = ap.parse_args()
 
     print("building index + retriever ...")
-    corpus, retr = build_stack()
-    server = RetrievalServer(ServeEngine(retr), n_threads=args.threads,
-                             max_batch=args.max_batch,
-                             batch_timeout_ms=args.batch_timeout_ms)
+    corpus, retr = build_stack(splade_backend=args.splade_backend,
+                               splade_max_df=args.splade_max_df)
+    # backend already configured via MultiStageParams in build_stack
+    server = RetrievalServer(
+        ServeEngine(retr),
+        n_threads=args.threads, max_batch=args.max_batch,
+        batch_timeout_ms=args.batch_timeout_ms,
+        latency_slo_ms=args.latency_slo_ms)
     server.start()
 
     def reqs(n):

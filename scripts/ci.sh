@@ -8,3 +8,9 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -x -q "$@"
+
+# kernel parity in Pallas interpret mode, run explicitly: the kernel
+# bodies (maxsim, decompress+maxsim, splade single/batched) must match
+# their jnp oracles even when the full run above is filtered by "$@"
+python -m pytest -q tests/test_kernels.py tests/test_splade_stage1.py \
+    -k "interpret"

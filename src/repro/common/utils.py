@@ -42,6 +42,10 @@ def round_up(a: int, b: int) -> int:
     return cdiv(a, b) * b
 
 
+def next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1).bit_length())
+
+
 def _leaf_size(x) -> int:
     if hasattr(x, "size"):
         return int(x.size)

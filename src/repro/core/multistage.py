@@ -11,14 +11,20 @@ Four systems, exactly as the paper's evaluation defines them:
 from __future__ import annotations
 
 import dataclasses
+import threading
+import time
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hybrid as hybrid_mod
 from repro.core.plaid import PLAIDSearcher
+from repro.index.splade_device import SpladeDeviceCache
 from repro.index.splade_index import SpladeIndex
+
+SPLADE_BACKENDS = ("host", "jax", "pallas")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -27,6 +33,8 @@ class MultiStageParams:
     k: int = 100                  # final depth
     alpha: float = 0.3            # paper's MS MARCO-tuned value
     normalizer: str = "znorm"
+    splade_backend: str = "host"  # stage-1 scorer: host | jax | pallas
+    splade_max_df: Optional[int] = None  # padded-postings df cap (None=exact)
 
 
 class MultiStageRetriever:
@@ -35,12 +43,82 @@ class MultiStageRetriever:
         self.splade = splade_index
         self.searcher = searcher
         self.params = params
+        self._splade_device: Optional[SpladeDeviceCache] = None
+        self._lock = threading.Lock()
+        self.set_splade_backend(params.splade_backend)  # validates
+        self.reset_stage_stats()
+        if params.splade_backend != "host":
+            self.splade_device_cache()    # pay the transfer up front
 
     # ------------------------------------------------------------------
-    def run_splade(self, term_ids, term_weights, k: Optional[int] = None):
-        return self.splade.score_host(
-            np.asarray(term_ids), np.asarray(term_weights),
-            self.params.first_k if k is None else k)
+    # stage-1 backend selection
+    # ------------------------------------------------------------------
+    def set_splade_backend(self, backend: str):
+        if backend not in SPLADE_BACKENDS:
+            raise ValueError(f"splade backend {backend!r} not in "
+                             f"{SPLADE_BACKENDS}")
+        self.splade_backend = backend
+
+    def splade_device_cache(self) -> SpladeDeviceCache:
+        """Padded-postings device arrays, materialised once and reused
+        across every jax/pallas stage-1 dispatch (locked: concurrent
+        server workers must not each pay the host→device transfer)."""
+        with self._lock:
+            if self._splade_device is None:
+                self._splade_device = SpladeDeviceCache(
+                    self.splade, max_df=self.params.splade_max_df)
+            return self._splade_device
+
+    def _splade_impl(self, backend: str) -> str:
+        # the Pallas kernel body runs in interpret mode off-TPU so the
+        # selector stays honest (same code path, Mosaic-free execution)
+        if backend == "jax":
+            return "ref"
+        return "pallas" if jax.default_backend() == "tpu" else "interpret"
+
+    def reset_stage_stats(self):
+        """Per-stage accounting for benchmarks: stage-1 wall time /
+        dispatch count vs everything after (stages 2–4 + fusion)."""
+        with self._lock:
+            self.stage_stats = {"stage1_s": 0.0, "stage1_dispatches": 0,
+                                "stage1_queries": 0, "rest_s": 0.0}
+
+    def _account(self, **deltas):
+        with self._lock:
+            for key, d in deltas.items():
+                self.stage_stats[key] += d
+
+    # ------------------------------------------------------------------
+    def run_splade(self, term_ids, term_weights, k: Optional[int] = None,
+                   backend: Optional[str] = None):
+        pids, scores = self.run_splade_batch(
+            [term_ids], [term_weights], k=k, backend=backend)
+        return pids[0], scores[0]
+
+    def run_splade_batch(self, term_ids, term_weights,
+                         k: Optional[int] = None,
+                         backend: Optional[str] = None):
+        """Stage 1 for a whole micro-batch in one dispatch.
+
+        term_ids/term_weights: sequences of per-query (Qt_i,) arrays.
+        backend 'host' → vectorised CSR pass (`score_batch_host`);
+        'jax'/'pallas' → device-resident padded postings (segment-sum /
+        block kernel) with a fused per-query top-k."""
+        backend = backend or self.splade_backend
+        if backend not in SPLADE_BACKENDS:
+            raise ValueError(f"splade backend {backend!r} not in "
+                             f"{SPLADE_BACKENDS}")
+        k = self.params.first_k if k is None else k
+        t0 = time.perf_counter()
+        if backend == "host":
+            out = self.splade.score_batch_host(term_ids, term_weights, k)
+        else:
+            cache = self.splade_device_cache()
+            out = cache.score_topk(term_ids, term_weights, k,
+                                   impl=self._splade_impl(backend))
+        self._account(stage1_s=time.perf_counter() - t0,
+                      stage1_dispatches=1, stage1_queries=len(term_ids))
+        return out
 
     # ------------------------------------------------------------------
     def search(self, method: str, q_emb=None, term_ids=None,
@@ -59,6 +137,7 @@ class MultiStageRetriever:
         if method == "splade":
             return pids[:k], s_scores[:k]
 
+        t0 = time.perf_counter()
         c_scores = self.searcher.rerank(q_emb, pids)
         mask = pids >= 0
         if method == "rerank":
@@ -72,6 +151,7 @@ class MultiStageRetriever:
 
         order = np.argsort(-final, kind="stable")[:k]
         out_pids = np.where(final[order] > -np.inf, pids[order], -1)
+        self._account(rest_s=time.perf_counter() - t0)
         return out_pids, final[order]
 
     # ------------------------------------------------------------------
@@ -103,14 +183,14 @@ class MultiStageRetriever:
             pids, scores, _ = self.searcher.search_batch(q_embs, k=k)
             return pids, scores
 
-        # SPLADE first stage: host CSR scoring per query (the PISA tier)
-        sp = [self.run_splade(term_ids[i], term_weights[i], p.first_k)
-              for i in range(n)]
-        pids_b = np.stack([x[0] for x in sp])          # (B, first_k)
-        s_scores = np.stack([x[1] for x in sp])
+        # SPLADE first stage: one batched dispatch for the whole
+        # micro-batch (host vectorised pass or device-resident kernel)
+        pids_b, s_scores = self.run_splade_batch(
+            term_ids[:n], term_weights[:n], p.first_k)  # (B, first_k)
         if method == "splade":
             return pids_b[:, :k], s_scores[:, :k]
 
+        t0 = time.perf_counter()
         # batched ColBERT rescoring: one dedup gather + one dispatch
         c_scores = self.searcher.rerank_batch(q_embs, pids_b)
         mask = pids_b >= 0
@@ -128,6 +208,7 @@ class MultiStageRetriever:
         sorted_final = np.take_along_axis(final, order, axis=1)
         out_pids = np.where(sorted_final > -np.inf,
                             np.take_along_axis(pids_b, order, axis=1), -1)
+        self._account(rest_s=time.perf_counter() - t0)
         return out_pids, sorted_final
 
     def _alpha_array(self, alpha, n: int) -> np.ndarray:

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.common.utils import next_pow2 as _next_pow2
 from repro.index.builder import ColBERTIndex
 from repro.index.residual import unpack_codes
 from repro.kernels.decompress_maxsim.ops import decompress_maxsim_scores_batch
@@ -92,10 +93,6 @@ def stage4_exact_score(q_emb, packed, cids, valid, centroids,
 # --------------------------------------------------------------------------
 # batched stage kernels (cross-query micro-batches)
 # --------------------------------------------------------------------------
-
-def _next_pow2(n: int) -> int:
-    return 1 << max(0, (n - 1).bit_length())
-
 
 def pad_query_batch(q_embs, lq_multiple: int = 4):
     """Stack ragged queries. q_embs: sequence of (Lq_i, d) arrays or an

@@ -1,0 +1,122 @@
+"""Device-resident SPLADE stage 1: padded postings + batched scoring.
+
+The host CSR index (`SpladeIndex`) is the mmap/PISA tier. For the
+device tier the postings are materialised **once** into the fixed-shape
+``as_padded`` layout — (V, max_df) pids + uint8 impacts, ~5·V·max_df
+bytes — and pinned as JAX arrays. Scoring a micro-batch is then a pure
+device computation: gather the B×Qt query-term rows, run the batched
+block kernel (or the segment-sum oracle), and take a fused per-query
+top-k — a single dispatch for the whole batch.
+
+Shape discipline: query-term counts are bucketed to powers of two (and
+batch sizes are padded the same way by the caller) so the jitted
+scorer compiles O(log) distinct shapes instead of one per (B, Qt).
+
+Exactness: terms with df > max_df keep only their top-``max_df``
+impacts (the documented memory/exactness tradeoff). With
+``max_df=None`` the true maximum df is used and scoring is exact.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.utils import next_pow2 as _next_pow2
+from repro.index.splade_index import SpladeIndex
+from repro.kernels.splade_score.ops import splade_block_topk_batch
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_docs", "k", "impl", "block_d",
+                                    "chunk"))
+def _score_topk(padded_pids, padded_imps, term_ids, term_weights, quantum,
+                *, n_docs: int, k: int, impl: str, block_d: int,
+                chunk: int):
+    """term_ids (B, Qt) int32 (−1 pad); term_weights (B, Qt) f32 →
+    (pids (B, k) int32, scores (B, k) f32). Gather + score + top-k in
+    one jitted computation."""
+    valid = (term_ids >= 0) & (term_weights > 0)
+    safe_t = jnp.where(valid, term_ids, 0)
+    post_pids = padded_pids[safe_t]                      # (B, Qt, max_df)
+    post_imps = padded_imps[safe_t].astype(jnp.float32)  # de-quantise below
+    w = jnp.where(valid, term_weights, 0.0) * quantum
+    return splade_block_topk_batch(post_pids, post_imps, w, n_docs=n_docs,
+                                   k=k, impl=impl, block_d=block_d,
+                                   chunk=chunk)
+
+
+class SpladeDeviceCache:
+    """Owns the padded-postings device arrays for one `SpladeIndex` and
+    serves batched stage-1 queries against them."""
+
+    def __init__(self, index: SpladeIndex, max_df: int | None = None,
+                 qt_min: int = 8, block_d: int = 2048, chunk: int = 512):
+        dfs = np.diff(index.term_offsets)
+        true_max = int(dfs.max()) if len(dfs) else 1
+        self.max_df = max(1, true_max if max_df is None
+                          else min(int(max_df), true_max))
+        self.truncated_terms = int((dfs > self.max_df).sum())
+        pids, imps = index.as_padded(self.max_df)
+        self.pids = jnp.asarray(pids)
+        self.imps = jnp.asarray(imps)          # uint8 on device
+        self.quantum = float(index.quantum)
+        self.n_docs = int(index.n_docs)
+        self.qt_min = qt_min
+        self.block_d = block_d
+        self.chunk = chunk
+
+    def nbytes(self) -> int:
+        return int(self.pids.size * 4 + self.imps.size)
+
+    # ------------------------------------------------------------------
+    def pad_queries(self, term_ids, term_weights):
+        """Stack ragged per-query term lists into pow2-bucketed (B, Qt)
+        arrays (−1 / 0 padding) so compiled shapes are reused."""
+        B = len(term_ids)
+        vocab = self.pids.shape[0]
+        qt = max((len(np.atleast_1d(t)) for t in term_ids), default=1)
+        qt_pad = _next_pow2(max(qt, self.qt_min, 1))
+        tids = np.full((B, qt_pad), -1, np.int32)
+        w = np.zeros((B, qt_pad), np.float32)
+        for i in range(B):
+            t = np.atleast_1d(np.asarray(term_ids[i], np.int32))
+            tw = np.atleast_1d(np.asarray(term_weights[i], np.float32))
+            if (t >= vocab).any():
+                # fail as loudly as the host CSR path would — a clamped
+                # device gather would return plausible wrong scores
+                raise IndexError(f"term id {int(t.max())} out of range "
+                                 f"for vocab {vocab} (query {i})")
+            tids[i, :len(t)] = t
+            w[i, :len(tw)] = tw
+        return tids, w
+
+    def score_topk(self, term_ids, term_weights, k: int,
+                   impl: str = "auto"):
+        """Batched stage-1 over the device postings. term_ids /
+        term_weights: sequences of (Qt_i,) arrays (ragged fine) →
+        (pids (B, k) int64, scores (B, k) f32), −1/0 padded like the
+        host scorer. One device dispatch per (bucketed) shape."""
+        B = len(term_ids)
+        tids, w = self.pad_queries(term_ids, term_weights)
+        # pow2-pad the batch dim with zero-weight rows: nearby batch
+        # sizes reuse one compiled scorer
+        Bp = _next_pow2(max(B, 1))
+        if Bp != B:
+            tids = np.pad(tids, ((0, Bp - B), (0, 0)), constant_values=-1)
+            w = np.pad(w, ((0, Bp - B), (0, 0)))
+        k_eff = min(k, self.n_docs)
+        out_pids = np.full((B, k), -1, np.int64)
+        out_scores = np.zeros((B, k), np.float32)
+        if k_eff:
+            pids, scores = _score_topk(
+                self.pids, self.imps, jnp.asarray(tids), jnp.asarray(w),
+                jnp.float32(self.quantum), n_docs=self.n_docs,
+                k=k_eff, impl=impl, block_d=self.block_d,
+                chunk=self.chunk)
+            out_pids[:, :k_eff] = np.asarray(pids)[:B]
+            out_scores[:, :k_eff] = np.asarray(scores)[:B]
+        return out_pids, out_scores

@@ -15,6 +15,22 @@ import pathlib
 import numpy as np
 
 
+def _topk_rows(scores: np.ndarray, k: int):
+    """Row-wise descending top-k. scores: (B, n) → (pids (B, k) int64,
+    scores (B, k) f32); rows are padded with (−1, 0) when k > n."""
+    B, n = scores.shape
+    k_eff = min(k, n)
+    out_pids = np.full((B, k), -1, np.int64)
+    out_scores = np.zeros((B, k), np.float32)
+    if k_eff:
+        part = np.argpartition(scores, n - k_eff, axis=1)[:, n - k_eff:]
+        part_scores = np.take_along_axis(scores, part, axis=1)
+        order = np.argsort(-part_scores, axis=1, kind="stable")
+        out_pids[:, :k_eff] = np.take_along_axis(part, order, axis=1)
+        out_scores[:, :k_eff] = np.take_along_axis(part_scores, order, axis=1)
+    return out_pids, out_scores
+
+
 @dataclasses.dataclass
 class SpladeIndex:
     term_offsets: np.ndarray   # (V+1,) int64
@@ -40,18 +56,68 @@ class SpladeIndex:
                 continue
             s, e = self.term_offsets[t], self.term_offsets[t + 1]
             if e > s:
-                np.add.at  # noqa: B018 — doc: scores[pids] += w*imp, vectorised
-                scores[self.pids[s:e]] += w * self.quantum * \
-                    self.impacts[s:e].astype(np.float32)
-        k_eff = min(k, self.n_docs)
-        top = np.argpartition(scores, -k_eff)[-k_eff:]
-        top = top[np.argsort(-scores[top], kind="stable")]
-        out_pids = np.full(k, -1, np.int64)
-        out_scores = np.zeros(k, np.float32)
-        out_pids[:k_eff] = top
-        out_scores[:k_eff] = scores[top]
-        # mark empty tail (score 0 and beyond corpus) as absent
-        return out_pids, out_scores
+                # np.add.at, not fancy-index +=: a pid repeated within a
+                # term's postings must accumulate both impacts
+                np.add.at(scores, self.pids[s:e],
+                          np.float32(w * self.quantum)
+                          * self.impacts[s:e].astype(np.float32))
+        pids, top_scores = _topk_rows(scores[None], k)
+        return pids[0], top_scores[0]
+
+    def score_batch_host(self, term_ids, term_weights, k: int = 200):
+        """Vectorised multi-query host scoring (the no-device/mmap tier).
+
+        term_ids/term_weights: sequences of (Qt_i,) arrays (ragged fine).
+        One pass over the union of the batch's query terms: postings of
+        each distinct term are gathered from the (possibly mmap'd) CSR
+        arrays exactly once, then scattered into a (B, n_docs) score
+        matrix with a single ``np.add.at`` — no per-query Python loop.
+        Peak memory is ``4·B·n_docs`` bytes (vs one (n_docs,) vector per
+        query sequentially) — size ``max_batch`` accordingly on very
+        large host-tier corpora.
+        Returns (pids (B, k), scores (B, k)) sorted desc; -1 padded."""
+        B = len(term_ids)
+        scores = np.zeros((B, self.n_docs), np.float32)
+        # flatten valid (query, term, weight) triples, query-major so the
+        # scatter accumulates in the same order as per-query score_host
+        qidx, terms, weights = [], [], []
+        for i in range(B):
+            t = np.asarray(term_ids[i]).astype(np.int64, copy=False)
+            w = np.asarray(term_weights[i]).astype(np.float32, copy=False)
+            keep = (w > 0) & (t >= 0)
+            qidx.append(np.full(int(keep.sum()), i, np.int64))
+            terms.append(t[keep])
+            weights.append(w[keep])
+        qidx = np.concatenate(qidx) if qidx else np.zeros(0, np.int64)
+        terms = np.concatenate(terms) if terms else np.zeros(0, np.int64)
+        weights = (np.concatenate(weights) if weights
+                   else np.zeros(0, np.float32))
+        if len(terms):
+            # gather the union of posting lists once (one mmap touch per
+            # distinct term even when co-batched queries share terms)
+            uniq, inv = np.unique(terms, return_inverse=True)
+            u_starts = self.term_offsets[uniq]
+            u_lens = (self.term_offsets[uniq + 1] - u_starts).astype(np.int64)
+            total = int(u_lens.sum())
+            u_local = np.arange(total) - np.repeat(
+                np.cumsum(u_lens) - u_lens, u_lens)
+            u_flat = np.repeat(u_starts, u_lens) + u_local
+            u_pids = np.asarray(self.pids[u_flat]).astype(np.int64,
+                                                          copy=False)
+            u_imps = self.impacts[u_flat].astype(np.float32)
+            # expand per (query, term) entry into the gathered buffer
+            u_offs = np.cumsum(u_lens) - u_lens        # term start in buffer
+            e_lens = u_lens[inv]
+            e_total = int(e_lens.sum())
+            e_local = np.arange(e_total) - np.repeat(
+                np.cumsum(e_lens) - e_lens, e_lens)
+            e_src = np.repeat(u_offs[inv], e_lens) + e_local
+            scale = (weights * np.float32(self.quantum)).astype(np.float32)
+            vals = np.repeat(scale, e_lens) * u_imps[e_src]
+            flat_target = np.repeat(qidx, e_lens) * self.n_docs \
+                + u_pids[e_src]
+            np.add.at(scores.reshape(-1), flat_target, vals)
+        return _topk_rows(scores, k)
 
     # ------------------------------------------------------------------
     def as_padded(self, max_df: int):
@@ -122,19 +188,19 @@ def build_splade_index(doc_term_ids: np.ndarray, doc_term_weights: np.ndarray,
 
 def splade_score_jax_padded(padded_pids, padded_imps, quantum, n_docs,
                             term_ids, term_weights, k: int):
-    """JAX scorer over fixed-shape postings (the TPU path).
+    """JAX scorer over fixed-shape postings, single query.
 
     padded_pids/imps: (V, max_df); term_ids: (Qt,); term_weights: (Qt,).
-    Returns (top_pids (k,), top_scores (k,))."""
+    Returns (top_pids (k,), top_scores (k,)). Thin wrapper over the
+    shared segment-sum oracle — `SpladeDeviceCache` serves the batched
+    production path on the same kernel family."""
     import jax
     import jax.numpy as jnp
 
-    p = padded_pids[term_ids]                     # (Qt, max_df)
+    from repro.kernels.splade_score.ref import splade_block_scores_ref
+
+    p = padded_pids[term_ids]                      # (Qt, max_df)
     i = padded_imps[term_ids].astype(jnp.float32)  # (Qt, max_df)
-    w = term_weights[:, None] * i * quantum
-    valid = (p >= 0) & (term_weights[:, None] > 0)
-    seg = jnp.where(valid, p, n_docs).reshape(-1)
-    vals = jnp.where(valid, w, 0.0).reshape(-1)
-    scores = jax.ops.segment_sum(vals, seg, num_segments=n_docs + 1)[:n_docs]
+    scores = splade_block_scores_ref(p, i, term_weights * quantum, n_docs)
     top_scores, top_pids = jax.lax.top_k(scores, k)
     return top_pids.astype(jnp.int32), top_scores

@@ -1,4 +1,9 @@
-from repro.kernels.splade_score.ops import splade_block_scores
-from repro.kernels.splade_score.ref import splade_block_scores_ref
+from repro.kernels.splade_score.ops import (splade_block_scores,
+                                            splade_block_scores_batch,
+                                            splade_block_topk_batch)
+from repro.kernels.splade_score.ref import (splade_block_scores_batch_ref,
+                                            splade_block_scores_ref)
 
-__all__ = ["splade_block_scores", "splade_block_scores_ref"]
+__all__ = ["splade_block_scores", "splade_block_scores_batch",
+           "splade_block_topk_batch", "splade_block_scores_ref",
+           "splade_block_scores_batch_ref"]

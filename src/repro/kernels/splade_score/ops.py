@@ -1,4 +1,6 @@
-"""Public wrapper for the SPLADE block-scoring kernel."""
+"""Public wrappers for the SPLADE block-scoring kernel (single-query
+and leading-batch-dim variants, plus a fused scores→top-k entry point
+for the serving stage-1 path)."""
 
 from __future__ import annotations
 
@@ -8,8 +10,27 @@ import jax
 import jax.numpy as jnp
 
 from repro.common.utils import round_up
-from repro.kernels.splade_score.ref import splade_block_scores_ref
-from repro.kernels.splade_score.splade_score import splade_block_pallas
+from repro.kernels.splade_score.ref import (splade_block_scores_batch_ref,
+                                            splade_block_scores_ref)
+from repro.kernels.splade_score.splade_score import (splade_block_pallas,
+                                                     splade_block_pallas_batch)
+
+
+def _chunked(pids, vals, chunk: int):
+    """Reshape (…, Qt, max_df) postings into chunk-aligned rows, padding
+    the entry count up to a multiple of ``chunk`` with −1/0 entries."""
+    *lead, Qt, max_df = pids.shape
+    E = Qt * max_df
+    Ep = round_up(E, chunk)
+    if Ep == E:
+        return pids, vals
+    pad_rows = (Ep - E) // max_df + 1
+    pad_width = [(0, 0)] * len(lead) + [(0, pad_rows), (0, 0)]
+    pids = jnp.pad(pids, pad_width, constant_values=-1)
+    vals = jnp.pad(vals, pad_width)
+    pids = pids.reshape(*lead, -1)[..., :Ep].reshape(*lead, -1, chunk)
+    vals = vals.reshape(*lead, -1)[..., :Ep].reshape(*lead, -1, chunk)
+    return pids, vals
 
 
 @functools.partial(jax.jit,
@@ -23,20 +44,56 @@ def splade_block_scores(post_pids, post_imps, term_weights, *, n_docs: int,
     if impl == "ref":
         return splade_block_scores_ref(post_pids, post_imps, term_weights,
                                        n_docs)
-    Qt, max_df = post_pids.shape
-    vals = jnp.where(post_pids >= 0,
-                     term_weights[:, None] * post_imps, 0.0)
-    pids = jnp.where(post_pids >= 0, post_pids, -1)
-    E = Qt * max_df
-    Ep = round_up(E, chunk)
-    if Ep != E:
-        pad_rows = (Ep - E) // max_df + 1
-        pids = jnp.pad(pids, ((0, pad_rows), (0, 0)), constant_values=-1)
-        vals = jnp.pad(vals, ((0, pad_rows), (0, 0)))
-        pids = pids.reshape(-1)[:Ep].reshape(-1, chunk)
-        vals = vals.reshape(-1)[:Ep].reshape(-1, chunk)
+    valid = (post_pids >= 0) & (term_weights[:, None] > 0)  # match ref mask
+    vals = jnp.where(valid, term_weights[:, None] * post_imps, 0.0)
+    pids = jnp.where(valid, post_pids, -1)
+    pids, vals = _chunked(pids, vals, chunk)
     out = splade_block_pallas(pids.astype(jnp.int32),
                               vals.astype(jnp.float32),
                               n_docs=n_docs, block_d=block_d, chunk=chunk,
                               interpret=(impl == "interpret"))
     return out[:n_docs]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_docs", "impl", "block_d", "chunk"))
+def splade_block_scores_batch(post_pids, post_imps, term_weights, *,
+                              n_docs: int, impl: str = "auto",
+                              block_d: int = 2048, chunk: int = 512):
+    """Cross-query batched impact scores.
+
+    post_pids: (B, Qt, max_df) int32 (−1 pad); post_imps: (B, Qt, max_df)
+    f32 (de-quantised); term_weights: (B, Qt) f32 (0 disables a term)
+    → (B, n_docs) f32. One dispatch for the whole batch.
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return splade_block_scores_batch_ref(post_pids, post_imps,
+                                             term_weights, n_docs)
+    valid = (post_pids >= 0) & (term_weights[:, :, None] > 0)
+    vals = jnp.where(valid, term_weights[:, :, None] * post_imps, 0.0)
+    pids = jnp.where(valid, post_pids, -1)
+    pids, vals = _chunked(pids, vals, chunk)
+    out = splade_block_pallas_batch(pids.astype(jnp.int32),
+                                    vals.astype(jnp.float32),
+                                    n_docs=n_docs, block_d=block_d,
+                                    chunk=chunk,
+                                    interpret=(impl == "interpret"))
+    return out[:, :n_docs]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_docs", "k", "impl", "block_d",
+                                    "chunk"))
+def splade_block_topk_batch(post_pids, post_imps, term_weights, *,
+                            n_docs: int, k: int, impl: str = "auto",
+                            block_d: int = 2048, chunk: int = 512):
+    """Fused stage-1 dispatch: batched block scoring + per-query top-k in
+    one jitted computation → (pids (B, k) int32, scores (B, k) f32),
+    descending. ``k`` must be ≤ ``n_docs`` (caller clamps/pads)."""
+    scores = splade_block_scores_batch(post_pids, post_imps, term_weights,
+                                       n_docs=n_docs, impl=impl,
+                                       block_d=block_d, chunk=chunk)
+    top_scores, top_pids = jax.lax.top_k(scores, k)
+    return top_pids.astype(jnp.int32), top_scores

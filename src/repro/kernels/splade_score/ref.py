@@ -12,3 +12,13 @@ def splade_block_scores_ref(post_pids, post_imps, term_weights, n_docs: int):
     seg = jnp.where(valid, post_pids, n_docs).reshape(-1)
     vals = jnp.where(valid, term_weights[:, None] * post_imps, 0.0).reshape(-1)
     return jax.ops.segment_sum(vals, seg, num_segments=n_docs + 1)[:n_docs]
+
+
+def splade_block_scores_batch_ref(post_pids, post_imps, term_weights,
+                                  n_docs: int):
+    """Batched oracle: post_pids/post_imps (B, Qt, max_df);
+    term_weights (B, Qt) → (B, n_docs) f32 — one segment-sum per query,
+    vmapped so the whole batch is a single XLA computation."""
+    return jax.vmap(
+        lambda p, i, w: splade_block_scores_ref(p, i, w, n_docs)
+    )(post_pids, post_imps, term_weights)

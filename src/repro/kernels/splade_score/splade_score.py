@@ -15,6 +15,11 @@ bounded (chunk × BD fp32 ≤ 4 MiB by default). Work per block is
 O(E · BD) MACs — embarrassingly parallel over blocks, no data-dependent
 control flow, and the block grid is how the score vector shards over
 the 'model' mesh axis in the distributed serve path.
+
+The batched variant adds a leading batch axis to the grid (one kernel
+launch scores the whole micro-batch): each (b, i) step owns query b's
+postings and doc block i, so cross-query batches cost one dispatch
+instead of B.
 """
 
 from __future__ import annotations
@@ -26,13 +31,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(pids_ref, vals_ref, out_ref, *, block_d: int, chunk: int):
-    i = pl.program_id(0)
-    lo = i * block_d
-    pids = pids_ref[...].reshape(-1)       # (E,) int32, −1 padded
-    vals = vals_ref[...].reshape(-1)       # (E,) f32 (w_t · imp, 0 padded)
-    E = pids.shape[0]
+def _score_block(pids, vals, lo, *, block_d: int, chunk: int):
+    """Shared tile body: accumulate postings into one doc-id block.
 
+    pids: (E,) int32 (−1 padded); vals: (E,) f32 (w_t · imp, 0 padded);
+    lo: first pid of this block → (block_d,) f32 partial scores."""
+    E = pids.shape[0]
     local = pids - lo
     acc = jnp.zeros((block_d,), jnp.float32)
     iota = jax.lax.iota(jnp.int32, block_d)
@@ -43,7 +47,23 @@ def _kernel(pids_ref, vals_ref, out_ref, *, block_d: int, chunk: int):
         acc = acc + jax.lax.dot_general(
             vc, oh, (((0,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
-    out_ref[...] = acc
+    return acc
+
+
+def _kernel(pids_ref, vals_ref, out_ref, *, block_d: int, chunk: int):
+    i = pl.program_id(0)
+    out_ref[...] = _score_block(pids_ref[...].reshape(-1),
+                                vals_ref[...].reshape(-1), i * block_d,
+                                block_d=block_d, chunk=chunk)
+
+
+def _batch_kernel(pids_ref, vals_ref, out_ref, *, block_d: int, chunk: int):
+    # grid (B, n_blocks): axis 0 walks the query batch, axis 1 the doc-id
+    # blocks; blocks carry a size-1 batch dim squeezed before the body
+    i = pl.program_id(1)
+    out_ref[0, :] = _score_block(pids_ref[0].reshape(-1),
+                                 vals_ref[0].reshape(-1), i * block_d,
+                                 block_d=block_d, chunk=chunk)
 
 
 @functools.partial(jax.jit,
@@ -68,5 +88,31 @@ def splade_block_pallas(post_pids, post_vals, *, n_docs: int,
         ],
         out_specs=pl.BlockSpec((block_d,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((n_blocks * block_d,), jnp.float32),
+        interpret=interpret,
+    )(post_pids, post_vals)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_docs", "block_d", "chunk", "interpret"))
+def splade_block_pallas_batch(post_pids, post_vals, *, n_docs: int,
+                              block_d: int = 2048, chunk: int = 512,
+                              interpret: bool = False):
+    """Batched stage-1 dispatch: post_pids (B, Qt, max_df) int32;
+    post_vals (B, Qt, max_df) f32 → (B, n_docs_padded) f32; caller
+    slices [:, :n_docs]. One kernel launch for the whole micro-batch."""
+    B, Qt, max_df = post_pids.shape
+    E = Qt * max_df
+    assert E % chunk == 0, (E, chunk)
+    n_blocks = -(-n_docs // block_d)
+    kernel = functools.partial(_batch_kernel, block_d=block_d, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, Qt, max_df), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, Qt, max_df), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_d), lambda b, i: (b, i)),
+        out_shape=jax.ShapeDtypeStruct((B, n_blocks * block_d), jnp.float32),
         interpret=interpret,
     )(post_pids, post_vals)

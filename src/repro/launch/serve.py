@@ -27,7 +27,9 @@ from repro.serving.loadgen import run_poisson_load
 from repro.serving.server import RetrievalServer, TCPRetrievalServer
 
 
-def build_or_load(index_dir: str | None, mode: str):
+def build_or_load(index_dir: str | None, mode: str,
+                  splade_backend: str = "host",
+                  splade_max_df: int | None = None):
     if index_dir and (pathlib.Path(index_dir) / "colbert").exists():
         base = pathlib.Path(index_dir)
         index = ColBERTIndex(base / "colbert", mode=mode)
@@ -49,7 +51,9 @@ def build_or_load(index_dir: str | None, mode: str):
                                                 candidate_cap=1024,
                                                 ndocs=256))
     retr = MultiStageRetriever(sidx, searcher,
-                               MultiStageParams(first_k=200, alpha=0.3))
+                               MultiStageParams(first_k=200, alpha=0.3,
+                                                splade_backend=splade_backend,
+                                                splade_max_df=splade_max_df))
     return corpus, index, retr
 
 
@@ -59,16 +63,37 @@ def main():
     ap.add_argument("--mode", default="mmap", choices=["mmap", "ram"])
     ap.add_argument("--method", default="hybrid")
     ap.add_argument("--threads", type=int, default=1)
+    ap.add_argument("--splade-backend", default="host",
+                    choices=["host", "jax", "pallas"],
+                    help="stage-1 scorer: host CSR pass, device "
+                         "segment-sum, or the Pallas block kernel")
+    ap.add_argument("--splade-max-df", type=int, default=None,
+                    help="padded-postings df cap for jax/pallas "
+                         "(memory vs exactness; default: exact)")
+    ap.add_argument("--max-batch", type=int, default=1)
+    ap.add_argument("--batch-timeout-ms", type=float, default=2.0)
+    ap.add_argument("--latency-slo-ms", type=float, default=None,
+                    help="enable adaptive micro-batch sizing against "
+                         "this service-time SLO")
     ap.add_argument("--port", type=int, default=0,
                     help=">0: serve forever on this TCP port")
     ap.add_argument("--qps", type=float, default=2.0)
     ap.add_argument("--n", type=int, default=60)
     args = ap.parse_args()
 
-    corpus, index, retr = build_or_load(args.index_dir, args.mode)
-    server = RetrievalServer(ServeEngine(retr), n_threads=args.threads)
+    corpus, index, retr = build_or_load(args.index_dir, args.mode,
+                                        args.splade_backend,
+                                        args.splade_max_df)
+    # backend already configured (and device cache pre-materialised) via
+    # MultiStageParams in build_or_load
+    server = RetrievalServer(
+        ServeEngine(retr),
+        n_threads=args.threads, max_batch=args.max_batch,
+        batch_timeout_ms=args.batch_timeout_ms,
+        latency_slo_ms=args.latency_slo_ms)
     server.start()
-    print(f"serving ({args.mode} index, {args.threads} thread(s)); "
+    print(f"serving ({args.mode} index, {args.threads} thread(s), "
+          f"stage1={args.splade_backend}); "
           f"pool={index.store.total_bytes() / 1e6:.1f} MB")
 
     if args.port:
@@ -91,7 +116,8 @@ def main():
                     term_ids=corpus["q_term_ids"][i % 300],
                     term_weights=corpus["q_term_weights"][i % 300], k=20)
             for i in range(args.n)]
-    res = run_poisson_load(server, reqs, qps=args.qps, seed=0)
+    res = run_poisson_load(server, reqs, qps=args.qps, seed=0,
+                           burst=args.max_batch)
     s = res.summary()
     print(f"offered {s['offered_qps']:.2f} QPS → achieved "
           f"{s['achieved_qps']:.2f}; p50 {s['p50'] * 1e3:.1f} ms, "

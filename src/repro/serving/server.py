@@ -12,7 +12,9 @@ keeps collecting queued requests for up to ``batch_timeout_ms`` (or
 until ``max_batch``) and serves the group through
 ``ServeEngine.process_batch`` — one batched device dispatch per stage
 and deduplicated mmap gathers across co-batched queries. ``max_batch=1``
-preserves strict request-at-a-time behaviour.
+preserves strict request-at-a-time behaviour. With ``latency_slo_ms``
+set, the effective batch cap adapts: an EWMA of batch service time
+shrinks it under SLO pressure and grows it back when there is headroom.
 
 Fault tolerance: ``drain()`` completes in-flight work; a failing batch
 is retried request-by-request so one poisoned query cannot fail its
@@ -40,11 +42,29 @@ from repro.serving.engine import Request, Result, ServeEngine
 class RetrievalServer:
     def __init__(self, engine: ServeEngine, n_threads: int = 1,
                  max_queue: int = 4096, max_batch: int = 1,
-                 batch_timeout_ms: float = 2.0):
+                 batch_timeout_ms: float = 2.0,
+                 latency_slo_ms: Optional[float] = None,
+                 slo_ewma_alpha: float = 0.25, grow_patience: int = 3):
+        """``latency_slo_ms`` switches on adaptive micro-batch sizing:
+        the effective batch cap shrinks (halves, floor 1) when the EWMA
+        of batch service time exceeds the SLO and grows back
+        (doubles, ceiling ``max_batch``) after ``grow_patience``
+        consecutive under-threshold (< ~70% SLO) observations from
+        batches that *fill* the current cap — growth needs evidence at
+        the current operating point, not cheap small-batch samples, or
+        the cap hunts between sizes and periodically blows the SLO.
+        ``max_batch`` stays the hard ceiling; ``None`` keeps the cap
+        fixed (PR-1 behaviour)."""
         self.engine = engine
         self.n_threads = n_threads
         self.max_batch = max(1, max_batch)
         self.batch_timeout_ms = batch_timeout_ms
+        self.latency_slo_ms = latency_slo_ms
+        self.slo_ewma_alpha = slo_ewma_alpha
+        self.grow_patience = max(1, grow_patience)
+        self.ewma_latency_ms: Optional[float] = None
+        self.batch_cap = self.max_batch      # effective (adaptive) cap
+        self._grow_streak = 0
         self.queue: queue.Queue = queue.Queue(maxsize=max_queue)
         self.workers: list[threading.Thread] = []
         self.running = False
@@ -61,11 +81,12 @@ class RetrievalServer:
             self.workers.append(t)
 
     def _collect_batch(self, first):
-        """Coalesce queued requests behind ``first`` until ``max_batch``
-        or ``batch_timeout_ms`` elapses (micro-batching window)."""
+        """Coalesce queued requests behind ``first`` until the current
+        (possibly adapted) batch cap or ``batch_timeout_ms`` elapses."""
         batch = [first]
+        cap = self.batch_cap
         deadline = time.perf_counter() + self.batch_timeout_ms / 1e3
-        while len(batch) < self.max_batch:
+        while len(batch) < cap:
             remaining = deadline - time.perf_counter()
             if remaining <= 0:
                 break
@@ -74,6 +95,41 @@ class RetrievalServer:
             except queue.Empty:
                 break
         return batch
+
+    def _observe_latency(self, results):
+        """Adaptive micro-batch sizing: feed the served group's service
+        time into an EWMA and resize the effective cap against
+        ``latency_slo_ms`` (shrink fast, grow cautiously).
+
+        Service time — not client-observed latency — on purpose: queueing
+        delay rises exactly when the server is saturated, i.e. when
+        *larger* batches are needed; feeding it back into the shrink
+        decision would pin the cap at 1 under overload (positive
+        feedback). Service time measures what batching actually costs a
+        co-batched request."""
+        if self.latency_slo_ms is None or not results:
+            return
+        obs_ms = max(r.service_time for r in results) * 1e3
+        with self._lock:
+            a = self.slo_ewma_alpha
+            self.ewma_latency_ms = (obs_ms if self.ewma_latency_ms is None
+                                    else a * obs_ms
+                                    + (1 - a) * self.ewma_latency_ms)
+            if self.ewma_latency_ms > self.latency_slo_ms:
+                self.batch_cap = max(1, self.batch_cap // 2)
+                self._grow_streak = 0
+            elif (self.ewma_latency_ms < 0.7 * self.latency_slo_ms
+                  and len(results) >= self.batch_cap
+                  and self.batch_cap < self.max_batch):
+                self._grow_streak += 1
+                if self._grow_streak >= self.grow_patience:
+                    self.batch_cap = min(self.max_batch,
+                                         self.batch_cap * 2)
+                    self._grow_streak = 0
+            else:
+                # dead band, or a batch that didn't fill the cap: no
+                # evidence about the current operating point
+                self._grow_streak = 0
 
     def _worker(self):
         while self.running:
@@ -105,6 +161,7 @@ class RetrievalServer:
             fut.set_exception(e)
             return
         fut.set_result(res)
+        self._observe_latency([res])
 
     def _serve_batch(self, batch):
         claimed = [(req, fut) for req, fut in batch
@@ -121,6 +178,7 @@ class RetrievalServer:
             return
         for (_, fut), res in zip(claimed, results):
             fut.set_result(res)
+        self._observe_latency(results)
 
     def stop(self):
         self.running = False
@@ -155,7 +213,9 @@ class RetrievalServer:
         return {"queue_depth": self.queue.qsize(),
                 "served": self.engine.served,
                 "failed": self.failed,
-                "workers": sum(t.is_alive() for t in self.workers)}
+                "workers": sum(t.is_alive() for t in self.workers),
+                "batch_cap": self.batch_cap,
+                "ewma_latency_ms": self.ewma_latency_ms}
 
 
 # ---------------------------------------------------------------------------

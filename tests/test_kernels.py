@@ -12,7 +12,9 @@ from repro.index.residual import unpack_codes
 from repro.kernels.decompress_maxsim.ops import decompress_maxsim_scores
 from repro.kernels.maxsim.ops import maxsim_scores
 from repro.kernels.maxsim.ref import maxsim_scores_ref
-from repro.kernels.splade_score.ops import splade_block_scores
+from repro.kernels.splade_score.ops import (splade_block_scores,
+                                            splade_block_scores_batch,
+                                            splade_block_topk_batch)
 
 
 # ---------------------------------------------------------------------------
@@ -159,6 +161,59 @@ def test_splade_interpret_matches_ref(Qt, max_df, n_docs, block_d, chunk):
     b = splade_block_scores(pids, imps, w, n_docs=n_docs, impl="ref")
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
                                atol=1e-5)
+
+
+@pytest.mark.parametrize("B,Qt,max_df,n_docs,block_d,chunk", [
+    (3, 8, 64, 500, 256, 128),
+    (1, 4, 32, 300, 128, 256),    # B=1 degenerate; E pads to chunk
+    (5, 16, 16, 700, 512, 64),
+])
+def test_splade_batch_interpret_matches_ref(B, Qt, max_df, n_docs,
+                                            block_d, chunk):
+    k = jax.random.PRNGKey(B * 31 + Qt)
+    pids = jax.random.randint(k, (B, Qt, max_df), -1, n_docs, jnp.int32)
+    imps = jax.random.uniform(jax.random.fold_in(k, 1), (B, Qt, max_df))
+    w = jax.random.uniform(jax.random.fold_in(k, 2), (B, Qt))
+    a = splade_block_scores_batch(pids, imps, w, n_docs=n_docs,
+                                  impl="interpret", block_d=block_d,
+                                  chunk=chunk)
+    b = splade_block_scores_batch(pids, imps, w, n_docs=n_docs, impl="ref")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_splade_batch_ref_equals_per_query_loop():
+    B, Qt, max_df, n_docs = 4, 6, 48, 400
+    k = jax.random.PRNGKey(9)
+    pids = jax.random.randint(k, (B, Qt, max_df), -1, n_docs, jnp.int32)
+    imps = jax.random.uniform(jax.random.fold_in(k, 1), (B, Qt, max_df))
+    w = jax.random.uniform(jax.random.fold_in(k, 2), (B, Qt))
+    batch = splade_block_scores_batch(pids, imps, w, n_docs=n_docs,
+                                      impl="ref")
+    loop = jnp.stack([splade_block_scores(pids[b], imps[b], w[b],
+                                          n_docs=n_docs, impl="ref")
+                      for b in range(B)])
+    np.testing.assert_allclose(np.asarray(batch), np.asarray(loop),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_splade_fused_topk_matches_scores_then_topk():
+    B, Qt, max_df, n_docs, k_top = 3, 5, 40, 250, 17
+    k = jax.random.PRNGKey(21)
+    pids = jax.random.randint(k, (B, Qt, max_df), -1, n_docs, jnp.int32)
+    imps = jax.random.uniform(jax.random.fold_in(k, 1), (B, Qt, max_df))
+    w = jax.random.uniform(jax.random.fold_in(k, 2), (B, Qt))
+    top_pids, top_scores = splade_block_topk_batch(pids, imps, w,
+                                                   n_docs=n_docs, k=k_top,
+                                                   impl="ref")
+    scores = np.asarray(splade_block_scores_batch(pids, imps, w,
+                                                  n_docs=n_docs, impl="ref"))
+    for b in range(B):
+        want = np.sort(scores[b])[::-1][:k_top]
+        np.testing.assert_allclose(np.asarray(top_scores[b]), want,
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(scores[b][np.asarray(top_pids[b])],
+                                   np.asarray(top_scores[b]), rtol=1e-6)
 
 
 @settings(max_examples=20, deadline=None)
