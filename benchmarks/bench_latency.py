@@ -3,12 +3,25 @@ arrivals through the concurrent server — the paper's serving
 methodology (client-observed latency includes queueing; saturation
 knee at the service-rate reciprocal) — plus a throughput-vs-batch-size
 sweep for the cross-query micro-batcher, a per-stage latency breakdown
-(stage 1 vs stages 2–4), and a stage-1 backend sweep
-(host / jax / pallas, batched vs per-query)."""
+(stage 1 vs stages 2–4), a stage-1 backend sweep (host / jax / pallas,
+batched vs per-query), and a stage-graph pipeline sweep
+(``--pipeline-sweep``: QPS + measured host/device overlap fraction at
+depths 1/2/4)."""
 
 from __future__ import annotations
 
+import argparse
+import os
+import sys
 import time
+
+if "--pipeline-sweep" in sys.argv and "XLA_FLAGS" not in os.environ:
+    # CPU stand-in for the TPU serve path: pin XLA's CPU compute to one
+    # thread so device-bound stages model a resource distinct from the
+    # host-gather cores (on TPU the device queue is separate hardware
+    # and takes no host cores). Must happen before jax initialises.
+    os.environ["XLA_FLAGS"] = ("--xla_cpu_multi_thread_eigen=false "
+                               "intra_op_parallelism_threads=1")
 
 import numpy as np
 
@@ -20,6 +33,7 @@ from repro.serving.server import RetrievalServer
 METHODS = ["splade", "rerank", "hybrid", "colbert"]
 BATCH_SIZES = (1, 4, 16)
 STAGE1_BACKENDS = ("host", "jax")     # pallas rides on TPU runs only
+PIPELINE_DEPTHS = (1, 2, 4)
 
 
 def _requests(corpus, method, n):
@@ -166,6 +180,91 @@ def measure_stage1_backends(name: str = "marco", B: int = 16,
     return out
 
 
+def measure_pipeline_sweep(name: str = "marco", method: str = "hybrid",
+                           n_queries: int = 384, max_batch: int = 16,
+                           depths=PIPELINE_DEPTHS, trials: int = 5):
+    """Engine-level pipeline throughput + measured host/device overlap
+    fraction at several depths.
+
+    depth=1 runs each micro-batch synchronously through
+    ``ServeEngine.process_batch`` (one batch owned end-to-end); >= 2
+    feeds ``process_batch_async`` so batch N's device scoring (async
+    dispatch, lazy sync) executes while batch N+1's host mmap gather
+    runs. Measuring at the engine isolates the executor's effect from
+    server/client future machinery, whose jitter on small shared hosts
+    is larger than the overlap win itself. Depths are interleaved
+    across ``trials`` rounds; per-request results are checked identical
+    across depths.
+
+    The reported ``qps`` is the **median** across trials — ambient noise
+    on shared hosts is bursty and multiplicative, so a max would reward
+    whichever depth happened to catch the machine's fastest moment,
+    while the median tracks the typical rate. ``qps_best`` keeps the
+    fastest round for reference.
+
+    Run via ``python benchmarks/bench_latency.py --pipeline-sweep`` to
+    also pin XLA CPU compute to one thread (see module header) — the
+    configuration whose depth-2 >= depth-1 throughput claim the bench
+    asserts."""
+    corpus, index, sidx, retr = dataset(name, mode="mmap")
+    n_q = len(corpus["q_embs"])
+    request_batches = [
+        [Request(qid=i, method=method, q_emb=corpus["q_embs"][i % n_q],
+                 term_ids=corpus["q_term_ids"][i % n_q],
+                 term_weights=corpus["q_term_weights"][i % n_q], k=20)
+         for i in range(lo, lo + max_batch)]
+        for lo in range(0, n_queries, max_batch)]
+
+    def one_round(depth):
+        eng = ServeEngine(retr, pipeline_depth=depth)
+        retr.reset_stage_stats()
+        t0 = time.perf_counter()
+        if depth == 1:
+            results = [eng.process_batch(b) for b in request_batches]
+        else:
+            futs = [eng.process_batch_async(b) for b in request_batches]
+            results = [f.result(timeout=600) for f in futs]
+        wall = time.perf_counter() - t0
+        snap = retr.pipeline_stats.snapshot()
+        eng.close()
+        return n_queries / wall, snap, results
+
+    for depth in depths:
+        one_round(depth)     # warm compile caches + executor code paths
+
+    old_si = sys.getswitchinterval()
+    sys.setswitchinterval(5e-4)    # cut GIL handoff latency between the
+    out = {str(d): {"qps_trials": []} for d in depths}  # worker threads
+    baseline = None
+    try:
+        for _ in range(trials):
+            for depth in depths:
+                qps, snap, results = one_round(depth)
+                rec = out[str(depth)]
+                rec["qps_trials"].append(qps)
+                if qps >= max(rec["qps_trials"]):
+                    rec["overlap_fraction"] = snap["overlap_fraction"]
+                    rec["stage_wall_s"] = {
+                        n_: r["wall_s"]
+                        for n_, r in snap["stages"].items()}
+                flat = [r for group in results for r in group]
+                if baseline is None:
+                    baseline = flat
+                else:               # pipelined must be method-faithful
+                    for a, b in zip(baseline, flat):
+                        np.testing.assert_array_equal(a.pids, b.pids)
+    finally:
+        sys.setswitchinterval(old_si)
+    for depth in depths:
+        rec = out[str(depth)]
+        rec["qps"] = float(np.median(rec["qps_trials"]))
+        rec["qps_best"] = max(rec["qps_trials"])
+        print(f"pipeline[depth={depth}] qps={rec['qps']:7.1f} "
+              f"(best {rec['qps_best']:7.1f})  "
+              f"overlap={100 * rec['overlap_fraction']:5.1f}%")
+    return out
+
+
 def main(quick: bool = False):
     table = {"marco": measure("marco", n_queries=40 if quick else 60)}
     if not quick:
@@ -179,6 +278,8 @@ def main(quick: bool = False):
         for be in STAGE1_BACKENDS}
     s1 = measure_stage1_backends("marco", B=16, rounds=2 if quick else 4)
     table["marco"]["stage1_backends"] = s1
+    ps = measure_pipeline_sweep("marco", trials=3 if quick else 5)
+    table["marco"]["pipeline_sweep"] = ps
     save("latency_fig12", table)   # persist before any shape check: a
     # failed assertion must not discard the minutes of measurements that
     # would be needed to diagnose it
@@ -196,8 +297,28 @@ def main(quick: bool = False):
     # a batched B=16 stage-1 dispatch must beat 16 B=1 dispatches on the
     # device backend (the tentpole's acceptance bar)
     assert s1["jax"]["batch_ms"] < s1["jax"]["loop_ms"], s1
+    # the stage pipeline must actually overlap host gathers with device
+    # dispatches (the depth2 >= depth1 throughput claim is asserted by
+    # the --pipeline-sweep mode, where XLA CPU threading is pinned)
+    assert ps["2"]["overlap_fraction"] > 0.0, ps
     return table
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--pipeline-sweep", action="store_true",
+                    help="run only the stage-graph pipeline sweep "
+                         "(QPS + overlap fraction at depths 1/2/4) and "
+                         "record it into the bench JSON")
+    args = ap.parse_args()
+    if args.pipeline_sweep:
+        # keep the full per-round query count even under --quick: short
+        # rounds spend a third of their wall in pipeline fill/drain and
+        # the depth comparison drowns in ramp effects
+        sweep = measure_pipeline_sweep("marco", trials=5)
+        save("latency_pipeline_sweep", {"marco": {"pipeline_sweep": sweep}})
+        assert sweep["2"]["overlap_fraction"] > 0.0, sweep
+        assert sweep["2"]["qps"] >= sweep["1"]["qps"], sweep
+    else:
+        main(quick=args.quick)

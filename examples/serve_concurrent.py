@@ -26,7 +26,7 @@ from repro.data.synth import SynthCfg, make_corpus
 from repro.index.builder import ColBERTIndex, build_colbert_index
 from repro.index.splade_index import build_splade_index
 from repro.serving.engine import Request, ServeEngine
-from repro.serving.loadgen import run_poisson_load
+from repro.serving.loadgen import run_open_loop, run_poisson_load
 from repro.serving.server import (RetrievalServer, TCPRetrievalServer,
                                   tcp_query)
 
@@ -72,6 +72,14 @@ def main():
     ap.add_argument("--splade-max-df", type=int, default=None,
                     help="padded-postings df cap for jax/pallas "
                          "(memory vs exactness; default: exact)")
+    ap.add_argument("--pipeline-depth", type=int, default=1,
+                    help="stage-graph pipelining: 1 = synchronous, "
+                         ">=2 overlaps mmap gathers with device "
+                         "scoring across micro-batches")
+    ap.add_argument("--arrival-rate", type=float, default=None,
+                    help="drive with strictly open-loop Poisson "
+                         "arrivals at this QPS instead of the "
+                         "capacity-relative sweep")
     args = ap.parse_args()
 
     print("building index + retriever ...")
@@ -79,7 +87,7 @@ def main():
                                splade_max_df=args.splade_max_df)
     # backend already configured via MultiStageParams in build_stack
     server = RetrievalServer(
-        ServeEngine(retr),
+        ServeEngine(retr, pipeline_depth=args.pipeline_depth),
         n_threads=args.threads, max_batch=args.max_batch,
         batch_timeout_ms=args.batch_timeout_ms,
         latency_slo_ms=args.latency_slo_ms)
@@ -115,9 +123,19 @@ def main():
           f"({args.threads} thread(s), max_batch={args.max_batch})\n")
     print(f"{'offered':>10s} {'p50':>9s} {'p95':>9s} {'p99':>9s} "
           f"{'achieved':>9s}")
-    for frac in (0.3, 0.6, 0.9, 1.5):
-        res = run_poisson_load(server, reqs(args.n), qps=cap * frac,
-                               seed=0, burst=args.max_batch)
+    if args.arrival_rate is not None:
+        # strictly open-loop at exactly the requested rate (no sweep):
+        # what you ask for is what gets offered
+        rates = [args.arrival_rate]
+    else:
+        rates = [cap * frac for frac in (0.3, 0.6, 0.9, 1.5)]
+    for rate in rates:
+        if args.arrival_rate is not None:
+            res = run_open_loop(server, reqs(args.n), arrival_rate=rate,
+                                seed=0)
+        else:
+            res = run_poisson_load(server, reqs(args.n), qps=rate,
+                                   seed=0, burst=args.max_batch)
         s = res.summary()
         print(f"{s['offered_qps']:8.1f}/s {s['p50'] * 1e3:7.1f}ms "
               f"{s['p95'] * 1e3:7.1f}ms {s['p99'] * 1e3:7.1f}ms "

@@ -14,3 +14,10 @@ python -m pytest -x -q "$@"
 # their jnp oracles even when the full run above is filtered by "$@"
 python -m pytest -q tests/test_kernels.py tests/test_splade_stage1.py \
     -k "interpret"
+
+# pipelined smoke: bring the full serving stack up with the stage-graph
+# executor (pipeline_depth=2) over interpret-mode Pallas kernels
+# (--splade-backend pallas lowers to interpret off-TPU), serve a
+# Poisson load end-to-end, and shut down cleanly
+python -m repro.launch.serve --pipeline-depth 2 --splade-backend pallas \
+    --max-batch 8 --qps 100 --n 32

@@ -7,6 +7,9 @@ All operate per query over the candidate list; padding entries
 
 from __future__ import annotations
 
+import functools
+
+import jax
 import jax.numpy as jnp
 
 _EPS = 1e-9
@@ -43,13 +46,20 @@ def linear_scale(x, mask):
 NORMALIZERS = {"znorm": znorm, "minmax": minmax_norm, "linear": linear_scale}
 
 
+@functools.partial(jax.jit, static_argnames=("normalizer",))
 def hybrid_scores(splade_scores, colbert_scores, mask, *, alpha,
                   normalizer: str = "znorm"):
     """Both score arrays: (..., C) aligned on the same candidate list.
     α = 0 → pure Rerank (ColBERT order); α = 1 → pure SPLADE.
 
     ``alpha`` is a scalar, or — for batched (B, C) inputs — a (B,) array
-    of per-query interpolation weights."""
+    of per-query interpolation weights.
+
+    Jitted as ONE computation on purpose: fed a *pending* device value
+    (the serving pipeline's lazy MaxSim scores), a single async dispatch
+    chains on it without blocking, whereas eager op-by-op execution on
+    CPU runs small ops inline and would force the sync right here —
+    robbing the pipeline of its gather/score overlap."""
     norm = NORMALIZERS[normalizer]
     # padded slots may carry -inf (e.g. rerank scores for -1 pids);
     # zero them before the stats so 0·(-inf)=NaN cannot poison the

@@ -20,11 +20,24 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hybrid as hybrid_mod
-from repro.core.plaid import PLAIDSearcher
+from repro.core.plaid import (
+    PLAIDSearcher,
+    _pad_batch_rows,
+    pad_query_batch_host,
+)
 from repro.index.splade_device import SpladeDeviceCache
 from repro.index.splade_index import SpladeIndex
+from repro.serving.pipeline import (
+    DEVICE,
+    HOST,
+    CandidateBatch,
+    PipelineStats,
+    Stage,
+    StagePlan,
+)
 
 SPLADE_BACKENDS = ("host", "jax", "pallas")
+METHODS = ("colbert", "splade", "rerank", "hybrid")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,6 +58,11 @@ class MultiStageRetriever:
         self.params = params
         self._splade_device: Optional[SpladeDeviceCache] = None
         self._lock = threading.Lock()
+        self._plans: dict = {}
+        # single per-stage instrumentation record (wall time, dispatches,
+        # queue wait, mmap pages/tokens, overlap) — reset in place so
+        # pipeline executors can hold a stable reference
+        self.pipeline_stats = PipelineStats()
         self.set_splade_backend(params.splade_backend)  # validates
         self.reset_stage_stats()
         if params.splade_backend != "host":
@@ -77,16 +95,21 @@ class MultiStageRetriever:
         return "pallas" if jax.default_backend() == "tpu" else "interpret"
 
     def reset_stage_stats(self):
-        """Per-stage accounting for benchmarks: stage-1 wall time /
-        dispatch count vs everything after (stages 2–4 + fusion)."""
-        with self._lock:
-            self.stage_stats = {"stage1_s": 0.0, "stage1_dispatches": 0,
-                                "stage1_queries": 0, "rest_s": 0.0}
+        """Clear the per-stage instrumentation (in place: executors and
+        benchmarks keep a stable reference to ``pipeline_stats``)."""
+        self.pipeline_stats.reset()
 
-    def _account(self, **deltas):
-        with self._lock:
-            for key, d in deltas.items():
-                self.stage_stats[key] += d
+    @property
+    def stage_stats(self) -> dict:
+        """Legacy view of :attr:`pipeline_stats`: stage-1 wall time /
+        dispatch count vs everything after (stages 2–4 + fusion)."""
+        stages = self.pipeline_stats.snapshot()["stages"]
+        s1 = stages.get("splade_stage1", {})
+        return {"stage1_s": s1.get("wall_s", 0.0),
+                "stage1_dispatches": s1.get("dispatches", 0),
+                "stage1_queries": s1.get("queries", 0),
+                "rest_s": sum(r["wall_s"] for name, r in stages.items()
+                              if name != "splade_stage1")}
 
     # ------------------------------------------------------------------
     def run_splade(self, term_ids, term_weights, k: Optional[int] = None,
@@ -97,13 +120,15 @@ class MultiStageRetriever:
 
     def run_splade_batch(self, term_ids, term_weights,
                          k: Optional[int] = None,
-                         backend: Optional[str] = None):
+                         backend: Optional[str] = None,
+                         _record: bool = True):
         """Stage 1 for a whole micro-batch in one dispatch.
 
         term_ids/term_weights: sequences of per-query (Qt_i,) arrays.
         backend 'host' → vectorised CSR pass (`score_batch_host`);
         'jax'/'pallas' → device-resident padded postings (segment-sum /
-        block kernel) with a fused per-query top-k."""
+        block kernel) with a fused per-query top-k. ``_record=False``
+        skips stats (the plan runner accounts the stage itself)."""
         backend = backend or self.splade_backend
         if backend not in SPLADE_BACKENDS:
             raise ValueError(f"splade backend {backend!r} not in "
@@ -116,8 +141,10 @@ class MultiStageRetriever:
             cache = self.splade_device_cache()
             out = cache.score_topk(term_ids, term_weights, k,
                                    impl=self._splade_impl(backend))
-        self._account(stage1_s=time.perf_counter() - t0,
-                      stage1_dispatches=1, stage1_queries=len(term_ids))
+        if _record:
+            self.pipeline_stats.record(
+                "splade_stage1", HOST if backend == "host" else DEVICE,
+                time.perf_counter() - t0, queries=len(term_ids))
         return out
 
     # ------------------------------------------------------------------
@@ -151,8 +178,211 @@ class MultiStageRetriever:
 
         order = np.argsort(-final, kind="stable")[:k]
         out_pids = np.where(final[order] > -np.inf, pids[order], -1)
-        self._account(rest_s=time.perf_counter() - t0)
+        self.pipeline_stats.record("rest", HOST,
+                                   time.perf_counter() - t0, queries=1)
         return out_pids, final[order]
+
+    # ------------------------------------------------------------------
+    # stage-graph compilation (the serving pipeline's unit of execution)
+    # ------------------------------------------------------------------
+    def build_batch(self, method: str, q_embs=None, term_ids=None,
+                    term_weights=None, alphas=None, k: Optional[int] = None,
+                    n: Optional[int] = None) -> CandidateBatch:
+        """Package per-query inputs into the immutable carrier a
+        :class:`StagePlan` consumes."""
+        k = self.params.k if k is None else k
+        if n is None:
+            n = len(q_embs) if q_embs is not None else len(term_ids)
+        pick = (lambda seq: None if seq is None else tuple(seq[:n]))
+        return CandidateBatch(method=method, k=k, q_embs=pick(q_embs),
+                              term_ids=pick(term_ids),
+                              term_weights=pick(term_weights),
+                              alphas=alphas)
+
+    def compile_plan(self, method: str) -> StagePlan:
+        """Compile one of the four systems to its typed stage graph.
+
+        Plans are cached per (method, stage-1 backend); the stage
+        functions close over ``self`` and read dynamic state (backend,
+        device caches) at run time. The synchronous :meth:`search_batch`
+        and the pipelined executor both run the plan returned here, so
+        depth-1 vs depth-N results are method-faithful by construction.
+        """
+        if method not in METHODS:
+            raise ValueError(method)
+        key = (method, self.splade_backend)
+        with self._lock:
+            # one plan object per key: the engine keys live executors on
+            # plan identity, so two racing builders must not each get a
+            # distinct (but equivalent) plan
+            plan = self._plans.get(key)
+            if plan is None:
+                plan = self._plans[key] = self._build_plan(method)
+            return plan
+
+    def _build_plan(self, method: str) -> StagePlan:
+        """Stage functions obey a strict resource discipline: host-kind
+        stages touch ONLY numpy (mmap gathers, padding, formatting) and
+        never call into jax, because a host stage that device_puts or
+        blocks on a device value serialises behind the device worker's
+        in-flight dispatch and the pipeline loses its overlap. All
+        host↔device transfers and result syncs live inside device-kind
+        stages, so they are attributed to (and overlapped by) the
+        device worker."""
+        p = self.params
+        searcher = self.searcher
+        dr = searcher.device_resident
+        gather_kind = DEVICE if dr else HOST
+        access = None if dr else searcher.index.store.stats
+
+        if method == "colbert":
+            def probe(cb):
+                st = searcher.probe_batch(cb.q_embs)
+                # sync candidates to host here, on the device worker —
+                # the host gather must not block on device work
+                st["cand_np"] = np.asarray(st["cand"])
+                return cb.with_state(**st)
+
+            def gather_codes(cb):
+                s = cb.state
+                n_real = (s["cand_np"][:s["B"]] >= 0).sum(axis=1)
+                if dr:
+                    codes, valid = searcher.gather_codes_batch(s["cand"])
+                else:
+                    codes, _, valid = searcher._dedup_gather(
+                        s["cand_np"], codes_only=True)
+                return cb.with_state(codes=codes, cvalid=valid,
+                                     n_real=n_real)
+
+            def approx(cb):
+                s = cb.state
+                final_pids = searcher.approx_select_batch(
+                    s["scores_c"], jnp.asarray(s["codes"]),
+                    jnp.asarray(s["cvalid"]), s["q_valid"], s["cand"])
+                return cb.with_state(final_pids=final_pids,
+                                     final_np=np.asarray(final_pids))
+
+            def gather_residuals(cb):
+                s = cb.state
+                if dr:
+                    f_codes, f_packed, f_valid = \
+                        searcher.gather_tokens_batch(s["final_pids"])
+                else:
+                    f_codes, f_packed, f_valid = searcher._dedup_gather(
+                        s["final_np"], codes_only=False)
+                return cb.with_state(f_codes=f_codes, f_packed=f_packed,
+                                     f_valid=f_valid)
+
+            def exact(cb):
+                s = cb.state
+                ex = searcher.exact_score_gathered(
+                    s["q"], s["q_valid"], jnp.asarray(s["f_codes"]),
+                    jnp.asarray(s["f_packed"]), jnp.asarray(s["f_valid"]),
+                    s["final_pids"])
+                pids, scores = searcher.finalize_topk(
+                    ex, s["final_pids"], s["B"], cb.k)
+                return cb.with_state(out_pids=pids, out_scores=scores)
+
+            def fuse(cb):
+                s = cb.state
+                aux = [{"candidates": int(x)} for x in s["n_real"]]
+                return cb.evolve(pids=s["out_pids"],
+                                 scores=s["out_scores"]).with_state(aux=aux)
+
+            stages = (Stage("plaid_probe", DEVICE, probe),
+                      Stage("host_gather:codes", gather_kind, gather_codes),
+                      Stage("device_score:approx", DEVICE, approx),
+                      Stage("host_gather:residuals", gather_kind,
+                            gather_residuals),
+                      Stage("device_score:exact", DEVICE, exact),
+                      Stage("fuse_topk", DEVICE, fuse))
+            return StagePlan(method=method, stages=stages,
+                             access_stats=access)
+
+        s1_kind = HOST if self.splade_backend == "host" else DEVICE
+
+        def splade_stage(cb):
+            pids_b, s_scores = self.run_splade_batch(
+                list(cb.term_ids), list(cb.term_weights), p.first_k,
+                _record=False)          # both backends return host arrays
+            return cb.with_state(pids_b=pids_b, s_scores=s_scores)
+
+        if method == "splade":
+            def fuse_splade(cb):
+                s = cb.state
+                return cb.evolve(pids=s["pids_b"][:, :cb.k],
+                                 scores=s["s_scores"][:, :cb.k])
+
+            stages = (Stage("splade_stage1", s1_kind, splade_stage),
+                      Stage("fuse_topk", HOST, fuse_splade))
+            return StagePlan(method=method, stages=stages,
+                             access_stats=access)
+
+        # rerank / hybrid: SPLADE candidates → residual gather → exact
+        # MaxSim rescoring (+ α-fusion) → top-k
+        def gather(cb):
+            s = cb.state
+            q, q_valid = pad_query_batch_host(cb.q_embs)
+            B, q, q_valid, pids_p = _pad_batch_rows(
+                q, q_valid, np.asarray(s["pids_b"]))
+            if dr:
+                codes, packed, valid = searcher.gather_tokens_batch(pids_p)
+            else:
+                codes, packed, valid = searcher._dedup_gather(
+                    pids_p, codes_only=False)
+            return cb.with_state(q=q, q_valid=q_valid, B=B, pids_p=pids_p,
+                                 g_codes=codes, g_packed=packed,
+                                 g_valid=valid)
+
+        def score(cb):
+            s = cb.state
+            # dispatch only — the returned values are lazy device
+            # arrays; the fuse stage's first host touch waits for them
+            # with the GIL released, so the device executes batch N
+            # while the host worker gathers batch N+1
+            lazy = searcher.score_gathered_lazy(
+                jnp.asarray(s["q"]), jnp.asarray(s["q_valid"]),
+                jnp.asarray(s["g_codes"]), jnp.asarray(s["g_packed"]),
+                jnp.asarray(s["g_valid"]), s["pids_p"])[:s["B"]]
+            if method == "hybrid":
+                # α-fusion is a jitted dispatch → it belongs to the
+                # device stage, not the host-side fuse
+                mask = s["pids_b"] >= 0
+                final = hybrid_mod.hybrid_scores(
+                    jnp.asarray(s["s_scores"]), lazy,
+                    jnp.asarray(mask), alpha=jnp.asarray(cb.alphas),
+                    normalizer=p.normalizer)
+                return cb.with_state(final_dev=final)
+            return cb.with_state(c_scores_dev=lazy)
+
+        def fuse_rerank(cb):
+            s = cb.state
+            pids_b = s["pids_b"]
+            if method == "rerank":
+                c_scores = np.asarray(s["c_scores_dev"])   # device sync
+                final = np.where(pids_b >= 0, c_scores, -np.inf)
+            else:
+                final = np.asarray(s["final_dev"])         # device sync
+            order = np.argsort(-final, axis=1, kind="stable")[:, :cb.k]
+            sorted_final = np.take_along_axis(final, order, axis=1)
+            out_pids = np.where(
+                sorted_final > -np.inf,
+                np.take_along_axis(pids_b, order, axis=1), -1)
+            return cb.evolve(pids=out_pids, scores=sorted_final)
+
+        # score opens the async window (its dispatch returns lazy device
+        # values); fuse closes it (first host touch blocks). The
+        # single-worker scheduler parks a batch between the two while it
+        # runs the next batch's host stages — and fuse is DEVICE-kind so
+        # that in threaded mode the sync also stays off the gather
+        # worker.
+        stages = (Stage("splade_stage1", s1_kind, splade_stage),
+                  Stage("host_gather:residuals", gather_kind, gather),
+                  Stage("device_score:maxsim", DEVICE, score,
+                        opens_async=True),
+                  Stage("fuse_topk", DEVICE, fuse_rerank,
+                        closes_async=True))
+        return StagePlan(method=method, stages=stages, access_stats=access)
 
     # ------------------------------------------------------------------
     def search_batch(self, method, q_embs=None, term_ids=None,
@@ -165,6 +395,9 @@ class MultiStageRetriever:
         sequences (ragged lengths fine). ``alpha``: scalar, per-query
         sequence, or None (per-params default). Returns
         (pids (B, k), scores (B, k)) matching per-query :meth:`search`.
+
+        Runs the method's compiled :class:`StagePlan` synchronously —
+        the ``pipeline_depth=1`` path of the stage-graph executor.
         """
         p = self.params
         k = p.k if k is None else k
@@ -178,38 +411,10 @@ class MultiStageRetriever:
             method = methods[0]
 
         alphas = self._alpha_array(alpha, n)
-
-        if method == "colbert":
-            pids, scores, _ = self.searcher.search_batch(q_embs, k=k)
-            return pids, scores
-
-        # SPLADE first stage: one batched dispatch for the whole
-        # micro-batch (host vectorised pass or device-resident kernel)
-        pids_b, s_scores = self.run_splade_batch(
-            term_ids[:n], term_weights[:n], p.first_k)  # (B, first_k)
-        if method == "splade":
-            return pids_b[:, :k], s_scores[:, :k]
-
-        t0 = time.perf_counter()
-        # batched ColBERT rescoring: one dedup gather + one dispatch
-        c_scores = self.searcher.rerank_batch(q_embs, pids_b)
-        mask = pids_b >= 0
-        if method == "rerank":
-            final = np.where(mask, c_scores, -np.inf)
-        elif method == "hybrid":
-            final = np.asarray(hybrid_mod.hybrid_scores(
-                jnp.asarray(s_scores), jnp.asarray(c_scores),
-                jnp.asarray(mask), alpha=jnp.asarray(alphas),
-                normalizer=p.normalizer))
-        else:
-            raise ValueError(method)
-
-        order = np.argsort(-final, axis=1, kind="stable")[:, :k]
-        sorted_final = np.take_along_axis(final, order, axis=1)
-        out_pids = np.where(sorted_final > -np.inf,
-                            np.take_along_axis(pids_b, order, axis=1), -1)
-        self._account(rest_s=time.perf_counter() - t0)
-        return out_pids, sorted_final
+        cb = self.build_batch(method, q_embs, term_ids, term_weights,
+                              alphas, k, n)
+        cb = self.compile_plan(method).run(cb, stats=self.pipeline_stats)
+        return cb.pids, cb.scores
 
     def _alpha_array(self, alpha, n: int) -> np.ndarray:
         if alpha is None:
@@ -218,6 +423,16 @@ class MultiStageRetriever:
             return np.full(n, float(alpha), np.float32)
         return np.asarray([self.params.alpha if a is None else float(a)
                            for a in alpha], np.float32)
+
+    @staticmethod
+    def scatter_group(out_pids, out_scores, idx, pids, scores):
+        """Scatter one method group's results back into request order.
+        splade-first groups return min(k, first_k) columns — they fill
+        the prefix, leaving the (-1, -inf) tail as padding. Shared with
+        the pipelined engine so mixed-batch semantics cannot drift."""
+        w = pids.shape[1]
+        out_pids[idx, :w] = pids
+        out_scores[idx, :w] = scores
 
     def _search_batch_mixed(self, methods, q_embs, term_ids, term_weights,
                             alpha, k: int):
@@ -234,9 +449,5 @@ class MultiStageRetriever:
             pids, scores = self.search_batch(
                 m, q_embs=pick(q_embs), term_ids=pick(term_ids),
                 term_weights=pick(term_weights), alpha=alphas[idx], k=k)
-            # splade-first groups return min(k, first_k) columns — scatter
-            # into the prefix, leaving the (-1, -inf) tail as padding
-            w = pids.shape[1]
-            out_pids[idx, :w] = pids
-            out_scores[idx, :w] = scores
+            self.scatter_group(out_pids, out_scores, idx, pids, scores)
         return out_pids, out_scores

@@ -94,14 +94,10 @@ def stage4_exact_score(q_emb, packed, cids, valid, centroids,
 # batched stage kernels (cross-query micro-batches)
 # --------------------------------------------------------------------------
 
-def pad_query_batch(q_embs, lq_multiple: int = 4):
-    """Stack ragged queries. q_embs: sequence of (Lq_i, d) arrays or an
-    already-stacked (B, Lq, d) array → ((B, Lq_pad, d) f32 zero-padded,
-    (B, Lq_pad) bool validity).
-
-    ``Lq_pad`` rounds the longest query up to ``lq_multiple`` so ragged
-    batches reuse a small set of compiled shapes instead of recompiling
-    the batched stages per distinct length."""
+def pad_query_batch_host(q_embs, lq_multiple: int = 4):
+    """Numpy-only variant of :func:`pad_query_batch` (no device
+    transfer) — for host-bound pipeline stages, which must not touch
+    the device client while a device stage is dispatching."""
     arrs = [np.asarray(qe, np.float32) for qe in q_embs]
     d = arrs[0].shape[-1]
     lq_pad = -(-max(a.shape[0] for a in arrs) // lq_multiple) * lq_multiple
@@ -110,6 +106,18 @@ def pad_query_batch(q_embs, lq_multiple: int = 4):
     for i, a in enumerate(arrs):
         q[i, :a.shape[0]] = a
         valid[i, :a.shape[0]] = True
+    return q, valid
+
+
+def pad_query_batch(q_embs, lq_multiple: int = 4):
+    """Stack ragged queries. q_embs: sequence of (Lq_i, d) arrays or an
+    already-stacked (B, Lq, d) array → ((B, Lq_pad, d) f32 zero-padded,
+    (B, Lq_pad) bool validity).
+
+    ``Lq_pad`` rounds the longest query up to ``lq_multiple`` so ragged
+    batches reuse a small set of compiled shapes instead of recompiling
+    the batched stages per distinct length."""
+    q, valid = pad_query_batch_host(q_embs, lq_multiple)
     return jnp.asarray(q), jnp.asarray(valid)
 
 
@@ -231,6 +239,98 @@ class PLAIDSearcher:
         out_scores[:k_eff] = np.asarray(top_s)
         return out_pids, out_scores, {"candidates": n_real}
 
+    # -- batched stage pieces (shared by search_batch and the pipeline) ----
+    #
+    # ``MultiStageRetriever.compile_plan`` wraps these into typed stages
+    # (plaid_probe / host_gather / device_score / fuse_topk) and
+    # ``search_batch`` composes the exact same functions in the exact
+    # same order, so the synchronous and pipelined paths cannot drift.
+
+    def probe_batch(self, q_embs) -> dict:
+        """Stages 1-2 (device): pad/stack ragged queries, probe
+        centroids, generate per-query unique candidate sets."""
+        p = self.params
+        q, q_valid = pad_query_batch(q_embs)
+        B, q, q_valid = _pad_batch_rows(q, q_valid)
+        scores_c, cids = stage1_centroid_probe_batch(q, q_valid,
+                                                     self.centroids, p.nprobe)
+        cand = stage2_candidates_batch(self.ivf_padded, cids,
+                                       p.candidate_cap)       # (Bp, cap)
+        return {"B": B, "q": q, "q_valid": q_valid,
+                "scores_c": scores_c, "cand": cand}
+
+    def gather_codes_batch(self, cand):
+        """Codes-only candidate gather for the approximate stage — the
+        host-bound step in mmap mode (never faults a residual page)."""
+        if self.device_resident:
+            codes, _, valid = self._gather_device_batch(cand)
+            return codes, valid
+        codes_np, _, valid_np = self._dedup_gather(np.asarray(cand),
+                                                   codes_only=True)
+        return jnp.asarray(codes_np), jnp.asarray(valid_np)
+
+    def approx_select_batch(self, scores_c, codes, valid, q_valid, cand):
+        """Stage 3 (device): centroid-interaction scores → the ``ndocs``
+        survivors entering exact scoring."""
+        approx = stage3_approx_score_batch(scores_c, codes, valid, q_valid)
+        approx = jnp.where(cand >= 0, approx, -jnp.inf)
+        ndocs = min(self.params.ndocs, self.params.candidate_cap)
+        _, keep = jax.lax.top_k(approx, ndocs)
+        return jnp.take_along_axis(cand, keep, axis=1)        # (Bp, ndocs)
+
+    def gather_tokens_batch(self, pids):
+        """Residual gather (host-bound in mmap mode — the only stage
+        that faults residual pages; one deduplicated gather per batch)."""
+        if self.device_resident:
+            dev_pids = pids if isinstance(pids, jax.Array) \
+                else jnp.asarray(pids)
+            return self._gather_device_batch(dev_pids)
+        c_np, r_np, v_np = self._dedup_gather(np.asarray(pids),
+                                              codes_only=False)
+        return jnp.asarray(c_np), jnp.asarray(r_np), jnp.asarray(v_np)
+
+    def exact_score_gathered(self, q, q_valid, codes, packed, valid,
+                             final_pids):
+        """Stage 4 (device): fused decompress + MaxSim over gathered
+        candidate tokens; -inf at padded candidate slots."""
+        exact = decompress_maxsim_scores_batch(
+            q, packed, codes.astype(jnp.int32), valid, self.centroids,
+            self.bucket_weights, nbits=self.index.nbits, q_valid=q_valid)
+        return jnp.where(final_pids >= 0, exact, -jnp.inf)
+
+    def finalize_topk(self, exact, final_pids, B: int, k: int):
+        """Terminal fuse: per-query top-k and (-1, -inf)-padded (B, k)
+        host arrays."""
+        ndocs = min(self.params.ndocs, self.params.candidate_cap)
+        k_eff = min(k, ndocs)
+        top_s, idx = jax.lax.top_k(exact, k_eff)
+        out_pids = np.full((B, k), -1, np.int64)
+        out_scores = np.full((B, k), -np.inf, np.float32)
+        out_pids[:, :k_eff] = np.asarray(
+            jnp.take_along_axis(final_pids, idx, axis=1))[:B]
+        out_scores[:, :k_eff] = np.asarray(top_s)[:B]
+        return out_pids, out_scores
+
+    def score_gathered_lazy(self, q, q_valid, codes, packed, valid,
+                            pids_p):
+        """Rerank scoring over already-gathered tokens, returned as the
+        *lazy* device value: the jitted dispatch returns immediately
+        (async on every backend, CPU included) and the caller syncs when
+        it first touches the result — a GIL-releasing wait, so the
+        pipeline's host worker gathers the next micro-batch while the
+        device executes this one."""
+        scores = decompress_maxsim_scores_batch(
+            q, packed, codes.astype(jnp.int32), valid, self.centroids,
+            self.bucket_weights, nbits=self.index.nbits, q_valid=q_valid)
+        return jnp.where(jnp.asarray(pids_p) >= 0, scores, -jnp.inf)
+
+    def score_gathered_batch(self, q, q_valid, codes, packed, valid,
+                             pids_p, B: int):
+        """Rerank scoring over already-gathered tokens → host (B, C)
+        scores aligned with ``pids_p`` (rows beyond ``B`` dropped)."""
+        return np.asarray(self.score_gathered_lazy(
+            q, q_valid, codes, packed, valid, pids_p))[:B]
+
     # -- batched full PLAID (stages 1-4 over a query micro-batch) ----------
     def search_batch(self, q_embs, k: Optional[int] = None):
         """Cross-query batched PLAID. q_embs: sequence of (Lq_i, dim)
@@ -241,53 +341,18 @@ class PLAIDSearcher:
         Host candidate gathers are deduplicated across the batch, so
         co-batched queries share mmap page touches; device stages run on
         stacked (B, ...) inputs in a single dispatch each."""
-        p = self.params
-        k = p.k if k is None else k
-        q, q_valid = pad_query_batch(q_embs)
-        B, q, q_valid = _pad_batch_rows(q, q_valid)
-
-        scores_c, cids = stage1_centroid_probe_batch(q, q_valid,
-                                                     self.centroids, p.nprobe)
-        cand = stage2_candidates_batch(self.ivf_padded, cids,
-                                       p.candidate_cap)       # (Bp, cap)
-        cand_np = np.asarray(cand)
-        n_real = (cand_np[:B] >= 0).sum(axis=1)
-
-        if self.device_resident:
-            codes, _, valid = self._gather_device_batch(cand)
-        else:
-            codes_np, _, valid_np = self._dedup_gather(cand_np,
-                                                       codes_only=True)
-            codes, valid = jnp.asarray(codes_np), jnp.asarray(valid_np)
-
-        approx = stage3_approx_score_batch(scores_c, codes, valid, q_valid)
-        approx = jnp.where(cand >= 0, approx, -jnp.inf)
-        ndocs = min(p.ndocs, p.candidate_cap)
-        _, keep = jax.lax.top_k(approx, ndocs)
-        final_pids = jnp.take_along_axis(cand, keep, axis=1)  # (B, ndocs)
-
-        if self.device_resident:
-            f_codes, f_packed, f_valid = self._gather_device_batch(final_pids)
-        else:
-            # the only residual access — one deduplicated gather for the
-            # whole batch (shared pages accounted once)
-            c_np, r_np, v_np = self._dedup_gather(np.asarray(final_pids),
-                                                  codes_only=False)
-            f_codes, f_packed, f_valid = (jnp.asarray(c_np),
-                                          jnp.asarray(r_np),
-                                          jnp.asarray(v_np))
-
-        exact = decompress_maxsim_scores_batch(
-            q, f_packed, f_codes.astype(jnp.int32), f_valid, self.centroids,
-            self.bucket_weights, nbits=self.index.nbits, q_valid=q_valid)
-        exact = jnp.where(final_pids >= 0, exact, -jnp.inf)
-        k_eff = min(k, ndocs)
-        top_s, idx = jax.lax.top_k(exact, k_eff)
-        out_pids = np.full((B, k), -1, np.int64)
-        out_scores = np.full((B, k), -np.inf, np.float32)
-        out_pids[:, :k_eff] = np.asarray(
-            jnp.take_along_axis(final_pids, idx, axis=1))[:B]
-        out_scores[:, :k_eff] = np.asarray(top_s)[:B]
+        k = self.params.k if k is None else k
+        st = self.probe_batch(q_embs)
+        cand_np = np.asarray(st["cand"])
+        n_real = (cand_np[:st["B"]] >= 0).sum(axis=1)
+        codes, valid = self.gather_codes_batch(st["cand"])
+        final_pids = self.approx_select_batch(st["scores_c"], codes, valid,
+                                              st["q_valid"], st["cand"])
+        f_codes, f_packed, f_valid = self.gather_tokens_batch(final_pids)
+        exact = self.exact_score_gathered(st["q"], st["q_valid"], f_codes,
+                                          f_packed, f_valid, final_pids)
+        out_pids, out_scores = self.finalize_topk(exact, final_pids,
+                                                  st["B"], k)
         return out_pids, out_scores, [{"candidates": int(n)} for n in n_real]
 
     # -- rerank-only (stage 4 on external candidates) ----------------------
@@ -314,18 +379,9 @@ class PLAIDSearcher:
         q, q_valid = pad_query_batch(q_embs)
         pids = np.asarray(pids)
         B, q, q_valid, pids_p = _pad_batch_rows(q, q_valid, pids)
-        if self.device_resident:
-            codes, packed, valid = self._gather_device_batch(
-                jnp.asarray(pids_p))
-        else:
-            c_np, r_np, v_np = self._dedup_gather(pids_p, codes_only=False)
-            codes, packed, valid = (jnp.asarray(c_np), jnp.asarray(r_np),
-                                    jnp.asarray(v_np))
-        scores = decompress_maxsim_scores_batch(
-            q, packed, codes.astype(jnp.int32), valid, self.centroids,
-            self.bucket_weights, nbits=self.index.nbits, q_valid=q_valid)
-        return np.asarray(jnp.where(jnp.asarray(pids_p) >= 0, scores,
-                                    -jnp.inf))[:B]
+        codes, packed, valid = self.gather_tokens_batch(pids_p)
+        return self.score_gathered_batch(q, q_valid, codes, packed, valid,
+                                         pids_p, B)
 
     # -- deduplicated host gather (shared mmap pages per batch) ------------
     def _dedup_gather(self, pids_b: np.ndarray, *, codes_only: bool):

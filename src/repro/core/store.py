@@ -23,6 +23,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import pathlib
+import threading
 from collections import OrderedDict
 from typing import Optional
 
@@ -43,6 +44,13 @@ def rss_bytes() -> int:
 
 @dataclasses.dataclass
 class AccessStats:
+    """Mmap access accounting. Mutation is thread-safe: the pipelined
+    serving path updates it from dedicated gather-stage workers while
+    benchmarks/health endpoints read it concurrently — all mutation
+    goes through :meth:`account` under a lock, and readers that need a
+    coherent view take :meth:`snapshot`. (Bare field reads remain fine
+    for single-threaded tests.)"""
+
     gathers: int = 0
     tokens_read: int = 0
     pages_touched: int = 0            # residual pages, cumulative
@@ -50,13 +58,47 @@ class AccessStats:
     residual_gathers: int = 0         # gathers that faulted residual rows
     residual_tokens_read: int = 0     # rows read from the residual file
 
+    def __post_init__(self):
+        self._lock = threading.Lock()
+
     def reset(self):
-        self.gathers = 0
-        self.tokens_read = 0
-        self.pages_touched = 0
-        self.unique_pages = set()
-        self.residual_gathers = 0
-        self.residual_tokens_read = 0
+        with self._lock:
+            self.gathers = 0
+            self.tokens_read = 0
+            self.pages_touched = 0
+            self.unique_pages = set()
+            self.residual_gathers = 0
+            self.residual_tokens_read = 0
+
+    def account(self, token_ids: np.ndarray, packed_dim: int,
+                residuals: bool = True):
+        """Record one gather of ``token_ids`` rows (atomically)."""
+        n = int(token_ids.size)
+        if residuals:
+            # which 4 KiB pages of residuals.bin do these rows touch?
+            byte_lo = token_ids.astype(np.int64) * packed_dim
+            pages = np.unique(byte_lo // PAGE_BYTES)
+        with self._lock:
+            self.gathers += 1
+            self.tokens_read += n
+            if not residuals:
+                return
+            self.residual_gathers += 1
+            self.residual_tokens_read += n
+            self.pages_touched += len(pages)
+            if self.unique_pages is not None:
+                self.unique_pages.update(pages.tolist())
+
+    def snapshot(self) -> dict:
+        """Atomic, plain-dict copy for cross-thread readers (per-stage
+        instrumentation deltas, tests, benchmarks)."""
+        with self._lock:
+            return {"gathers": self.gathers,
+                    "tokens_read": self.tokens_read,
+                    "pages_touched": self.pages_touched,
+                    "unique_pages": len(self.unique_pages or ()),
+                    "residual_gathers": self.residual_gathers,
+                    "residual_tokens_read": self.residual_tokens_read}
 
 
 class PagedStore:
@@ -120,18 +162,7 @@ class PagedStore:
         return idx.reshape(-1)
 
     def _account(self, token_ids, residuals: bool = True):
-        self.stats.gathers += 1
-        self.stats.tokens_read += int(token_ids.size)
-        if not residuals:
-            return
-        self.stats.residual_gathers += 1
-        self.stats.residual_tokens_read += int(token_ids.size)
-        # which 4 KiB pages of residuals.bin do these rows touch?
-        byte_lo = token_ids.astype(np.int64) * self.packed_dim
-        pages = np.unique(byte_lo // PAGE_BYTES)
-        self.stats.pages_touched += len(pages)
-        if self.stats.unique_pages is not None:
-            self.stats.unique_pages.update(pages.tolist())
+        self.stats.account(token_ids, self.packed_dim, residuals=residuals)
 
     # -- info -------------------------------------------------------------
     def total_bytes(self) -> int:

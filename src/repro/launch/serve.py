@@ -23,7 +23,7 @@ from repro.data.synth import SynthCfg, make_corpus
 from repro.index.builder import ColBERTIndex, build_colbert_index
 from repro.index.splade_index import SpladeIndex, build_splade_index
 from repro.serving.engine import Request, ServeEngine
-from repro.serving.loadgen import run_poisson_load
+from repro.serving.loadgen import run_open_loop, run_poisson_load
 from repro.serving.server import RetrievalServer, TCPRetrievalServer
 
 
@@ -75,25 +75,44 @@ def main():
     ap.add_argument("--latency-slo-ms", type=float, default=None,
                     help="enable adaptive micro-batch sizing against "
                          "this service-time SLO")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="stage-graph pipelining at the default depth "
+                         "(2, double-buffered)")
+    ap.add_argument("--pipeline-depth", type=int, default=None,
+                    help="batches in flight: 1 = synchronous, "
+                         ">=2 overlaps micro-batch N+1's mmap gather "
+                         "with batch N's device dispatch")
+    ap.add_argument("--pipeline-workers", default="single",
+                    choices=["single", "kind"],
+                    help="executor scheduling: single-worker software "
+                         "pipelining (async dispatch; best under the "
+                         "GIL) or per-kind host/device worker threads "
+                         "(multi-core hosts / TPU)")
+    ap.add_argument("--arrival-rate", type=float, default=None,
+                    help="strictly open-loop Poisson arrivals at this "
+                         "QPS (instead of the default generator)")
     ap.add_argument("--port", type=int, default=0,
                     help=">0: serve forever on this TCP port")
     ap.add_argument("--qps", type=float, default=2.0)
     ap.add_argument("--n", type=int, default=60)
     args = ap.parse_args()
 
+    depth = (args.pipeline_depth if args.pipeline_depth is not None
+             else (2 if args.pipeline else 1))
     corpus, index, retr = build_or_load(args.index_dir, args.mode,
                                         args.splade_backend,
                                         args.splade_max_df)
     # backend already configured (and device cache pre-materialised) via
     # MultiStageParams in build_or_load
     server = RetrievalServer(
-        ServeEngine(retr),
+        ServeEngine(retr, pipeline_depth=depth,
+                    pipeline_workers=args.pipeline_workers),
         n_threads=args.threads, max_batch=args.max_batch,
         batch_timeout_ms=args.batch_timeout_ms,
         latency_slo_ms=args.latency_slo_ms)
     server.start()
     print(f"serving ({args.mode} index, {args.threads} thread(s), "
-          f"stage1={args.splade_backend}); "
+          f"stage1={args.splade_backend}, pipeline_depth={depth}); "
           f"pool={index.store.total_bytes() / 1e6:.1f} MB")
 
     if args.port:
@@ -116,12 +135,21 @@ def main():
                     term_ids=corpus["q_term_ids"][i % 300],
                     term_weights=corpus["q_term_weights"][i % 300], k=20)
             for i in range(args.n)]
-    res = run_poisson_load(server, reqs, qps=args.qps, seed=0,
-                           burst=args.max_batch)
+    if args.arrival_rate is not None:
+        res = run_open_loop(server, reqs, arrival_rate=args.arrival_rate,
+                            seed=0)
+    else:
+        res = run_poisson_load(server, reqs, qps=args.qps, seed=0,
+                               burst=args.max_batch)
     s = res.summary()
     print(f"offered {s['offered_qps']:.2f} QPS → achieved "
           f"{s['achieved_qps']:.2f}; p50 {s['p50'] * 1e3:.1f} ms, "
           f"p95 {s['p95'] * 1e3:.1f} ms, p99 {s['p99'] * 1e3:.1f} ms")
+    if depth > 1:
+        h = server.health()
+        print(f"pipeline overlap: "
+              f"{100 * h.get('overlap_fraction', 0.0):.1f}% "
+              f"(stage queues: {h['pipeline']['queues']})")
     print("mmap working set:",
           f"{100 * index.store.resident_fraction_estimate():.1f}% of pool")
     server.drain()

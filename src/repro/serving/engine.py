@@ -5,6 +5,14 @@ extensions; in this stack the same property holds natively — JAX device
 dispatch releases the GIL, so a thread pool scales until the backend
 saturates. The engine is stateless per request and thread-safe: all
 mutable state (page-cache stats) is guarded or append-only.
+
+With ``pipeline_depth >= 2`` the engine executes micro-batches through
+the stage-graph pipeline (`repro.serving.pipeline`): each method's
+compiled :class:`StagePlan` runs on per-stage workers connected by
+bounded queues, so micro-batch N+1's host mmap gather overlaps
+micro-batch N's device dispatch. ``process_batch_async`` feeds the
+pipeline head and returns a Future resolved at the tail;
+``pipeline_depth=1`` (default) keeps the synchronous path.
 """
 
 from __future__ import annotations
@@ -12,11 +20,17 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
+from concurrent.futures import Future
 from typing import Optional
 
 import numpy as np
 
 from repro.core.multistage import MultiStageRetriever
+from repro.serving.pipeline import (
+    PipelineExecutor,
+    PipelineStopped,
+    gather_futures,
+)
 
 
 @dataclasses.dataclass
@@ -53,22 +67,105 @@ class Result:
 
 class ServeEngine:
     def __init__(self, retriever: MultiStageRetriever,
-                 splade_backend: Optional[str] = None):
+                 splade_backend: Optional[str] = None,
+                 pipeline_depth: int = 1,
+                 pipeline_workers: str = "single"):
         """``splade_backend`` (host | jax | pallas) switches the
         retriever's stage-1 scorer at construction time — a convenience
         for retrievers built elsewhere, NOT a per-engine scope: the
         retriever owns the setting, so a later ``set_splade_backend``
         (or another engine constructed over the same retriever) wins.
         jax/pallas also pre-materialise the padded-postings device cache
-        so the first request doesn't pay the transfer."""
+        so the first request doesn't pay the transfer.
+
+        ``pipeline_depth``: 1 = synchronous batches (classic path);
+        >= 2 = stage-graph pipelining with that many batches in flight
+        (2 = double-buffered). ``pipeline_workers``: executor scheduling
+        mode — ``"single"`` (software pipelining; default) or ``"kind"``
+        (host/device worker threads; see ``PipelineExecutor``).
+        Pipelining needs a retriever that can ``compile_plan``; others
+        silently stay synchronous."""
         self.retriever = retriever
         if splade_backend is not None:
             retriever.set_splade_backend(splade_backend)
             if splade_backend != "host":
                 retriever.splade_device_cache()
+        self.pipeline_depth = max(1, pipeline_depth)
+        self.pipeline_workers = pipeline_workers
+        self._pipelines: dict = {}
+        self._plock = threading.Lock()
+        self._closed = False
         self._lock = threading.Lock()
         self.served = 0
 
+    # -- pipelining ------------------------------------------------------
+    @property
+    def pipelined(self) -> bool:
+        return (self.pipeline_depth > 1
+                and hasattr(self.retriever, "compile_plan"))
+
+    def _pipeline(self, method: str) -> PipelineExecutor:
+        """Per-method executor over the method's compiled plan, built
+        lazily and rebuilt if the plan changed (e.g. stage-1 backend
+        switch recompiles the plan). The stale executor is stopped
+        OUTSIDE the registry lock — stop() joins worker threads, and
+        holding ``_plock`` across that would stall health() and every
+        concurrent dispatch."""
+        plan = self.retriever.compile_plan(method)   # validates method
+        stale = None
+        try:
+            with self._plock:
+                if self._closed:
+                    raise PipelineStopped("engine closed")
+                px = self._pipelines.get(method)
+                if px is not None and (px.plan is not plan
+                                       or not px.running):
+                    stale, px = px, None
+                if px is None:
+                    px = PipelineExecutor(
+                        plan, depth=self.pipeline_depth,
+                        stats=self.retriever.pipeline_stats,
+                        workers=self.pipeline_workers)
+                    self._pipelines[method] = px
+                return px
+        finally:
+            if stale is not None and stale.running:
+                stale.stop()
+
+    def drain_pipelines(self, timeout: Optional[float] = None):
+        for px in list(self._pipelines.values()):
+            px.drain(timeout)
+
+    def stop_pipelines(self):
+        """Stop the stage workers; in-flight micro-batches resolve or
+        fail their futures (PipelineStopped). The engine stays usable —
+        the next pipelined batch lazily rebuilds its executor — so a
+        server can stop()/start() (or a new server can reuse the
+        engine) without being wedged."""
+        with self._plock:
+            pipes = list(self._pipelines.values())
+            self._pipelines.clear()
+        for px in pipes:
+            px.stop()
+
+    def close(self):
+        """stop_pipelines() + refuse to build new executors. Terminal."""
+        with self._plock:
+            self._closed = True
+        self.stop_pipelines()
+
+    def pipeline_health(self) -> dict:
+        """Executor-specific vitals: queue depths per stage, per method.
+        (Per-stage timing/pages/overlap live in the retriever's
+        ``pipeline_stats`` snapshot, which ``RetrievalServer.health``
+        reports — not duplicated here.)"""
+        with self._plock:            # _pipeline() inserts concurrently
+            pipes = dict(self._pipelines)
+        return {"depth": self.pipeline_depth,
+                "queues": {m: px.queue_depths()
+                           for m, px in pipes.items()}}
+
+    # -- request execution -----------------------------------------------
     def process(self, req: Request) -> Result:
         t_start = time.perf_counter()
         pids, scores = self.retriever.search(
@@ -107,4 +204,93 @@ class ServeEngine:
             self.served += len(reqs)
         return [Result(qid=r.qid, pids=pids[i][:r.k], scores=scores[i][:r.k],
                        t_arrival=r.t_arrival, t_start=t_start, t_done=t_done)
+                for i, r in enumerate(reqs)]
+
+    def process_batch_async(self, reqs: list[Request]) -> Future:
+        """Feed a micro-batch to the stage pipeline; the returned Future
+        resolves with the ``list[Result]`` at the pipeline tail.
+
+        Per-request results match :meth:`process_batch` exactly: a
+        single-method batch runs its plan as one CandidateBatch; a
+        mixed batch is grouped per method, each group submitted to its
+        method's executor, and results scattered back into request
+        order with the same prefix/padding semantics as the synchronous
+        mixed path. ``submit`` blocks while the head queue is full, so
+        callers are backpressured by ``pipeline_depth``."""
+        if not self.pipelined:
+            out: Future = Future()
+            out.set_running_or_notify_cancel()
+            try:
+                out.set_result(self.process_batch(reqs))
+            except Exception as e:
+                out.set_exception(e)
+            return out
+
+        t_start = time.perf_counter()
+        n = len(reqs)
+        k_max = max(r.k for r in reqs)
+        retr = self.retriever
+        methods = [r.method for r in reqs]
+        raw_alphas = [r.alpha for r in reqs]
+        alphas = retr._alpha_array(
+            None if all(a is None for a in raw_alphas) else raw_alphas, n)
+
+        groups = []                      # (method, idx, CandidateBatch)
+        for m in dict.fromkeys(methods):
+            idx = [i for i, mi in enumerate(methods) if mi == m]
+            cb = retr.build_batch(
+                m,
+                q_embs=[reqs[i].q_emb for i in idx],
+                term_ids=[reqs[i].term_ids for i in idx],
+                term_weights=[reqs[i].term_weights for i in idx],
+                alphas=alphas[idx], k=k_max)
+            groups.append((m, idx, cb))
+
+        out: Future = Future()
+        out.set_running_or_notify_cancel()
+        futs = []
+        try:
+            # resolve every group's executor BEFORE submitting any work:
+            # an unknown method then fails the batch without first
+            # running (and throwing away) the valid groups' retrieval
+            pipes = [self._pipeline(m) for m, _, _ in groups]
+            for px, (_, _, cb) in zip(pipes, groups):
+                futs.append(px.submit(cb))
+        except Exception as e:
+            # submit-time failure (unknown method, stopped pipeline):
+            # fail the whole batch; the server retries request-by-request
+            out.set_exception(e)
+            return out
+
+        agg = gather_futures(futs)
+
+        def finish(f: Future):
+            e = f.exception()
+            if e is not None:
+                out.set_exception(e)
+                return
+            try:
+                out.set_result(self._assemble(reqs, groups, f.result(),
+                                              n, k_max, t_start))
+            except Exception as err:
+                out.set_exception(err)
+
+        agg.add_done_callback(finish)
+        return out
+
+    def _assemble(self, reqs, groups, cbs, n, k_max, t_start):
+        if len(groups) == 1:
+            pids, scores = cbs[0].pids, cbs[0].scores
+        else:
+            pids = np.full((n, k_max), -1, np.int64)
+            scores = np.full((n, k_max), -np.inf, np.float32)
+            for (_, idx, _), cb in zip(groups, cbs):
+                MultiStageRetriever.scatter_group(pids, scores, idx,
+                                                  cb.pids, cb.scores)
+        t_done = time.perf_counter()
+        with self._lock:
+            self.served += n
+        return [Result(qid=r.qid, pids=pids[i][:r.k],
+                       scores=scores[i][:r.k], t_arrival=r.t_arrival,
+                       t_start=t_start, t_done=t_done)
                 for i, r in enumerate(reqs)]

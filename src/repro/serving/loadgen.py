@@ -1,10 +1,25 @@
-"""Poisson load generator + latency aggregation (the paper's Fig 1/2
-methodology: QPS sampled from a Poisson process, p95 latency observed
-by concurrent clients)."""
+"""Load generators + latency aggregation (the paper's Fig 1/2
+methodology: QPS sampled from a Poisson process, p50/p95/p99 latency
+observed by concurrent clients).
+
+Three arrival disciplines:
+
+* :func:`run_poisson_load` — Poisson inter-arrival gaps relative to the
+  submitting thread (submission can slip under load).
+* :func:`run_open_loop` — strictly open-loop Poisson arrivals on an
+  absolute schedule (``--arrival-rate``): submissions never wait on
+  completions, so a saturated server cannot throttle its own offered
+  load and queueing shows up in the latency tail — the discipline that
+  makes pipeline wins visible at p95/p99, not just in QPS.
+* :func:`run_closed_loop` — ``concurrency`` synchronous clients, each
+  issuing its next request only after the previous completes
+  (throughput self-limits to concurrency/latency).
+"""
 
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Callable, Optional
 
@@ -88,3 +103,86 @@ def run_poisson_load(server: RetrievalServer, requests: list[Request],
     return LoadResult(latencies=np.asarray(lat),
                       service_times=np.asarray(svc),
                       wall_time=wall, offered_qps=qps)
+
+
+def run_open_loop(server: RetrievalServer, requests: list[Request],
+                  arrival_rate: float, seed: int = 0,
+                  timeout: float = 300.0) -> LoadResult:
+    """Strictly open-loop Poisson arrivals at ``arrival_rate`` QPS.
+
+    Arrival times are drawn up-front (cumulative exponential gaps) and
+    each request is submitted at its absolute scheduled instant — the
+    submitter sleeps to the schedule and never waits on a result, so a
+    slow server cannot slow the offered load down. Under overload the
+    queue grows and p95/p99 latency explodes, which is exactly the
+    signal the pipelined server is meant to push out to higher rates.
+    """
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / arrival_rate,
+                                         len(requests)))
+    futures = []
+    t0 = time.perf_counter()
+    for req, t_sched in zip(requests, arrivals):
+        delay = t0 + t_sched - time.perf_counter()
+        if delay > 0:
+            time.sleep(delay)
+        futures.append(server.submit(req))
+    lat, svc = [], []
+    for fut in futures:
+        res = fut.result(timeout=timeout)
+        lat.append(res.latency)
+        svc.append(res.service_time)
+    wall = time.perf_counter() - t0
+    return LoadResult(latencies=np.asarray(lat),
+                      service_times=np.asarray(svc),
+                      wall_time=wall, offered_qps=arrival_rate)
+
+
+def run_closed_loop(server: RetrievalServer, requests: list[Request],
+                    concurrency: int = 1,
+                    timeout: float = 300.0) -> LoadResult:
+    """Closed-loop clients: ``concurrency`` threads, each submitting its
+    next request only after the previous one completes. Offered load is
+    whatever the server sustains — useful as the service-rate probe the
+    open-loop sweep is calibrated against."""
+    concurrency = max(1, concurrency)
+    lock = threading.Lock()
+    next_i = [0]
+    lat = [None] * len(requests)
+    svc = [None] * len(requests)
+    errors: list[BaseException] = []
+
+    def client():
+        while True:
+            with lock:
+                i = next_i[0]
+                if i >= len(requests):
+                    return
+                next_i[0] += 1
+            try:
+                res = server.submit(requests[i]).result(timeout=timeout)
+            except Exception as e:
+                # record and keep the loop alive: one failed request must
+                # not silently kill the client thread and strand the rest
+                with lock:
+                    errors.append(e)
+                continue
+            lat[i] = res.latency
+            svc[i] = res.service_time
+
+    t0 = time.perf_counter()
+    threads = [threading.Thread(target=client, daemon=True)
+               for _ in range(concurrency)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    ok_lat = [x for x in lat if x is not None]
+    ok_svc = [x for x in svc if x is not None]
+    if errors and not ok_lat:
+        raise errors[0]
+    return LoadResult(latencies=np.asarray(ok_lat, np.float64),
+                      service_times=np.asarray(ok_svc, np.float64),
+                      wall_time=wall,
+                      offered_qps=len(requests) / max(wall, 1e-9))

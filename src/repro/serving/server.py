@@ -16,11 +16,18 @@ preserves strict request-at-a-time behaviour. With ``latency_slo_ms``
 set, the effective batch cap adapts: an EWMA of batch service time
 shrinks it under SLO pressure and grows it back when there is headroom.
 
+Pipelining: when the engine has ``pipeline_depth >= 2`` the worker no
+longer owns a batch end-to-end — it feeds the stage-graph pipeline
+(`repro.serving.pipeline`) and moves straight on to collecting the next
+micro-batch while the executor resolves futures at the tail, so batch
+N+1's host mmap gather overlaps batch N's device scoring.
+
 Fault tolerance: ``drain()`` completes in-flight work; a failing batch
 is retried request-by-request so one poisoned query cannot fail its
 co-batched neighbours; ``stop()`` fails still-queued futures instead of
-leaving clients waiting forever; ``health()`` reports queue depth and
-served counts for external monitors.
+leaving clients waiting forever; ``health()`` reports queue depth,
+served counts, per-stage EWMA service times / queue depths, and the
+measured overlap fraction for external monitors.
 """
 
 from __future__ import annotations
@@ -37,6 +44,7 @@ from typing import Optional
 import numpy as np
 
 from repro.serving.engine import Request, Result, ServeEngine
+from repro.serving.pipeline import PipelineStopped
 
 
 class RetrievalServer:
@@ -70,6 +78,8 @@ class RetrievalServer:
         self.running = False
         self.failed = 0
         self._lock = threading.Lock()
+        self._retry_cond = threading.Condition()
+        self._retries = 0                # pipelined failure retries live
 
     # -- lifecycle -------------------------------------------------------
     def start(self):
@@ -132,6 +142,7 @@ class RetrievalServer:
                 self._grow_streak = 0
 
     def _worker(self):
+        pipelined = getattr(self.engine, "pipelined", False)
         while self.running:
             try:
                 item = self.queue.get(timeout=0.1)
@@ -140,7 +151,12 @@ class RetrievalServer:
             batch = (self._collect_batch(item) if self.max_batch > 1
                      else [item])
             try:
-                if len(batch) == 1:
+                if pipelined:
+                    # feed the stage pipeline and move on: the tail
+                    # resolves the futures while this worker collects
+                    # the next micro-batch (gather/score overlap)
+                    self._dispatch_pipelined(batch)
+                elif len(batch) == 1:
                     self._serve_one(*batch[0])
                 else:
                     self._serve_batch(batch)
@@ -180,11 +196,78 @@ class RetrievalServer:
             fut.set_result(res)
         self._observe_latency(results)
 
+    def _dispatch_pipelined(self, batch):
+        """Feed the claimed micro-batch to the engine's stage pipeline.
+        Blocks only on backpressure (head queue full); completion is
+        handled at the pipeline tail by :meth:`_resolve_pipelined`."""
+        claimed = [(req, fut) for req, fut in batch
+                   if fut.set_running_or_notify_cancel()]
+        if not claimed:
+            return
+        try:
+            agg = self.engine.process_batch_async(
+                [req for req, _ in claimed])
+        except Exception as e:
+            for _, fut in claimed:
+                fut.set_exception(e)
+            with self._lock:
+                self.failed += len(claimed)
+            return
+        agg.add_done_callback(
+            lambda f: self._resolve_pipelined(claimed, f))
+
+    def _resolve_pipelined(self, claimed, agg):
+        """Tail of the pipeline (runs on a stage worker thread): set
+        per-request futures, or — keeping the synchronous path's
+        isolation semantics — retry a failed batch request-by-request so
+        one poisoned query cannot fail its co-batched neighbours."""
+        exc = agg.exception()
+        if exc is None:
+            for (_, fut), res in zip(claimed, agg.result()):
+                fut.set_result(res)
+            self._observe_latency(agg.result())
+            return
+        if isinstance(exc, PipelineStopped) and not self.running:
+            # server shutdown: fail fast instead of re-serving inline.
+            # (A PipelineStopped while the server is alive — e.g. an
+            # executor rebuilt by a stage-1 backend switch — falls
+            # through to the retry path below instead.)
+            with self._lock:
+                self.failed += len(claimed)
+            for req, fut in claimed:
+                fut.set_exception(RuntimeError(
+                    f"server stopped mid-flight for qid={req.qid}"))
+            return
+        # retry on a separate thread: this callback runs on a pipeline
+        # stage worker, and a batch of synchronous per-request retrievals
+        # here would stall every in-flight batch behind it. Tracked by a
+        # counter so drain() waits for retries, not just the pipeline.
+        with self._retry_cond:
+            self._retries += 1
+
+        def retry():
+            try:
+                for req, fut in claimed:
+                    self._serve_one(req, fut, claimed=True)
+            finally:
+                with self._retry_cond:
+                    self._retries -= 1
+                    self._retry_cond.notify_all()
+
+        threading.Thread(target=retry, name="pipeline-retry",
+                         daemon=True).start()
+
     def stop(self):
         self.running = False
         for t in self.workers:
             t.join(timeout=2.0)
         self.workers.clear()
+        # stop the stage pipeline: in-flight micro-batches resolve or
+        # fail their futures (never hang) before queued ones are failed.
+        # stop_pipelines (not close): the engine is caller-owned and must
+        # survive a stop()/start() restart
+        if hasattr(self.engine, "stop_pipelines"):
+            self.engine.stop_pipelines()
         # fail whatever never got served — clients must not hang forever
         # on futures nobody will complete
         while True:
@@ -199,8 +282,15 @@ class RetrievalServer:
             self.queue.task_done()
 
     def drain(self):
-        """Complete all queued work (graceful shutdown step 1)."""
+        """Complete all queued work (graceful shutdown step 1). With
+        pipelining, also waits for in-flight micro-batches to clear the
+        stage pipeline (queue.join() returns once they are *fed*) and
+        for any failure-path retries still re-serving requests."""
         self.queue.join()
+        if getattr(self.engine, "pipelined", False):
+            self.engine.drain_pipelines()
+        with self._retry_cond:
+            self._retry_cond.wait_for(lambda: self._retries == 0)
 
     # -- client API -------------------------------------------------------
     def submit(self, req: Request) -> Future:
@@ -210,12 +300,32 @@ class RetrievalServer:
         return fut
 
     def health(self) -> dict:
-        return {"queue_depth": self.queue.qsize(),
-                "served": self.engine.served,
-                "failed": self.failed,
-                "workers": sum(t.is_alive() for t in self.workers),
-                "batch_cap": self.batch_cap,
-                "ewma_latency_ms": self.ewma_latency_ms}
+        """Server vitals. Beyond the batch-level EWMA, reports the
+        per-stage instrumentation (EWMA service time, wall, queue wait,
+        mmap pages) whenever the retriever keeps one, and — under
+        pipelining — per-stage queue depths and the measured
+        host/device overlap fraction, so the adaptive ``latency_slo_ms``
+        controller can be debugged per stage."""
+        h = {"queue_depth": self.queue.qsize(),
+             "served": self.engine.served,
+             "failed": self.failed,
+             "workers": sum(t.is_alive() for t in self.workers),
+             "batch_cap": self.batch_cap,
+             "ewma_latency_ms": self.ewma_latency_ms}
+        stats = getattr(getattr(self.engine, "retriever", None),
+                        "pipeline_stats", None)
+        if stats is not None:
+            snap = stats.snapshot()
+            h["stages"] = {
+                name: {"ewma_ms": r["ewma_ms"], "wall_s": r["wall_s"],
+                       "dispatches": r["dispatches"],
+                       "queue_wait_s": r["queue_wait_s"],
+                       "pages_touched": r["pages_touched"]}
+                for name, r in snap["stages"].items()}
+            h["overlap_fraction"] = snap["overlap_fraction"]
+        if getattr(self.engine, "pipelined", False):
+            h["pipeline"] = self.engine.pipeline_health()
+        return h
 
 
 # ---------------------------------------------------------------------------

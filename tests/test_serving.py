@@ -8,7 +8,8 @@ import numpy as np
 import pytest
 
 from repro.serving.engine import Request, ServeEngine
-from repro.serving.loadgen import run_poisson_load
+from repro.serving.loadgen import (run_closed_loop, run_open_loop,
+                                   run_poisson_load)
 from repro.serving.server import RetrievalServer, TCPRetrievalServer, tcp_query
 
 
@@ -95,6 +96,60 @@ def test_poisson_load_reports_percentiles():
     res = run_poisson_load(srv, reqs, qps=400.0, seed=0)
     assert res.p95 >= res.p50 > 0
     assert len(res.latencies) == 40
+    assert res.achieved_qps > 0
+    srv.stop()
+
+
+def test_open_loop_reports_tail_percentiles():
+    """Open-loop arrivals: offered load is honoured regardless of
+    service rate, and p50 <= p95 <= p99 come out of the summary."""
+    srv = make_server(n_threads=1, service_s=0.001)
+    reqs = [Request(qid=i, method="hybrid", q_emb=np.zeros(2))
+            for i in range(30)]
+    res = run_open_loop(srv, reqs, arrival_rate=500.0, seed=3)
+    s = res.summary()
+    assert s["n"] == 30
+    assert s["p50"] <= s["p95"] <= s["p99"]
+    assert res.offered_qps == 500.0
+    srv.stop()
+
+
+def test_open_loop_overload_grows_tail():
+    """An open-loop generator must not self-throttle: offered >> service
+    rate makes the tail explode relative to a light load."""
+    service = 0.004
+    light_srv = make_server(n_threads=1, service_s=service)
+    reqs = [Request(qid=i, method="hybrid", q_emb=np.zeros(2))
+            for i in range(40)]
+    light = run_open_loop(light_srv, reqs, arrival_rate=50.0, seed=5)
+    light_srv.stop()
+    heavy_srv = make_server(n_threads=1, service_s=service)
+    heavy = run_open_loop(heavy_srv, reqs, arrival_rate=2000.0, seed=5)
+    heavy_srv.stop()
+    assert heavy.p99 > 3 * light.p99
+
+
+def test_closed_loop_survives_failed_requests():
+    """A failing request must not silently kill the client thread: the
+    rest of the workload still runs and is measured."""
+    srv = make_server(n_threads=1, service_s=0.0, fail_qids={3})
+    reqs = [Request(qid=i, method="hybrid", q_emb=np.full(2, i))
+            for i in range(10)]
+    res = run_closed_loop(srv, reqs, concurrency=1)
+    assert len(res.latencies) == 9       # only the poisoned one missing
+    srv.stop()
+
+
+def test_closed_loop_self_limits():
+    """Closed-loop clients never queue more than ``concurrency`` deep,
+    so latency stays ~service time even though the server is slow."""
+    service = 0.003
+    srv = make_server(n_threads=2, service_s=service)
+    reqs = [Request(qid=i, method="hybrid", q_emb=np.zeros(2))
+            for i in range(24)]
+    res = run_closed_loop(srv, reqs, concurrency=2)
+    assert len(res.latencies) == 24
+    assert res.p95 < 10 * service       # no unbounded queueing
     assert res.achieved_qps > 0
     srv.stop()
 
