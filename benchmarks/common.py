@@ -15,7 +15,7 @@ from repro.core.multistage import MultiStageParams, MultiStageRetriever
 from repro.core.plaid import PLAIDSearcher, PlaidParams
 from repro.data.synth import SynthCfg, make_corpus
 from repro.index.builder import ColBERTIndex, build_colbert_index
-from repro.index.splade_index import build_splade_index
+from repro.index.splade_index import SpladeIndex, build_splade_index
 
 RESULTS = pathlib.Path(__file__).resolve().parent.parent / "results" / "bench"
 
@@ -57,6 +57,50 @@ def dataset(name: str, mode: str = "mmap"):
     out = (corpus, index, sidx, retr)
     _CACHE[key] = out
     return out
+
+
+def sharded_dataset(name: str, n_shards: int, mode: str = "mmap"):
+    """(corpus, retriever) with the dataset's index split into
+    ``n_shards`` contiguous doc ranges behind a ``ShardedRetriever``
+    (n_shards=1 → the plain single-index retriever). The split reuses
+    one serve-layout copy of the index per dataset."""
+    from repro.core.sharded import build_sharded_retriever
+    from repro.index.sharding import shard_boundaries, split_index_tree
+
+    key = (name, mode, "sharded", n_shards)
+    if key in _CACHE:
+        return _CACHE[key]
+    cfg = DATASETS[name]
+    base_key = (name, mode, "serve_layout")
+    if base_key in _CACHE:
+        corpus, base = _CACHE[base_key]
+    else:
+        corpus = make_corpus(cfg)
+        base = pathlib.Path(tempfile.mkdtemp(prefix=f"bench_{name}_sh_"))
+        build_colbert_index(base / "colbert", corpus["doc_embs"],
+                            corpus["doc_lens"], nbits=4, kmeans_iters=6)
+        build_splade_index(corpus["doc_term_ids"],
+                           corpus["doc_term_weights"], cfg.vocab,
+                           cfg.n_docs).save(base / "splade")
+        _CACHE[base_key] = (corpus, base)
+    plaid = PlaidParams(nprobe=4, candidate_cap=1024, ndocs=256, k=100)
+    ms = MultiStageParams(first_k=200, k=100, alpha=0.3)
+    if n_shards == 1:
+        index = ColBERTIndex(base / "colbert", mode=mode)
+        retr = MultiStageRetriever(
+            SpladeIndex.load(base / "splade", mmap=(mode == "mmap")),
+            PLAIDSearcher(index, plaid), ms)
+    else:
+        # distinct group dir per shard count: an open retriever's mmaps
+        # must never alias a group being re-split at another count
+        group = split_index_tree(base, n_shards,
+                                 group_dir=base / f"shards{n_shards}")
+        retr = build_sharded_retriever(
+            [group / str(i) for i in range(n_shards)],
+            shard_boundaries(cfg.n_docs, n_shards), mode=mode,
+            plaid_params=plaid, multistage_params=ms)
+    _CACHE[key] = (corpus, retr)
+    return corpus, retr
 
 
 def run_all_queries(retr, corpus, method: str, n_queries=None, alpha=None,

@@ -7,6 +7,12 @@ cd "$(dirname "$0")/.."
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# property tests are skipped without hypothesis (optional test extra);
+# install it when the image has network access so they run in CI
+python -c "import hypothesis" 2>/dev/null \
+    || pip install -q hypothesis 2>/dev/null \
+    || echo "hypothesis unavailable (offline image) — property tests skip"
+
 python -m pytest -x -q "$@"
 
 # kernel parity in Pallas interpret mode, run explicitly: the kernel
@@ -20,4 +26,10 @@ python -m pytest -q tests/test_kernels.py tests/test_splade_stage1.py \
 # (--splade-backend pallas lowers to interpret off-TPU), serve a
 # Poisson load end-to-end, and shut down cleanly
 python -m repro.launch.serve --pipeline-depth 2 --splade-backend pallas \
+    --max-batch 8 --qps 100 --n 32
+
+# scatter-gather smoke: split the index into a 2-shard group and serve
+# the same pipelined load through the sharded plans (per-shard mmap
+# segments, fanout gathers, global top-k merge)
+python -m repro.launch.serve --shards 2 --pipeline-depth 2 \
     --max-batch 8 --qps 100 --n 32

@@ -52,10 +52,16 @@ class MultiStageParams:
 
 class MultiStageRetriever:
     def __init__(self, splade_index: SpladeIndex, searcher: PLAIDSearcher,
-                 params: MultiStageParams = MultiStageParams()):
+                 params: MultiStageParams = MultiStageParams(),
+                 device=None):
+        """``device`` (optional jax.Device) pins this retriever's
+        device-resident stage-1 state — under a shard group each shard
+        lands on its own mesh device (``launch.mesh.shard_device_map``)
+        so per-shard dispatches execute in parallel."""
         self.splade = splade_index
         self.searcher = searcher
         self.params = params
+        self.device = device
         self._splade_device: Optional[SpladeDeviceCache] = None
         self._lock = threading.Lock()
         self._plans: dict = {}
@@ -84,7 +90,8 @@ class MultiStageRetriever:
         with self._lock:
             if self._splade_device is None:
                 self._splade_device = SpladeDeviceCache(
-                    self.splade, max_df=self.params.splade_max_df)
+                    self.splade, max_df=self.params.splade_max_df,
+                    device=self.device)
             return self._splade_device
 
     def _splade_impl(self, backend: str) -> str:

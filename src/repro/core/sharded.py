@@ -1,0 +1,536 @@
+"""Scatter-gather serving over a sharded SPLADE/PLAID/mmap index.
+
+The corpus is partitioned into ``n_shards`` contiguous document ranges
+(``repro.index.sharding``); each shard owns its own SPLADE postings
+slice, PLAID IVF slice, and mmap ``PagedStore`` segment, wrapped in an
+ordinary per-shard :class:`MultiStageRetriever`. This module's
+:class:`ShardedRetriever` presents the same retriever interface over
+the whole group by compiling *sharded* stage plans:
+
+* per-shard host work runs as pooled ``fanout`` stages
+  (``Stage.fanout``) — the stage function executes once per shard,
+  concurrently on the group's thread pool. For ``host_gather`` stages
+  that is the point of the topology: independent mmap segments fault
+  independent page streams, so gather bandwidth scales with the shard
+  count instead of serialising on one file's page-in queue. Device
+  work either fans out with async dispatches (PLAID stages) or runs as
+  a dispatch-all-then-sync-all group stage (SPLADE stage 1), so shard
+  devices execute concurrently without pooling the GIL-bound Python
+  dispatch itself.
+* shard-local candidates are remapped to **global** doc ids
+  (``local + shard_offset``) the moment they leave a shard, and a
+  ``merge_topk`` fuse stage combines per-shard top-k lists into the
+  global ranking.
+
+Parity contract (tested in ``tests/test_sharding.py``): shard-local
+scores are bit-identical to the single index's scores for the same
+document (shared quantisation / geometry), and every top-k selection —
+per shard and at the merges — orders by (score desc, pid asc). Top-k
+selection distributes over a partition under that total order, so
+shards=k returns the same results as shards=1 for all four methods.
+Two documented deviations: a per-shard ``candidate_cap`` truncates
+later than a global one (strictly more candidates survive — never
+fewer), and exact-score ties at the final merge resolve by global pid
+rather than approx-rank.
+"""
+
+from __future__ import annotations
+
+import os
+import pathlib
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.utils import next_pow2 as _next_pow2
+from repro.core import hybrid as hybrid_mod
+from repro.core.multistage import MultiStageRetriever
+from repro.core.plaid import (
+    _pad_batch_rows,
+    pad_query_batch_host,
+    stage3_approx_score_batch,
+)
+from repro.serving.pipeline import (
+    DEVICE,
+    HOST,
+    PipelineStats,
+    Stage,
+    StagePlan,
+)
+
+
+def merge_topk(pids: np.ndarray, scores: np.ndarray, k: int,
+               pad_score: float = -np.inf):
+    """Merge concatenated per-shard top-k lists into the global top-k.
+
+    ``pids``/``scores``: (B, S·K) with -1 marking padding. Selection
+    orders by (score desc, global pid asc) — the same total order every
+    per-shard list was built with, so the merged prefix equals the
+    single-index top-k even through score ties. Returns
+    ((B, k) pids -1-padded, (B, k) scores ``pad_score``-padded)."""
+    key = np.where(pids >= 0, scores, -np.inf).astype(np.float32)
+    # lexsort: last key is primary → score desc, then pid asc; padding
+    # (-inf) sorts to the back regardless of its pid
+    order = np.lexsort((np.where(pids >= 0, pids, np.iinfo(np.int64).max),
+                        -key.astype(np.float64)), axis=1)[:, :k]
+    top = np.take_along_axis(key, order, axis=1)
+    out_pids = np.where(top > -np.inf,
+                        np.take_along_axis(pids, order, axis=1), -1)
+    out_scores = np.where(top > -np.inf, top, pad_score).astype(np.float32)
+    w = order.shape[1]
+    if w < k:
+        out_pids = np.pad(out_pids, ((0, 0), (0, k - w)),
+                          constant_values=-1)
+        out_scores = np.pad(out_scores.astype(np.float32),
+                            ((0, 0), (0, k - w)),
+                            constant_values=np.float32(pad_score))
+    return out_pids.astype(np.int64), out_scores
+
+
+def compact_owned(gpids: np.ndarray, lo: int, hi: int, min_w: int = 8):
+    """Compact one shard's slice of a global candidate matrix.
+
+    ``gpids``: (B, C) global pids (−1 pad). Returns (cols, local), both
+    (B, W) with W = pow2 bucket of the densest row's owned count (≤ C):
+    ``local`` holds shard-local pids for the candidates this shard owns
+    (−1 pad) and ``cols`` the *global column* each came from, so scores
+    computed on the narrow slice scatter back into the global matrix
+    (:func:`scatter_scores`). Gather/score work per shard is then
+    O(owned) ≈ C/S instead of O(C) — without this, every shard pays the
+    full candidate width and scatter-gather costs S× the single index.
+    """
+    owned = (gpids >= lo) & (gpids < hi)
+    w = int(owned.sum(axis=1).max()) if gpids.size else 0
+    W = min(_next_pow2(max(w, min_w)), max(gpids.shape[1], 1))
+    # stable sort on ~owned floats owned columns to the front, keeping
+    # their global order
+    order = np.argsort(~owned, axis=1, kind="stable")[:, :W]
+    ow = np.take_along_axis(owned, order, axis=1)
+    cols = np.where(ow, order, -1)
+    local = np.where(ow, np.take_along_axis(gpids, order, axis=1) - lo, -1)
+    return cols, local
+
+
+def scatter_scores(out: np.ndarray, cols: np.ndarray,
+                   scores: np.ndarray):
+    """Scatter one shard's (B, W) scores back into the (B, C) global
+    matrix at the columns ``compact_owned`` recorded (−1 skipped)."""
+    m = cols >= 0
+    rows = np.broadcast_to(np.arange(out.shape[0])[:, None],
+                           cols.shape)[m]
+    out[rows, cols[m]] = scores[m]
+
+
+class CombinedAccessStats:
+    """Duck-typed ``AccessStats`` view over a shard group: ``snapshot``
+    sums the per-segment counters so sharded plans report pages/tokens
+    exactly like a single store would."""
+
+    def __init__(self, parts: Sequence):
+        self.parts = list(parts)
+
+    def snapshot(self) -> dict:
+        out: dict = {}
+        for part in self.parts:
+            for key, val in part.snapshot().items():
+                out[key] = out.get(key, 0) + val
+        return out
+
+    def reset(self):
+        for part in self.parts:
+            part.reset()
+
+
+class ShardedRetriever(MultiStageRetriever):
+    """Scatter-gather retriever over per-shard ``MultiStageRetriever``s.
+
+    ``shards``: one retriever per contiguous doc range;
+    ``shard_offsets``: (n_shards+1,) global doc-id boundaries (shard i
+    owns global pids [offsets[i], offsets[i+1])). All shards must share
+    params (the plan closes over one copy).
+
+    With ``n_shards == 1`` every entry point delegates to the single
+    shard, so the one-shard group is *bitwise* the unsharded path.
+    """
+
+    def __init__(self, shards: Sequence[MultiStageRetriever],
+                 shard_offsets, pool: Optional[ThreadPoolExecutor] = None):
+        if not shards:
+            raise ValueError("empty shard group")
+        self.shards = list(shards)
+        self.offsets = np.asarray(shard_offsets, np.int64)
+        if len(self.offsets) != len(self.shards) + 1:
+            raise ValueError(
+                f"{len(self.shards)} shards need {len(self.shards) + 1} "
+                f"boundaries, got {len(self.offsets)}")
+        for sh in self.shards[1:]:
+            if sh.params != self.shards[0].params:
+                raise ValueError("shards must share MultiStageParams")
+        self.params = self.shards[0].params
+        self.n_shards = len(self.shards)
+        self.n_docs = int(self.offsets[-1])
+        self._lock = threading.Lock()
+        self._plans: dict = {}
+        self.pipeline_stats = PipelineStats()
+        # gather concurrency capped at the core count: more threads than
+        # cores just thrash the GIL between the gathers' Python segments
+        # (measured 2x slower at 4 shards on 2 cores) without adding
+        # page-fault streams the machine could actually service
+        workers = min(self.n_shards, max(1, os.cpu_count() or 1))
+        self._pool = pool or ThreadPoolExecutor(
+            max_workers=workers, thread_name_prefix="shard")
+        self.set_splade_backend(self.params.splade_backend)
+
+    # ------------------------------------------------------------------
+    # group-wide knobs
+    # ------------------------------------------------------------------
+    def set_splade_backend(self, backend: str):
+        """Switch every shard's stage-1 scorer (plans are keyed on the
+        backend, so the next ``compile_plan`` recompiles)."""
+        for sh in self.shards:
+            sh.set_splade_backend(backend)
+        self.splade_backend = backend
+
+    def splade_device_cache(self):
+        """Materialise every shard's padded-postings device cache (each
+        on its shard's device when one was assigned)."""
+        return [sh.splade_device_cache() for sh in self.shards]
+
+    def run_splade_batch(self, term_ids, term_weights, k=None,
+                         backend=None, _record=True):
+        """Group-wide stage 1: per-shard scoring + global merge. Kept
+        for API completeness (benchmarks poke stage 1 directly); the
+        serving paths go through the compiled plans."""
+        k = self.params.first_k if k is None else k
+        outs = list(self._pool.map(
+            lambda i: self.shards[i].run_splade_batch(
+                term_ids, term_weights, k, backend=backend,
+                _record=_record),
+            range(self.n_shards)))
+        pids = np.concatenate(
+            [np.where(p >= 0, p + self.offsets[i], -1)
+             for i, (p, _) in enumerate(outs)], axis=1)
+        scores = np.concatenate([s for _, s in outs], axis=1)
+        return merge_topk(pids, scores, k, pad_score=0.0)
+
+    # ------------------------------------------------------------------
+    # search entry points (n_shards == 1 delegates: bitwise-unsharded)
+    # ------------------------------------------------------------------
+    def search(self, method, q_emb=None, term_ids=None, term_weights=None,
+               alpha=None, k=None):
+        if self.n_shards == 1:
+            return self.shards[0].search(
+                method, q_emb=q_emb, term_ids=term_ids,
+                term_weights=term_weights, alpha=alpha, k=k)
+        wrap = (lambda x: None if x is None else [x])
+        pids, scores = self.search_batch(
+            method, q_embs=wrap(q_emb), term_ids=wrap(term_ids),
+            term_weights=wrap(term_weights), alpha=alpha, k=k)
+        return pids[0], scores[0]
+
+    def search_batch(self, method, q_embs=None, term_ids=None,
+                     term_weights=None, alpha=None, k=None):
+        if self.n_shards == 1:
+            return self.shards[0].search_batch(
+                method, q_embs=q_embs, term_ids=term_ids,
+                term_weights=term_weights, alpha=alpha, k=k)
+        return super().search_batch(method, q_embs=q_embs,
+                                    term_ids=term_ids,
+                                    term_weights=term_weights,
+                                    alpha=alpha, k=k)
+
+    def compile_plan(self, method: str) -> StagePlan:
+        if self.n_shards == 1:
+            return self.shards[0].compile_plan(method)
+        return super().compile_plan(method)
+
+    # ------------------------------------------------------------------
+    # sharded stage plans
+    # ------------------------------------------------------------------
+    def _build_plan(self, method: str) -> StagePlan:
+        """Compile the scatter-gather stage graph for one method.
+
+        Stage discipline matches the unsharded plans (host stages touch
+        only numpy; device dispatches and syncs live in device-kind
+        stages), with two additions: per-shard stages carry
+        ``fanout=n_shards`` and read/write the batch's shard axis, and
+        ``merge_topk`` fuses run on the host over already-synced per-
+        shard arrays."""
+        p = self.params
+        S = self.n_shards
+        offs = self.offsets
+        shards = self.shards
+        dr = shards[0].searcher.device_resident
+        gather_kind = DEVICE if dr else HOST
+        access = None if dr else CombinedAccessStats(
+            [sh.searcher.index.store.stats for sh in shards])
+        ndocs = min(shards[0].searcher.params.ndocs,
+                    shards[0].searcher.params.candidate_cap)
+
+        if method == "colbert":
+            from repro.core.plaid import (
+                pad_query_batch,
+                stage1_centroid_probe_batch,
+                stage2_candidates_batch,
+            )
+
+            def probe(cb):
+                # ONE centroid probe for the whole group: the centroid
+                # set is replicated (geometry, not corpus), so a
+                # per-shard probe would duplicate the einsum S times
+                # for identical results
+                sr = shards[0].searcher
+                q, q_valid = pad_query_batch(cb.q_embs)
+                B, q, q_valid = _pad_batch_rows(q, q_valid)
+                scores_c, cids = stage1_centroid_probe_batch(
+                    q, q_valid, sr.centroids, sr.params.nprobe)
+                return cb.with_state(B=B, q=q, q_valid=q_valid,
+                                     scores_c=scores_c, cids=cids)
+
+            def candidates(cb, i):
+                # per-shard candidate generation from the shard's IVF
+                # slice; narrowed to the densest row's pow2 bucket (the
+                # -1 fill is already compacted to the back) so the
+                # codes gather and approx dispatch run at the shard's
+                # ~cap/S occupancy, not the full global cap
+                sr = shards[i].searcher
+                cand = stage2_candidates_batch(
+                    sr.ivf_padded, cb.state["cids"],
+                    sr.params.candidate_cap)
+                cand_np = np.asarray(cand)
+                n_real = (cand_np >= 0).sum(axis=1)
+                W = min(_next_pow2(max(int(n_real.max()), 8)),
+                        cand_np.shape[1])
+                return {"cand": cand[:, :W], "cand_np": cand_np[:, :W],
+                        "n_real": n_real}
+
+            def gather_codes(cb, i):
+                s = dict(cb.shard_states[i])
+                if dr:
+                    codes, valid = shards[i].searcher.gather_codes_batch(
+                        s["cand"])
+                else:
+                    codes, _, valid = shards[i].searcher._dedup_gather(
+                        s["cand_np"], codes_only=True)
+                s.update(codes=codes, cvalid=valid)
+                return s
+
+            def approx(cb, i):
+                # raw approximate scores, NOT a per-shard top-ndocs:
+                # survivor selection must be global or a shard-local
+                # ndocs cut would diverge from the single-index path
+                s = dict(cb.shard_states[i])
+                a = stage3_approx_score_batch(
+                    cb.state["scores_c"], jnp.asarray(s["codes"]),
+                    jnp.asarray(s["cvalid"]), cb.state["q_valid"])
+                a = jnp.where(s["cand"] >= 0, a, -jnp.inf)
+                s["approx_np"] = np.asarray(a)
+                return s
+
+            def merge_approx(cb):
+                gpids = np.concatenate(
+                    [np.where(s["cand_np"] >= 0,
+                              s["cand_np"] + offs[i], -1)
+                     for i, s in enumerate(cb.shard_states)], axis=1)
+                ascore = np.concatenate(
+                    [s["approx_np"] for s in cb.shard_states], axis=1)
+                final_g, _ = merge_topk(gpids, ascore, ndocs)
+                n_real = sum(s["n_real"][:cb.state["B"]]
+                             for s in cb.shard_states)
+                return cb.with_state(final_g=final_g, n_real=n_real)
+
+            def gather_residuals(cb, i):
+                s = dict(cb.shard_states[i])
+                cols, sel = compact_owned(cb.state["final_g"],
+                                          offs[i], offs[i + 1])
+                if dr:
+                    f_codes, f_packed, f_valid = \
+                        shards[i].searcher.gather_tokens_batch(sel)
+                else:
+                    f_codes, f_packed, f_valid = \
+                        shards[i].searcher._dedup_gather(
+                            sel, codes_only=False)
+                s.update(cols=cols, sel=sel, f_codes=f_codes,
+                         f_packed=f_packed, f_valid=f_valid)
+                return s
+
+            def exact(cb, i):
+                s = dict(cb.shard_states[i])
+                st = cb.state
+                ex = shards[i].searcher.exact_score_gathered(
+                    st["q"], st["q_valid"], jnp.asarray(s["f_codes"]),
+                    jnp.asarray(s["f_packed"]), jnp.asarray(s["f_valid"]),
+                    jnp.asarray(s["sel"]))
+                s["exact_np"] = np.asarray(ex)   # (Bp, W_i) narrow slice
+                return s
+
+            def fuse(cb):
+                st = cb.state
+                B, g = st["B"], st["final_g"]
+                # every global candidate is owned by exactly one shard:
+                # scatter each shard's narrow score slice back into the
+                # global exact-score matrix
+                ex = np.full(g.shape, -np.inf, np.float32)
+                for s in cb.shard_states:
+                    scatter_scores(ex, s["cols"], s["exact_np"])
+                out_pids, out_scores = merge_topk(g[:B], ex[:B], cb.k)
+                aux = [{"candidates": int(x)} for x in st["n_real"]]
+                return cb.evolve(pids=out_pids,
+                                 scores=out_scores).with_state(aux=aux)
+
+            stages = (
+                Stage("plaid_probe", DEVICE, probe),
+                Stage("plaid_probe:ivf", DEVICE, candidates, fanout=S),
+                Stage("host_gather:codes", gather_kind, gather_codes,
+                      fanout=S, pooled=not dr),
+                Stage("device_score:approx", DEVICE, approx, fanout=S),
+                Stage("merge_topk:approx", HOST, merge_approx),
+                Stage("host_gather:residuals", gather_kind,
+                      gather_residuals, fanout=S, pooled=not dr),
+                Stage("device_score:exact", DEVICE, exact, fanout=S),
+                Stage("merge_topk", HOST, fuse))
+            return StagePlan(method=method, stages=stages,
+                             access_stats=access, pool=self._pool)
+
+        s1_kind = HOST if self.splade_backend == "host" else DEVICE
+        backend = self.splade_backend
+
+        def splade_stage(cb):
+            """Group stage 1, writing the shard axis itself. On the
+            device backends every shard's dispatch is issued *before*
+            any sync (``dispatch_topk``/``finalize_topk``), so with
+            per-shard device pinning the accelerators score their
+            postings slices concurrently — a per-shard sync loop would
+            serialise them behind the first shard's result."""
+            tids, tw = list(cb.term_ids), list(cb.term_weights)
+            if backend == "host":
+                outs = [sh.run_splade_batch(tids, tw, p.first_k,
+                                            _record=False)
+                        for sh in shards]
+            else:
+                impl = shards[0]._splade_impl(backend)
+                disps = [sh.splade_device_cache().dispatch_topk(
+                    tids, tw, p.first_k, impl=impl) for sh in shards]
+                outs = [sh.splade_device_cache().finalize_topk(d)
+                        for sh, d in zip(shards, disps)]
+            return cb.evolve(shard_states=tuple(
+                {"pids": np.where(pd >= 0, pd + offs[i], -1),
+                 "scores": sc}
+                for i, (pd, sc) in enumerate(outs)))
+
+        def _merged_stage1(cb):
+            """(B, first_k) global candidates — identical content and
+            order to the single index's ``run_splade_batch``."""
+            pids = np.concatenate([s["pids"] for s in cb.shard_states],
+                                  axis=1)
+            scores = np.concatenate([s["scores"]
+                                     for s in cb.shard_states], axis=1)
+            return merge_topk(pids, scores, p.first_k, pad_score=0.0)
+
+        if method == "splade":
+            def fuse_splade(cb):
+                pids_b, s_scores = _merged_stage1(cb)
+                return cb.evolve(pids=pids_b[:, :cb.k],
+                                 scores=s_scores[:, :cb.k])
+
+            stages = (Stage("splade_stage1", s1_kind, splade_stage),
+                      Stage("merge_topk", HOST, fuse_splade))
+            return StagePlan(method=method, stages=stages,
+                             access_stats=access, pool=self._pool)
+
+        # rerank / hybrid: merged SPLADE candidates → shard-parallel
+        # residual gather → per-shard MaxSim → global fuse (+ α)
+        def merge_stage1(cb):
+            pids_b, s_scores = _merged_stage1(cb)
+            q, q_valid = pad_query_batch_host(cb.q_embs)
+            B, q, q_valid, gp = _pad_batch_rows(q, q_valid, pids_b)
+            return cb.with_state(pids_b=pids_b, s_scores=s_scores,
+                                 q=q, q_valid=q_valid, B=B, gp=gp)
+
+        def gather(cb, i):
+            st = cb.state
+            cols, sel = compact_owned(st["gp"], offs[i], offs[i + 1])
+            if dr:
+                codes, packed, valid = \
+                    shards[i].searcher.gather_tokens_batch(sel)
+            else:
+                codes, packed, valid = shards[i].searcher._dedup_gather(
+                    sel, codes_only=False)
+            return {"cols": cols, "sel": sel, "g_codes": codes,
+                    "g_packed": packed, "g_valid": valid}
+
+        def score(cb, i):
+            s = dict(cb.shard_states[i])
+            st = cb.state
+            s["c_dev"] = shards[i].searcher.score_gathered_lazy(
+                jnp.asarray(st["q"]), jnp.asarray(st["q_valid"]),
+                jnp.asarray(s["g_codes"]), jnp.asarray(s["g_packed"]),
+                jnp.asarray(s["g_valid"]), s["sel"])[:st["B"]]
+            return s
+
+        def fuse_rerank(cb):
+            st = cb.state
+            pids_b = st["pids_b"]
+            # sync each shard's narrow lazy score slice and scatter it
+            # back into the global candidate columns
+            c_scores = np.full(pids_b.shape, -np.inf, np.float32)
+            for s in cb.shard_states:
+                scatter_scores(c_scores, s["cols"][:pids_b.shape[0]],
+                               np.asarray(s["c_dev"]))
+            if method == "rerank":
+                final = np.where(pids_b >= 0, c_scores, -np.inf)
+            else:
+                mask = pids_b >= 0
+                final = np.asarray(hybrid_mod.hybrid_scores(
+                    jnp.asarray(st["s_scores"]), jnp.asarray(c_scores),
+                    jnp.asarray(mask), alpha=jnp.asarray(cb.alphas),
+                    normalizer=p.normalizer))
+            order = np.argsort(-final, axis=1, kind="stable")[:, :cb.k]
+            sorted_final = np.take_along_axis(final, order, axis=1)
+            out_pids = np.where(
+                sorted_final > -np.inf,
+                np.take_along_axis(pids_b, order, axis=1), -1)
+            return cb.evolve(pids=out_pids, scores=sorted_final)
+
+        stages = (Stage("splade_stage1", s1_kind, splade_stage),
+                  Stage("merge_topk:stage1", HOST, merge_stage1),
+                  Stage("host_gather:residuals", gather_kind, gather,
+                        fanout=S, pooled=not dr),
+                  Stage("device_score:maxsim", DEVICE, score, fanout=S,
+                        opens_async=True),
+                  Stage("fuse_topk", DEVICE, fuse_rerank,
+                        closes_async=True))
+        return StagePlan(method=method, stages=stages,
+                         access_stats=access, pool=self._pool)
+
+
+def build_sharded_retriever(shard_dirs, boundaries, *, mode: str = "mmap",
+                            plaid_params=None, multistage_params=None,
+                            devices: Optional[Sequence] = None
+                            ) -> ShardedRetriever:
+    """Load a shard group written by ``split_index_tree`` into a
+    :class:`ShardedRetriever`. ``shard_dirs``: per-shard directories
+    each holding ``colbert/`` + ``splade/``; ``devices`` optionally
+    pins shard i's device-resident state (SPLADE device cache) to
+    ``devices[i]`` — see ``launch.mesh.shard_device_map``."""
+    from repro.core.plaid import PLAIDSearcher, PlaidParams
+    from repro.index.builder import ColBERTIndex
+    from repro.index.splade_index import SpladeIndex
+
+    plaid_params = plaid_params or PlaidParams()
+    shards = []
+    for i, d in enumerate(shard_dirs):
+        d = pathlib.Path(d)
+        index = ColBERTIndex(d / "colbert", mode=mode)
+        sidx = SpladeIndex.load(d / "splade", mmap=(mode == "mmap"))
+        searcher = PLAIDSearcher(index, plaid_params)
+        kw = {} if multistage_params is None \
+            else {"params": multistage_params}
+        retr = MultiStageRetriever(
+            sidx, searcher,
+            device=None if devices is None else devices[i], **kw)
+        shards.append(retr)
+    return ShardedRetriever(shards, boundaries)

@@ -54,15 +54,24 @@ class SpladeDeviceCache:
     serves batched stage-1 queries against them."""
 
     def __init__(self, index: SpladeIndex, max_df: int | None = None,
-                 qt_min: int = 8, block_d: int = 2048, chunk: int = 512):
+                 qt_min: int = 8, block_d: int = 2048, chunk: int = 512,
+                 device=None):
+        """``device`` pins the padded postings (and every query batch
+        scored against them) to a specific jax.Device — a shard group
+        maps shard i's cache to mesh device i so per-shard stage-1
+        dispatches run on distinct hardware. ``None`` keeps the default
+        device (single-device behaviour, unchanged)."""
         dfs = np.diff(index.term_offsets)
         true_max = int(dfs.max()) if len(dfs) else 1
         self.max_df = max(1, true_max if max_df is None
                           else min(int(max_df), true_max))
         self.truncated_terms = int((dfs > self.max_df).sum())
         pids, imps = index.as_padded(self.max_df)
-        self.pids = jnp.asarray(pids)
-        self.imps = jnp.asarray(imps)          # uint8 on device
+        self.device = device
+        put = (jnp.asarray if device is None
+               else (lambda x: jax.device_put(x, device)))
+        self.pids = put(pids)
+        self.imps = put(imps)                  # uint8 on device
         self.quantum = float(index.quantum)
         self.n_docs = int(index.n_docs)
         self.qt_min = qt_min
@@ -94,12 +103,14 @@ class SpladeDeviceCache:
             w[i, :len(tw)] = tw
         return tids, w
 
-    def score_topk(self, term_ids, term_weights, k: int,
-                   impl: str = "auto"):
-        """Batched stage-1 over the device postings. term_ids /
-        term_weights: sequences of (Qt_i,) arrays (ragged fine) →
-        (pids (B, k) int64, scores (B, k) f32), −1/0 padded like the
-        host scorer. One device dispatch per (bucketed) shape."""
+    def dispatch_topk(self, term_ids, term_weights, k: int,
+                      impl: str = "auto"):
+        """Issue the batched stage-1 dispatch and return it *lazy*:
+        (device pids, device scores, k_eff, B, k) with no host sync —
+        the dispatch queues on this cache's device and the caller syncs
+        via :meth:`finalize_topk` when it needs host arrays. A shard
+        group uses this to put every shard's stage-1 in flight (each on
+        its own device) before paying any sync."""
         B = len(term_ids)
         tids, w = self.pad_queries(term_ids, term_weights)
         # pow2-pad the batch dim with zero-weight rows: nearby batch
@@ -109,14 +120,35 @@ class SpladeDeviceCache:
             tids = np.pad(tids, ((0, Bp - B), (0, 0)), constant_values=-1)
             w = np.pad(w, ((0, Bp - B), (0, 0)))
         k_eff = min(k, self.n_docs)
+        if not k_eff:
+            return None, None, 0, B, k
+        put = (jnp.asarray if self.device is None
+               else (lambda x: jax.device_put(x, self.device)))
+        pids, scores = _score_topk(
+            self.pids, self.imps, put(tids), put(w),
+            jnp.float32(self.quantum), n_docs=self.n_docs,
+            k=k_eff, impl=impl, block_d=self.block_d,
+            chunk=self.chunk)
+        return pids, scores, k_eff, B, k
+
+    @staticmethod
+    def finalize_topk(dispatched):
+        """Sync a :meth:`dispatch_topk` result into the host
+        (pids (B, k) int64, scores (B, k) f32), −1/0 padded like the
+        host scorer."""
+        pids, scores, k_eff, B, k = dispatched
         out_pids = np.full((B, k), -1, np.int64)
         out_scores = np.zeros((B, k), np.float32)
         if k_eff:
-            pids, scores = _score_topk(
-                self.pids, self.imps, jnp.asarray(tids), jnp.asarray(w),
-                jnp.float32(self.quantum), n_docs=self.n_docs,
-                k=k_eff, impl=impl, block_d=self.block_d,
-                chunk=self.chunk)
             out_pids[:, :k_eff] = np.asarray(pids)[:B]
             out_scores[:, :k_eff] = np.asarray(scores)[:B]
         return out_pids, out_scores
+
+    def score_topk(self, term_ids, term_weights, k: int,
+                   impl: str = "auto"):
+        """Batched stage-1 over the device postings. term_ids /
+        term_weights: sequences of (Qt_i,) arrays (ragged fine) →
+        (pids (B, k) int64, scores (B, k) f32), −1/0 padded like the
+        host scorer. One device dispatch per (bucketed) shape."""
+        return self.finalize_topk(
+            self.dispatch_topk(term_ids, term_weights, k, impl))

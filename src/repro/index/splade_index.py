@@ -17,17 +17,38 @@ import numpy as np
 
 def _topk_rows(scores: np.ndarray, k: int):
     """Row-wise descending top-k. scores: (B, n) → (pids (B, k) int64,
-    scores (B, k) f32); rows are padded with (−1, 0) when k > n."""
+    scores (B, k) f32); rows are padded with (−1, 0) when k > n.
+
+    Ties are broken by ascending pid — the same order ``jax.lax.top_k``
+    uses on the device backends, and the property that makes a sharded
+    index's per-shard top-k lists merge into exactly the single-index
+    ranking (quantised uint8 impacts tie often, so an unstable
+    partition here would make candidate sets irreproducible across
+    shard counts). Selection stays O(n) per row: partition for the k-th
+    value, keep everything above it, and fill the boundary from the
+    pid-ascending scan of its ties — only the k survivors are sorted.
+    """
     B, n = scores.shape
     k_eff = min(k, n)
     out_pids = np.full((B, k), -1, np.int64)
     out_scores = np.zeros((B, k), np.float32)
     if k_eff:
-        part = np.argpartition(scores, n - k_eff, axis=1)[:, n - k_eff:]
-        part_scores = np.take_along_axis(scores, part, axis=1)
-        order = np.argsort(-part_scores, axis=1, kind="stable")
-        out_pids[:, :k_eff] = np.take_along_axis(part, order, axis=1)
-        out_scores[:, :k_eff] = np.take_along_axis(part_scores, order, axis=1)
+        if k_eff < n:
+            kth = np.partition(scores, n - k_eff, axis=1)[:, n - k_eff,
+                                                          None]
+            above = scores > kth
+            n_above = above.sum(axis=1, keepdims=True)
+            ties = scores == kth
+            keep = ties & (np.cumsum(ties, axis=1) <= k_eff - n_above)
+            sel_mask = above | keep
+        else:
+            sel_mask = np.ones((B, n), bool)
+        # nonzero scans row-major → exactly k_eff pids per row, ascending
+        sel = np.nonzero(sel_mask)[1].reshape(B, k_eff)
+        vals = np.take_along_axis(scores, sel, axis=1)
+        order = np.argsort(-vals, axis=1, kind="stable")
+        out_pids[:, :k_eff] = np.take_along_axis(sel, order, axis=1)
+        out_scores[:, :k_eff] = np.take_along_axis(vals, order, axis=1)
     return out_pids, out_scores
 
 

@@ -31,3 +31,20 @@ def mesh_device_count(mesh) -> int:
     for s in mesh.devices.shape:
         n *= s
     return n
+
+
+def shard_device_map(n_shards: int, devices=None) -> list:
+    """Map a serving shard group onto devices, round-robin.
+
+    Shard i's device-resident state (SPLADE padded postings, and on the
+    device-resident PLAID path the token pool) is pinned to the returned
+    ``devices[i % n]``, so a shard group's stage-1 ``jax``/``pallas``
+    dispatches execute on distinct accelerators instead of queueing on
+    the default device. ``devices`` defaults to ``jax.devices()``; on a
+    single-device host every shard maps to that device (parallelism
+    then comes from the host-side gather fanout only)."""
+    if devices is None:
+        devices = jax.devices()
+    if not devices:
+        raise ValueError("no devices to map shards onto")
+    return [devices[i % len(devices)] for i in range(n_shards)]

@@ -19,9 +19,13 @@ import numpy as np
 
 from repro.core.multistage import MultiStageParams, MultiStageRetriever
 from repro.core.plaid import PLAIDSearcher, PlaidParams
+from repro.core.sharded import build_sharded_retriever
+from repro.core.store import PAGE_BYTES
 from repro.data.synth import SynthCfg, make_corpus
 from repro.index.builder import ColBERTIndex, build_colbert_index
+from repro.index.sharding import split_index_tree
 from repro.index.splade_index import SpladeIndex, build_splade_index
+from repro.launch.mesh import shard_device_map
 from repro.serving.engine import Request, ServeEngine
 from repro.serving.loadgen import run_open_loop, run_poisson_load
 from repro.serving.server import RetrievalServer, TCPRetrievalServer
@@ -29,31 +33,48 @@ from repro.serving.server import RetrievalServer, TCPRetrievalServer
 
 def build_or_load(index_dir: str | None, mode: str,
                   splade_backend: str = "host",
-                  splade_max_df: int | None = None):
+                  splade_max_df: int | None = None,
+                  n_shards: int = 1):
+    """Build (or load) the serving index and retriever. ``n_shards >= 2``
+    splits the single index into a contiguous-range shard group on disk
+    (``<dir>/shards/``, reused if already split at this count) and
+    returns a scatter-gather :class:`ShardedRetriever` whose stage-1
+    device caches are mapped round-robin onto the local devices."""
     if index_dir and (pathlib.Path(index_dir) / "colbert").exists():
         base = pathlib.Path(index_dir)
-        index = ColBERTIndex(base / "colbert", mode=mode)
-        sidx = SpladeIndex.load(base / "splade", mmap=(mode == "mmap"))
         corpus = None
     else:
         cfg = SynthCfg(n_docs=3000, n_queries=300, seed=0)
         corpus = make_corpus(cfg)
-        d = pathlib.Path(index_dir or tempfile.mkdtemp(prefix="serve_"))
-        build_colbert_index(d / "colbert", corpus["doc_embs"],
+        base = pathlib.Path(index_dir or tempfile.mkdtemp(prefix="serve_"))
+        build_colbert_index(base / "colbert", corpus["doc_embs"],
                             corpus["doc_lens"], nbits=4,
                             n_centroids=256, kmeans_iters=4)
-        index = ColBERTIndex(d / "colbert", mode=mode)
-        sidx = build_splade_index(corpus["doc_term_ids"],
-                                  corpus["doc_term_weights"], cfg.vocab,
-                                  cfg.n_docs)
-        sidx.save(d / "splade")
-    searcher = PLAIDSearcher(index, PlaidParams(nprobe=4,
-                                                candidate_cap=1024,
-                                                ndocs=256))
-    retr = MultiStageRetriever(sidx, searcher,
-                               MultiStageParams(first_k=200, alpha=0.3,
-                                                splade_backend=splade_backend,
-                                                splade_max_df=splade_max_df))
+        build_splade_index(corpus["doc_term_ids"],
+                           corpus["doc_term_weights"], cfg.vocab,
+                           cfg.n_docs).save(base / "splade")
+    plaid_params = PlaidParams(nprobe=4, candidate_cap=1024, ndocs=256)
+    ms_params = MultiStageParams(first_k=200, alpha=0.3,
+                                 splade_backend=splade_backend,
+                                 splade_max_df=splade_max_df)
+    if n_shards > 1:
+        import json
+        group = split_index_tree(base, n_shards)
+        meta = json.loads((group / "meta.json").read_text())
+        retr = build_sharded_retriever(
+            [group / str(i) for i in range(n_shards)],
+            meta["boundaries"], mode=mode, plaid_params=plaid_params,
+            multistage_params=ms_params,
+            devices=shard_device_map(n_shards))
+        # the unsharded index handle is informational only (pool-size
+        # print) — serving reads the per-shard segments, so always open
+        # it mmap: a second full-RAM copy of the pool would double
+        # resident memory under --mode ram
+        return corpus, ColBERTIndex(base / "colbert", mode="mmap"), retr
+    index = ColBERTIndex(base / "colbert", mode=mode)
+    sidx = SpladeIndex.load(base / "splade", mmap=(mode == "mmap"))
+    retr = MultiStageRetriever(sidx, PLAIDSearcher(index, plaid_params),
+                               ms_params)
     return corpus, index, retr
 
 
@@ -70,6 +91,11 @@ def main():
     ap.add_argument("--splade-max-df", type=int, default=None,
                     help="padded-postings df cap for jax/pallas "
                          "(memory vs exactness; default: exact)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help=">=2: partition the index into this many "
+                         "contiguous doc-range shards (scatter-gather "
+                         "serving with a global top-k merge; per-shard "
+                         "mmap segments fault pages in parallel)")
     ap.add_argument("--max-batch", type=int, default=1)
     ap.add_argument("--batch-timeout-ms", type=float, default=2.0)
     ap.add_argument("--latency-slo-ms", type=float, default=None,
@@ -101,7 +127,8 @@ def main():
              else (2 if args.pipeline else 1))
     corpus, index, retr = build_or_load(args.index_dir, args.mode,
                                         args.splade_backend,
-                                        args.splade_max_df)
+                                        args.splade_max_df,
+                                        n_shards=args.shards)
     # backend already configured (and device cache pre-materialised) via
     # MultiStageParams in build_or_load
     server = RetrievalServer(
@@ -112,7 +139,8 @@ def main():
         latency_slo_ms=args.latency_slo_ms)
     server.start()
     print(f"serving ({args.mode} index, {args.threads} thread(s), "
-          f"stage1={args.splade_backend}, pipeline_depth={depth}); "
+          f"stage1={args.splade_backend}, pipeline_depth={depth}, "
+          f"shards={args.shards}); "
           f"pool={index.store.total_bytes() / 1e6:.1f} MB")
 
     if args.port:
@@ -150,8 +178,14 @@ def main():
         print(f"pipeline overlap: "
               f"{100 * h.get('overlap_fraction', 0.0):.1f}% "
               f"(stage queues: {h['pipeline']['queues']})")
-    print("mmap working set:",
-          f"{100 * index.store.resident_fraction_estimate():.1f}% of pool")
+    # under sharding the gathers hit the per-shard segments, not the
+    # original single store — report the group's aggregate working set
+    stores = ([sh.searcher.index.store for sh in retr.shards]
+              if hasattr(retr, "shards") else [index.store])
+    touched = sum(len(s.stats.unique_pages or ()) for s in stores)
+    total = sum(max(1, s.total_bytes() // PAGE_BYTES) for s in stores)
+    print(f"mmap working set: {100 * touched / total:.1f}% of pool"
+          + (f" ({len(stores)} segments)" if len(stores) > 1 else ""))
     server.drain()
     server.stop()
 

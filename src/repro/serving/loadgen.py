@@ -4,8 +4,9 @@ observed by concurrent clients).
 
 Three arrival disciplines:
 
-* :func:`run_poisson_load` — Poisson inter-arrival gaps relative to the
-  submitting thread (submission can slip under load).
+* :func:`run_poisson_load` — Poisson arrivals on an absolute schedule,
+  optionally bursty (``burst`` co-arriving requests per arrival) and
+  time-compressed (``time_scale``) for smoke tests.
 * :func:`run_open_loop` — strictly open-loop Poisson arrivals on an
   absolute schedule (``--arrival-rate``): submissions never wait on
   completions, so a saturated server cannot throttle its own offered
@@ -79,30 +80,21 @@ def run_poisson_load(server: RetrievalServer, requests: list[Request],
     ``burst`` > 1 submits requests in groups of that size per arrival
     (total rate still ``qps``) — the arrival pattern that lets the
     server's micro-batcher coalesce co-arriving queries.
+
+    Arrivals follow an **absolute** schedule (cumulative gaps against
+    ``t0``), like :func:`run_open_loop`: a relative ``sleep(gap)`` per
+    iteration accumulates scheduler lag and submit overhead, so the
+    offered rate silently sags under load — the coordinated-omission
+    trap. On the absolute schedule a late submitter skips its sleep and
+    catches up, keeping offered ≈ requested QPS.
     """
     rng = np.random.default_rng(seed)
     burst = max(1, burst)
     n_arrivals = -(-len(requests) // burst)
-    gaps = rng.exponential(burst / qps, n_arrivals) / time_scale
-
-    futures = []
-    t0 = time.perf_counter()
-    for i, gap in zip(range(0, len(requests), burst), gaps):
-        time.sleep(gap)
-        for req in requests[i:i + burst]:
-            futures.append(server.submit(req))
-
-    lat, svc = [], []
-    for fut in futures:
-        res = fut.result(timeout=300)
-        lat.append(res.latency)
-        svc.append(res.service_time)
-        if on_result is not None:
-            on_result(res)
-    wall = time.perf_counter() - t0
-    return LoadResult(latencies=np.asarray(lat),
-                      service_times=np.asarray(svc),
-                      wall_time=wall, offered_qps=qps)
+    arrivals = np.cumsum(rng.exponential(burst / qps, n_arrivals)
+                         / time_scale)
+    return _run_scheduled(server, requests, arrivals, burst=burst,
+                          offered_qps=qps, on_result=on_result)
 
 
 def run_open_loop(server: RetrievalServer, requests: list[Request],
@@ -120,22 +112,38 @@ def run_open_loop(server: RetrievalServer, requests: list[Request],
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.exponential(1.0 / arrival_rate,
                                          len(requests)))
+    return _run_scheduled(server, requests, arrivals, burst=1,
+                          offered_qps=arrival_rate, timeout=timeout)
+
+
+def _run_scheduled(server: RetrievalServer, requests: list[Request],
+                   arrivals: np.ndarray, *, burst: int,
+                   offered_qps: float, timeout: float = 300.0,
+                   on_result: Optional[Callable] = None) -> LoadResult:
+    """Shared submit-on-absolute-schedule loop: ``burst`` requests enter
+    at each arrival instant (a late submitter skips its sleep and
+    catches up), then every future is drained into a
+    :class:`LoadResult`. Both Poisson generators are this loop with
+    different schedules — fixes to the discipline land once."""
     futures = []
     t0 = time.perf_counter()
-    for req, t_sched in zip(requests, arrivals):
+    for i, t_sched in zip(range(0, len(requests), burst), arrivals):
         delay = t0 + t_sched - time.perf_counter()
         if delay > 0:
             time.sleep(delay)
-        futures.append(server.submit(req))
+        for req in requests[i:i + burst]:
+            futures.append(server.submit(req))
     lat, svc = [], []
     for fut in futures:
         res = fut.result(timeout=timeout)
         lat.append(res.latency)
         svc.append(res.service_time)
+        if on_result is not None:
+            on_result(res)
     wall = time.perf_counter() - t0
     return LoadResult(latencies=np.asarray(lat),
                       service_times=np.asarray(svc),
-                      wall_time=wall, offered_qps=arrival_rate)
+                      wall_time=wall, offered_qps=offered_qps)
 
 
 def run_closed_loop(server: RetrievalServer, requests: list[Request],

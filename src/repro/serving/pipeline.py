@@ -74,6 +74,12 @@ class CandidateBatch:
     products (candidate sets, gathered codes/residuals, device scores);
     ``pids``/``scores`` are the final per-query results filled in by the
     terminal ``fuse_topk`` stage.
+
+    ``shard_states`` is the batch's *shard axis*: under a sharded index
+    (scatter-gather serving) each fanout stage writes one state mapping
+    per shard, read back by the next fanout stage (same shard slot) or
+    by a ``merge_topk`` fuse that combines per-shard candidates into
+    global results.
     """
 
     method: str
@@ -83,6 +89,7 @@ class CandidateBatch:
     term_weights: Optional[tuple] = None
     alphas: Optional[np.ndarray] = None     # (B,) hybrid interpolation
     state: Mapping[str, Any] = _EMPTY_STATE
+    shard_states: Optional[tuple] = None    # per-shard state mappings
     pids: Optional[np.ndarray] = None       # (B, k) final, -1 padded
     scores: Optional[np.ndarray] = None     # (B, k) final, desc
 
@@ -120,13 +127,29 @@ class Stage:
     single-worker scheduler parks a batch at its ``closes_async`` stage
     while younger batches still have pre-sync stages to run — software
     pipelining that hides device execution behind the next batch's host
-    work without any thread (or GIL) contention."""
+    work without any thread (or GIL) contention.
+
+    ``fanout > 0`` declares a *sharded* stage: ``fn`` has the signature
+    ``fn(cb, shard) -> Mapping`` and runs once per shard, each
+    invocation returning that shard's new state mapping; the executor
+    assembles the results into ``cb.shard_states``. With ``pooled``
+    (and a plan ``pool``) the per-shard calls run concurrently on
+    threads — profitable exactly when the per-shard body releases the
+    GIL, i.e. the mmap ``host_gather`` stages (big fancy-index copies
+    and page faults overlap; this is the scatter half of scatter-gather
+    serving). Device fanout stages leave ``pooled`` off: their
+    dispatches are async already — shard i's accelerator crunches while
+    shard i+1 is being dispatched — and pushing the GIL-bound Python
+    dispatch overhead onto competing threads only serialises it with
+    extra context switches."""
 
     name: str                                  # unique within the plan
     kind: str                                  # HOST | DEVICE
-    fn: Callable[[CandidateBatch], CandidateBatch]
+    fn: Callable[..., Any]
     opens_async: bool = False
     closes_async: bool = False
+    fanout: int = 0                            # >0: per-shard execution
+    pooled: bool = False                       # fanout via the plan pool
 
     def __post_init__(self):
         if self.kind not in STAGE_KINDS:
@@ -143,11 +166,17 @@ class StagePlan:
     attributed per stage. Under concurrent execution two host stages of
     different in-flight batches can interleave gathers, so per-stage
     page attribution is approximate there; totals stay exact.
+
+    ``pool`` (duck-typed: needs ``.map``) runs the per-shard calls of
+    ``fanout`` stages concurrently — a ThreadPoolExecutor sized to the
+    shard group in sharded serving; ``None`` degrades to sequential
+    per-shard execution (correct, just unoverlapped).
     """
 
     method: str
     stages: tuple
     access_stats: Any = None   # duck-typed: needs .snapshot() -> dict
+    pool: Any = None           # duck-typed: needs .map (fanout stages)
 
     def stage_names(self) -> tuple:
         return tuple(s.name for s in self.stages)
@@ -163,7 +192,7 @@ class StagePlan:
             stats.stage_begin()
         t0 = time.perf_counter()
         try:
-            out = stage.fn(cb)
+            out = self._call_stage(stage, cb)
         finally:
             wall = time.perf_counter() - t0
             if stats is not None:
@@ -180,6 +209,23 @@ class StagePlan:
                          queries=cb.n_queries, pages_touched=pages,
                          tokens_read=tokens, queue_wait_s=queue_wait_s)
         return out
+
+    def _call_stage(self, stage: Stage, cb: CandidateBatch):
+        """Dispatch one stage: plain stages run ``fn(cb)``; fanout
+        stages run ``fn(cb, shard)`` once per shard — on the shard pool
+        when available — and assemble the returned mappings into the
+        batch's shard axis. A shard that raises fails the whole batch
+        (scatter-gather has no partial answers), but only this batch:
+        the executor resolves its future with the error and the other
+        in-flight batches proceed."""
+        if not stage.fanout:
+            return stage.fn(cb)
+        shards = range(stage.fanout)
+        if stage.pooled and self.pool is not None:
+            outs = list(self.pool.map(lambda i: stage.fn(cb, i), shards))
+        else:
+            outs = [stage.fn(cb, i) for i in shards]
+        return cb.evolve(shard_states=tuple(outs))
 
     def run(self, cb: CandidateBatch,
             stats: Optional["PipelineStats"] = None) -> CandidateBatch:

@@ -94,7 +94,12 @@ class RetrievalServer:
         """Coalesce queued requests behind ``first`` until the current
         (possibly adapted) batch cap or ``batch_timeout_ms`` elapses."""
         batch = [first]
-        cap = self.batch_cap
+        # one locked read: _observe_latency resizes batch_cap under
+        # self._lock from whichever thread served the last batch, and a
+        # torn/stale read here could collect against a cap that no
+        # longer exists
+        with self._lock:
+            cap = self.batch_cap
         deadline = time.perf_counter() + self.batch_timeout_ms / 1e3
         while len(batch) < cap:
             remaining = deadline - time.perf_counter()
@@ -142,7 +147,6 @@ class RetrievalServer:
                 self._grow_streak = 0
 
     def _worker(self):
-        pipelined = getattr(self.engine, "pipelined", False)
         while self.running:
             try:
                 item = self.queue.get(timeout=0.1)
@@ -150,6 +154,11 @@ class RetrievalServer:
                 continue
             batch = (self._collect_batch(item) if self.max_batch > 1
                      else [item])
+            # re-read per iteration, not once at thread start: an engine
+            # whose pipeline is rebuilt at runtime (stage-1 backend
+            # switch, depth change) must move new batches to the new
+            # dispatch path, not keep the one captured at start()
+            pipelined = getattr(self.engine, "pipelined", False)
             try:
                 if pipelined:
                     # feed the stage pipeline and move on: the tail
@@ -223,9 +232,13 @@ class RetrievalServer:
         one poisoned query cannot fail its co-batched neighbours."""
         exc = agg.exception()
         if exc is None:
-            for (_, fut), res in zip(claimed, agg.result()):
+            # bind once: result() re-derives the list on every call, and
+            # the latency observer must see exactly the results the
+            # clients got
+            results = agg.result()
+            for (_, fut), res in zip(claimed, results):
                 fut.set_result(res)
-            self._observe_latency(agg.result())
+            self._observe_latency(results)
             return
         if isinstance(exc, PipelineStopped) and not self.running:
             # server shutdown: fail fast instead of re-serving inline.
@@ -311,7 +324,9 @@ class RetrievalServer:
              "failed": self.failed,
              "workers": sum(t.is_alive() for t in self.workers),
              "batch_cap": self.batch_cap,
-             "ewma_latency_ms": self.ewma_latency_ms}
+             "ewma_latency_ms": self.ewma_latency_ms,
+             "n_shards": getattr(getattr(self.engine, "retriever", None),
+                                 "n_shards", 1)}
         stats = getattr(getattr(self.engine, "retriever", None),
                         "pipeline_stats", None)
         if stats is not None:

@@ -154,6 +154,125 @@ def test_closed_loop_self_limits():
     srv.stop()
 
 
+def test_poisson_offered_rate_does_not_sag():
+    """Absolute-schedule arrivals: offered ≈ achieved for a fast no-op
+    engine. The old relative ``sleep(gap)`` accumulated scheduler lag
+    and submit overhead per arrival (coordinated omission), so at
+    sub-millisecond gaps the offered rate silently sagged well below
+    the requested QPS."""
+    srv = make_server(n_threads=4, service_s=0.0)
+    reqs = [Request(qid=i, method="hybrid", q_emb=np.zeros(2))
+            for i in range(300)]
+    qps = 2000.0
+    res = run_poisson_load(srv, reqs, qps=qps, seed=2)
+    srv.stop()
+    # ideal wall ≈ last scheduled arrival; generous floor because the
+    # submitting thread shares 2 cores with the servers
+    assert res.achieved_qps >= 0.7 * qps, res.summary()
+
+
+def test_batch_cap_resize_races_collection():
+    """`_collect_batch` reads the adaptive cap under the same lock
+    `_observe_latency` resizes it under; a mutator thread hammering the
+    cap while batches are collected must never corrupt it (cap stays in
+    [1, max_batch]) or lose requests."""
+    srv = RetrievalServer(ServeEngine(FakeRetriever(service_s=0.001)),
+                          n_threads=2, max_batch=8, batch_timeout_ms=1.0,
+                          latency_slo_ms=5.0)
+    srv.start()
+    stop = threading.Event()
+
+    def mutate():
+        flip = True
+        while not stop.is_set():
+            with srv._lock:
+                srv.batch_cap = 1 if flip else srv.max_batch
+            flip = not flip
+
+    t = threading.Thread(target=mutate, daemon=True)
+    t.start()
+    try:
+        futs = [srv.submit(Request(qid=i, method="hybrid",
+                                   q_emb=np.zeros(2)))
+                for i in range(64)]
+        results = [f.result(timeout=30) for f in futs]
+        assert len(results) == 64
+        assert 1 <= srv.batch_cap <= srv.max_batch
+    finally:
+        stop.set()
+        t.join(timeout=5)
+        srv.stop()
+
+
+class _FlippableEngine:
+    """Engine whose ``pipelined`` flag can change at runtime (e.g. a
+    stage-1 backend switch rebuilding the pipeline)."""
+
+    def __init__(self):
+        self.pipelined = False
+        self.served = 0
+        self.sync_calls = 0
+        self.async_calls = 0
+
+    def _result(self, req):
+        from repro.serving.engine import Result
+        now = time.perf_counter()
+        return Result(qid=req.qid, pids=np.arange(req.k),
+                      scores=np.linspace(1, 0, req.k),
+                      t_arrival=req.t_arrival, t_start=now, t_done=now)
+
+    def process(self, req):
+        self.sync_calls += 1
+        self.served += 1
+        return self._result(req)
+
+    def process_batch(self, reqs):
+        self.sync_calls += len(reqs)
+        self.served += len(reqs)
+        return [self._result(r) for r in reqs]
+
+    def process_batch_async(self, reqs):
+        from concurrent.futures import Future
+        self.async_calls += len(reqs)
+        self.served += len(reqs)
+        fut = Future()
+        fut.set_running_or_notify_cancel()
+        fut.set_result([self._result(r) for r in reqs])
+        return fut
+
+    def stop_pipelines(self):
+        pass
+
+    def drain_pipelines(self, timeout=None):
+        pass
+
+
+def test_worker_reevaluates_pipelined_flag_mid_serve():
+    """The dispatch path must follow the engine's *current* ``pipelined``
+    flag, not the one captured when the worker thread started."""
+    eng = _FlippableEngine()
+    srv = RetrievalServer(eng, n_threads=1, max_batch=4,
+                          batch_timeout_ms=1.0)
+    srv.start()
+    try:
+        for i in range(6):
+            srv.submit(Request(qid=i, method="hybrid",
+                               q_emb=np.zeros(2), k=5)).result(timeout=10)
+        assert eng.sync_calls == 6 and eng.async_calls == 0
+        eng.pipelined = True          # rebuild happens mid-serve
+        for i in range(6):
+            srv.submit(Request(qid=10 + i, method="hybrid",
+                               q_emb=np.zeros(2), k=5)).result(timeout=10)
+        assert eng.async_calls == 6
+        assert eng.sync_calls == 6    # no new sync dispatches
+        eng.pipelined = False         # and back
+        srv.submit(Request(qid=99, method="hybrid", q_emb=np.zeros(2),
+                           k=5)).result(timeout=10)
+        assert eng.sync_calls == 7
+    finally:
+        srv.stop()
+
+
 def test_saturation_raises_latency():
     """Offered load ≫ service rate ⇒ queueing dominates p95 — the knee
     the paper's Fig 1/2 shows."""

@@ -1,0 +1,374 @@
+"""Scatter-gather sharded serving: index splitting, merge-parity with
+the single-index path (all four methods, mixed batches, per-query
+alpha), global doc-id remapping at shard boundaries, k > docs-in-shard,
+failure isolation, and the pipelined engine over a shard group."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.multistage import MultiStageParams, MultiStageRetriever
+from repro.core.plaid import PLAIDSearcher, PlaidParams
+from repro.core.sharded import (
+    CombinedAccessStats,
+    ShardedRetriever,
+    build_sharded_retriever,
+    merge_topk,
+)
+from repro.index.builder import ColBERTIndex, build_colbert_index
+from repro.index.sharding import (
+    shard_boundaries,
+    split_index_tree,
+    split_splade_index,
+)
+from repro.index.splade_index import SpladeIndex, build_splade_index
+from repro.launch.mesh import shard_device_map
+from repro.serving.engine import Request, ServeEngine
+from repro.serving.server import RetrievalServer
+
+METHODS = ("splade", "rerank", "hybrid", "colbert")
+PLAID = PlaidParams(nprobe=8, candidate_cap=512, ndocs=128, k=50)
+MS = MultiStageParams(first_k=50, k=20)
+
+
+@pytest.fixture(scope="module")
+def base_dir(tmp_path_factory, small_corpus):
+    """Serve-layout index (<base>/{colbert,splade}) over small_corpus."""
+    base = tmp_path_factory.mktemp("shard_base")
+    build_colbert_index(base / "colbert", small_corpus["doc_embs"],
+                        small_corpus["doc_lens"], nbits=4,
+                        n_centroids=128, kmeans_iters=4)
+    build_splade_index(small_corpus["doc_term_ids"],
+                       small_corpus["doc_term_weights"],
+                       small_corpus["cfg"].vocab,
+                       small_corpus["cfg"].n_docs).save(base / "splade")
+    return base
+
+
+@pytest.fixture(scope="module")
+def unsharded(base_dir):
+    index = ColBERTIndex(base_dir / "colbert", mode="mmap")
+    sidx = SpladeIndex.load(base_dir / "splade", mmap=True)
+    return MultiStageRetriever(sidx, PLAIDSearcher(index, PLAID), MS)
+
+
+@pytest.fixture(scope="module")
+def groups(base_dir, small_corpus):
+    """{n_shards: ShardedRetriever} for 2 and 4 shards."""
+    n_docs = small_corpus["cfg"].n_docs
+    out = {}
+    for s in (2, 4):
+        group = split_index_tree(base_dir, s,
+                                 group_dir=base_dir / f"shards{s}")
+        out[s] = build_sharded_retriever(
+            [group / str(i) for i in range(s)],
+            shard_boundaries(n_docs, s), mode="mmap",
+            plaid_params=PLAID, multistage_params=MS)
+    return out
+
+
+def _batch(corpus, lo, hi):
+    return dict(q_embs=corpus["q_embs"][lo:hi],
+                term_ids=corpus["q_term_ids"][lo:hi],
+                term_weights=corpus["q_term_weights"][lo:hi])
+
+
+def _assert_same(ref, got):
+    np.testing.assert_array_equal(ref[0], got[0])
+    r, g = np.asarray(ref[1]), np.asarray(got[1])
+    finite = np.isfinite(r)
+    assert (finite == np.isfinite(g)).all()
+    np.testing.assert_allclose(r[finite], g[finite], rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# splitting
+# ---------------------------------------------------------------------------
+
+def test_shard_boundaries_contiguous_and_balanced():
+    b = shard_boundaries(401, 4)
+    assert b[0] == 0 and b[-1] == 401
+    sizes = np.diff(b)
+    assert sizes.min() >= 100 and sizes.max() <= 101
+    with pytest.raises(ValueError):
+        shard_boundaries(3, 5)
+    with pytest.raises(ValueError):
+        shard_boundaries(10, 0)
+
+
+def test_split_splade_preserves_postings_and_quantum(base_dir):
+    sidx = SpladeIndex.load(base_dir / "splade")
+    bounds = shard_boundaries(sidx.n_docs, 3)
+    parts = split_splade_index(sidx, bounds)
+    assert sum(len(p.pids) for p in parts) == len(sidx.pids)
+    for p, lo, hi in zip(parts, bounds[:-1], bounds[1:]):
+        assert p.quantum == sidx.quantum      # global scale kept
+        assert p.n_docs == hi - lo
+        if len(p.pids):
+            assert p.pids.min() >= 0 and p.pids.max() < p.n_docs
+    # per-term postings re-assemble to the original (global pid order)
+    t = int(np.argmax(np.diff(sidx.term_offsets)))   # densest term
+    orig = sidx.pids[sidx.term_offsets[t]:sidx.term_offsets[t + 1]]
+    glued = np.concatenate([
+        p.pids[p.term_offsets[t]:p.term_offsets[t + 1]] + lo
+        for p, lo in zip(parts, bounds[:-1])])
+    np.testing.assert_array_equal(np.sort(orig), np.sort(glued))
+
+
+def test_split_colbert_segments_cover_pool(base_dir, groups):
+    meta = json.loads((base_dir / "colbert" / "meta.json").read_text())
+    shard_metas = [json.loads(
+        (base_dir / "shards4" / str(i) / "colbert" / "meta.json")
+        .read_text()) for i in range(4)]
+    assert sum(m["n_tokens"] for m in shard_metas) == meta["n_tokens"]
+    assert sum(m["n_docs"] for m in shard_metas) == meta["n_docs"]
+    for m in shard_metas:
+        assert m["nbits"] == meta["nbits"]
+        assert m["n_centroids"] == meta["n_centroids"]
+
+
+# ---------------------------------------------------------------------------
+# merge_topk
+# ---------------------------------------------------------------------------
+
+def test_merge_topk_orders_and_pads():
+    pids = np.array([[3, 9, -1, 5, 7, -1]])
+    scores = np.array([[1.0, 3.0, 99.0, 2.0, 3.0, 99.0]], np.float32)
+    p, s = merge_topk(pids, scores, 4)
+    # ties (9 vs 7 at 3.0) break by ascending global pid; -1 never wins
+    np.testing.assert_array_equal(p, [[7, 9, 5, 3]])
+    np.testing.assert_allclose(s, [[3.0, 3.0, 2.0, 1.0]])
+    p, s = merge_topk(pids, scores, 8, pad_score=0.0)
+    np.testing.assert_array_equal(p[0, 4:], [-1] * 4)
+    assert (s[0, 4:] == 0.0).all()
+
+
+def test_merge_topk_matches_single_list_topk(rng):
+    """Partition a scored corpus arbitrarily: merged per-part top-k must
+    equal the unpartitioned top-k (the parity contract's core lemma)."""
+    n = 200
+    scores = rng.integers(0, 50, n).astype(np.float32)  # heavy ties
+    bounds = [0, 57, 130, n]
+    parts_p, parts_s = [], []
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        local = scores[lo:hi]
+        order = np.argsort(-local, kind="stable")[:20]
+        parts_p.append(order + lo)
+        parts_s.append(local[order])
+    mp, ms_ = merge_topk(np.concatenate(parts_p)[None],
+                         np.concatenate(parts_s)[None], 20)
+    ref = np.argsort(-scores, kind="stable")[:20]
+    np.testing.assert_array_equal(mp[0], ref)
+    np.testing.assert_allclose(ms_[0], scores[ref])
+
+
+# ---------------------------------------------------------------------------
+# parity: shards=k vs shards=1
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+@pytest.mark.parametrize("method", METHODS)
+def test_method_parity(unsharded, groups, small_corpus, method, n_shards):
+    kw = _batch(small_corpus, 0, 6)
+    ref = unsharded.search_batch(method, k=15, **kw)
+    got = groups[n_shards].search_batch(method, k=15, **kw)
+    _assert_same(ref, got)
+
+
+def test_mixed_batch_and_per_query_alpha_parity(unsharded, groups,
+                                                small_corpus):
+    methods = [METHODS[i % 4] for i in range(8)]
+    alphas = [None, 0.1, 0.9, None, 0.5, 0.3, None, 0.7]
+    kw = _batch(small_corpus, 0, 8)
+    ref = unsharded.search_batch(methods, alpha=alphas, k=10, **kw)
+    got = groups[4].search_batch(methods, alpha=alphas, k=10, **kw)
+    _assert_same(ref, got)
+
+
+def test_per_query_search_parity(unsharded, groups, small_corpus):
+    for method in METHODS:
+        ref = unsharded.search(
+            method, q_emb=small_corpus["q_embs"][3],
+            term_ids=small_corpus["q_term_ids"][3],
+            term_weights=small_corpus["q_term_weights"][3], k=12)
+        got = groups[2].search(
+            method, q_emb=small_corpus["q_embs"][3],
+            term_ids=small_corpus["q_term_ids"][3],
+            term_weights=small_corpus["q_term_weights"][3], k=12)
+        _assert_same(ref, got)
+
+
+def test_single_shard_group_is_bitwise_unsharded(unsharded, base_dir,
+                                                 small_corpus):
+    """n_shards=1 delegates wholesale — same arrays, same plan object."""
+    index = ColBERTIndex(base_dir / "colbert", mode="mmap")
+    sidx = SpladeIndex.load(base_dir / "splade", mmap=True)
+    solo = MultiStageRetriever(sidx, PLAIDSearcher(index, PLAID), MS)
+    group = ShardedRetriever([solo], [0, small_corpus["cfg"].n_docs])
+    assert group.compile_plan("hybrid") is solo.compile_plan("hybrid")
+    kw = _batch(small_corpus, 0, 4)
+    for method in METHODS:
+        ref = solo.search_batch(method, k=10, **kw)
+        got = group.search_batch(method, k=10, **kw)
+        np.testing.assert_array_equal(ref[0], got[0])
+        np.testing.assert_array_equal(ref[1], got[1])
+
+
+def test_results_span_shard_boundaries(groups, small_corpus):
+    """Global remapping: merged results carry valid *global* pids drawn
+    from more than one shard's range (a remapping bug would either
+    collapse everything into shard-local ids < n_docs/S or produce
+    out-of-range ids)."""
+    retr = groups[4]
+    n_docs = small_corpus["cfg"].n_docs
+    kw = _batch(small_corpus, 0, 12)
+    pids, _ = retr.search_batch("splade", k=20, **kw)
+    real = pids[pids >= 0]
+    assert real.max() < n_docs
+    owners = np.searchsorted(retr.offsets, real, side="right") - 1
+    assert len(np.unique(owners)) >= 2
+
+
+def test_k_exceeds_docs_in_shard(unsharded, groups, small_corpus):
+    """k larger than any single shard's corpus slice: the merge must
+    fill from every shard and pad (-1) only past the global corpus."""
+    n_docs = small_corpus["cfg"].n_docs
+    per_shard = n_docs // 4
+    k = per_shard + 37
+    big = MultiStageParams(first_k=n_docs + 50, k=k)
+    kw = _batch(small_corpus, 0, 3)
+    retr4 = groups[4]
+    old_params = [sh.params for sh in retr4.shards]
+    try:
+        for sh in retr4.shards:
+            sh.params = big
+        retr4.params = big
+        retr4._plans.clear()
+        ref_retr = MultiStageRetriever(unsharded.splade,
+                                       unsharded.searcher, big)
+        ref = ref_retr.search_batch("splade", k=k, **kw)
+        got = retr4.search_batch("splade", k=k, **kw)
+        _assert_same(ref, got)
+        assert got[0].shape == (3, k)
+        assert (got[0] >= 0).sum(axis=1).max() <= n_docs
+    finally:
+        for sh, p in zip(retr4.shards, old_params):
+            sh.params = p
+        retr4.params = old_params[0]
+        retr4._plans.clear()
+
+
+# ---------------------------------------------------------------------------
+# engine / server integration
+# ---------------------------------------------------------------------------
+
+def _requests(corpus, n, methods=METHODS, k=10):
+    return [Request(qid=i, method=methods[i % len(methods)],
+                    q_emb=corpus["q_embs"][i],
+                    term_ids=corpus["q_term_ids"][i],
+                    term_weights=corpus["q_term_weights"][i], k=k)
+            for i in range(n)]
+
+
+def test_pipelined_engine_over_shard_group(unsharded, groups,
+                                           small_corpus):
+    reqs = _requests(small_corpus, 16)
+    ref = ServeEngine(unsharded).process_batch(reqs)
+    eng = ServeEngine(groups[2], pipeline_depth=2)
+    assert eng.pipelined
+    futs = [eng.process_batch_async(reqs[i:i + 4])
+            for i in range(0, 16, 4)]
+    got = [r for f in futs for r in f.result(timeout=300)]
+    eng.close()
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(a.pids, b.pids)
+
+
+def test_one_shard_failure_isolated(groups, small_corpus):
+    """A raising shard fails its own batch's requests cleanly; requests
+    that never touch the poisoned path keep serving, and the server
+    survives to serve healthy traffic afterwards."""
+    retr = groups[2]
+    poisoned = retr.shards[1]
+    orig = poisoned.run_splade_batch
+
+    def boom(*a, **k):
+        raise RuntimeError("shard 1 down")
+
+    srv = RetrievalServer(ServeEngine(retr, pipeline_depth=2),
+                          n_threads=1, max_batch=4, batch_timeout_ms=5.0)
+    srv.start()
+    try:
+        poisoned.run_splade_batch = boom
+        retr._plans.clear()        # recompile over the poisoned fn
+        bad = [srv.submit(r) for r in
+               _requests(small_corpus, 4, methods=("rerank",))]
+        for f in bad:
+            with pytest.raises(RuntimeError, match="shard 1 down"):
+                f.result(timeout=60)
+        # colbert never touches SPLADE stage 1 → unaffected
+        ok = [srv.submit(r) for r in
+              _requests(small_corpus, 4, methods=("colbert",))]
+        assert all(f.result(timeout=60).pids.shape == (10,) for f in ok)
+        poisoned.run_splade_batch = orig
+        retr._plans.clear()
+        healed = [srv.submit(r) for r in
+                  _requests(small_corpus, 4, methods=("rerank",))]
+        assert all(len(f.result(timeout=60).pids) == 10 for f in healed)
+        assert srv.health()["failed"] == 4
+        assert srv.health()["n_shards"] == 2
+    finally:
+        poisoned.run_splade_batch = orig
+        retr._plans.clear()
+        srv.stop()
+
+
+# ---------------------------------------------------------------------------
+# plumbing
+# ---------------------------------------------------------------------------
+
+def test_sharded_plan_shapes(groups):
+    plan = groups[2].compile_plan("hybrid")
+    names = plan.stage_names()
+    assert names == ("splade_stage1", "merge_topk:stage1",
+                     "host_gather:residuals", "device_score:maxsim",
+                     "fuse_topk")
+    fanouts = {s.name: s.fanout for s in plan.stages}
+    # stage 1 is a group stage (dispatch-all-then-sync-all across the
+    # shard devices), not a fanout; the mmap gather is the pooled fanout
+    assert fanouts["splade_stage1"] == 0
+    assert fanouts["host_gather:residuals"] == 2
+    assert plan.stages[2].pooled
+    assert fanouts["merge_topk:stage1"] == 0
+    cplan = groups[2].compile_plan("colbert")
+    assert "merge_topk:approx" in cplan.stage_names()
+    assert cplan.stage_names()[-1] == "merge_topk"
+
+
+def test_combined_access_stats_sums_segments(groups, small_corpus):
+    retr = groups[2]
+    stats = [sh.searcher.index.store.stats for sh in retr.shards]
+    combined = CombinedAccessStats(stats)
+    combined.reset()
+    retr.search_batch("rerank", k=10, **_batch(small_corpus, 0, 4))
+    snap = combined.snapshot()
+    per = [s.snapshot() for s in stats]
+    assert snap["pages_touched"] == sum(p["pages_touched"] for p in per)
+    assert snap["pages_touched"] > 0
+    # both segments actually gathered (parallel page-fault streams)
+    assert all(p["gathers"] > 0 for p in per)
+
+
+def test_shard_device_map_round_robin():
+    devs = ["d0", "d1", "d2"]
+    assert shard_device_map(5, devices=devs) == \
+        ["d0", "d1", "d2", "d0", "d1"]
+    assert len(shard_device_map(4)) == 4       # real backend: 1 CPU dev
+
+
+def test_group_validates_inputs(unsharded):
+    with pytest.raises(ValueError, match="empty"):
+        ShardedRetriever([], [0])
+    with pytest.raises(ValueError, match="boundaries"):
+        ShardedRetriever([unsharded], [0, 10, 20])

@@ -38,6 +38,26 @@ def queries(small_corpus):
     return tids, tw
 
 
+def test_topk_rows_tie_break_matches_stable_argsort():
+    """The O(n) partition+refine selection must be indistinguishable
+    from a stable full argsort (score desc, pid asc) — the order
+    ``lax.top_k`` uses, and what shard-merge parity relies on. Heavy
+    integer ties exercise both the boundary fill and the final sort."""
+    from repro.index.splade_index import _topk_rows
+    rng = np.random.default_rng(9)
+    scores = rng.integers(0, 6, (5, 97)).astype(np.float32)
+    scores[1] = 0.0                              # all-tied row
+    for k in (1, 7, 50, 97, 120):
+        got_p, got_s = _topk_rows(scores, k)
+        ref = np.argsort(-scores, axis=1, kind="stable")[:, :min(k, 97)]
+        np.testing.assert_array_equal(got_p[:, :ref.shape[1]], ref)
+        np.testing.assert_array_equal(
+            got_s[:, :ref.shape[1]],
+            np.take_along_axis(scores, ref, axis=1))
+        assert (got_p[:, ref.shape[1]:] == -1).all()
+        assert (got_s[:, ref.shape[1]:] == 0).all()
+
+
 # ---------------------------------------------------------------------------
 # host scoring: the np.add.at regression + vectorised batch parity
 # ---------------------------------------------------------------------------
