@@ -6,10 +6,14 @@ sweep for the cross-query micro-batcher, a per-stage latency breakdown
 (stage 1 vs stages 2–4), a stage-1 backend sweep (host / jax / pallas,
 batched vs per-query), a stage-graph pipeline sweep
 (``--pipeline-sweep``: QPS + measured host/device overlap fraction at
-depths 1/2/4), and a scatter-gather shard sweep (``--shard-sweep``:
+depths 1/2/4), a scatter-gather shard sweep (``--shard-sweep``:
 QPS + gather-stage wall time at shard counts 1/2/4 — per-shard mmap
 segments fault independent page streams, so the gather stage shrinks
-as the shard count grows)."""
+as the shard count grows), and a shard-worker backend sweep
+(``--worker-sweep``: in-process thread workers vs shared-nothing
+process workers at shards 1/2/4 — QPS/p99 plus per-worker RSS and
+mmap-segment bytes, showing the aggregate pool is split across worker
+processes, not replicated)."""
 
 from __future__ import annotations
 
@@ -351,6 +355,91 @@ def measure_shard_sweep(name: str = "marco", method: str = "hybrid",
     return out
 
 
+def measure_worker_sweep(name: str = "marco", method: str = "hybrid",
+                         n_queries: int = 128, max_batch: int = 8,
+                         shard_counts=SHARD_COUNTS, concurrency: int = 4,
+                         depth: int = 2):
+    """In-process vs process shard workers at several shard counts:
+    QPS + p50/p99 through the pipelined server, plus — for the process
+    backend — per-worker RSS and mmap-segment bytes.
+
+    The memory record is the tentpole's deployment claim: the aggregate
+    token pool is **split** across the worker processes (each maps
+    ~1/S of the bytes, so each worker's page-cache working set is its
+    own shard's), not replicated into every process. Segment bytes are
+    deterministic and asserted; RSS and QPS are recorded for the
+    machine-dependent picture (on a big multi-core host the process
+    backend's independent GILs pay off; on a busy 2-core CI box the
+    RPC hop usually costs more than it buys).
+
+    Every configuration must return identical top-k pids for the probe
+    queries (the process==thread==shards-1 parity contract under the
+    full server stack)."""
+    from benchmarks.common import process_sharded_dataset, sharded_dataset
+    from repro.core.store import rss_bytes
+    from repro.serving.loadgen import run_closed_loop
+
+    out = {}
+    probe_ref = None
+    for backend in ("thread", "process"):
+        for s in shard_counts:
+            if backend == "thread":
+                corpus, retr = sharded_dataset(name, s)
+            else:
+                corpus, retr = process_sharded_dataset(name, s)
+            srv = RetrievalServer(ServeEngine(retr, pipeline_depth=depth),
+                                  n_threads=1, max_batch=max_batch,
+                                  batch_timeout_ms=4.0)
+            srv.start()
+            try:
+                warm = [srv.submit(r) for r in
+                        _requests(corpus, method, 2 * max_batch)]
+                for f in warm:
+                    f.result(timeout=600)
+                res = run_closed_loop(
+                    srv, _requests(corpus, method, n_queries),
+                    concurrency=concurrency)
+                probe = [srv.submit(r).result(timeout=300).pids
+                         for r in _requests(corpus, method, 8)]
+                if probe_ref is None:
+                    probe_ref = probe
+                else:       # parity across backends and shard counts
+                    for a, b in zip(probe_ref, probe):
+                        np.testing.assert_array_equal(a, b)
+                rec = {"qps": res.achieved_qps,
+                       "p50_ms": res.p50 * 1e3, "p99_ms": res.p99 * 1e3}
+                if backend == "process":
+                    wh = retr.worker_health()
+                    rec["workers"] = [
+                        {"pid": w["pid"], "rss_bytes": w["rss_bytes"],
+                         "pool_bytes": w["pool_bytes"],
+                         "served": w["served"]} for w in wh]
+                    rec["coordinator_rss_bytes"] = rss_bytes()
+                    segs = [w["pool_bytes"] for w in wh]
+                    rec["pool_total_bytes"] = int(sum(segs))
+                    rec["pool_max_segment_bytes"] = int(max(segs))
+            finally:
+                srv.stop()
+                if backend == "process":
+                    retr.close()
+            out[f"{backend}_{s}"] = rec
+            extra = ""
+            if backend == "process":
+                extra = (f"  max-segment={rec['pool_max_segment_bytes']}"
+                         f"/{rec['pool_total_bytes']}B")
+            print(f"workers[{backend:7s} x{s}] "
+                  f"qps={rec['qps']:7.1f}  p99={rec['p99_ms']:7.1f}ms"
+                  + extra)
+    # the shared-nothing memory claim is deterministic: at S shards no
+    # worker maps more than ~1/S of the pool (+1 doc of slack)
+    for s in shard_counts:
+        if s >= 2:
+            rec = out[f"process_{s}"]
+            assert rec["pool_max_segment_bytes"] < \
+                0.75 * rec["pool_total_bytes"], out
+    return out
+
+
 def main(quick: bool = False):
     table = {"marco": measure("marco", n_queries=40 if quick else 60)}
     if not quick:
@@ -401,8 +490,16 @@ if __name__ == "__main__":
                     help="run only the scatter-gather shard sweep "
                          "(QPS + gather-stage wall at shards 1/2/4) and "
                          "record it into the bench JSON")
+    ap.add_argument("--worker-sweep", action="store_true",
+                    help="run only the shard-worker backend sweep "
+                         "(thread vs process workers at shards 1/2/4: "
+                         "QPS, p99, per-worker RSS + segment bytes) and "
+                         "record it into the bench JSON")
     args = ap.parse_args()
-    if args.shard_sweep:
+    if args.worker_sweep:
+        sweep = measure_worker_sweep("marco")
+        save("latency_worker_sweep", {"marco": {"worker_sweep": sweep}})
+    elif args.shard_sweep:
         sweep = measure_shard_sweep("marco")
         save("latency_shard_sweep", {"marco": {"shard_sweep": sweep}})
         # the topology must pay for itself where it claims to: the

@@ -103,6 +103,34 @@ def sharded_dataset(name: str, n_shards: int, mode: str = "mmap"):
     return corpus, retr
 
 
+def process_sharded_dataset(name: str, n_shards: int,
+                            mode: str = "mmap"):
+    """(corpus, ProcessShardGroup) over the same on-disk shard split
+    :func:`sharded_dataset` uses (n_shards=1 runs the whole index in a
+    single worker process), so thread/process sweeps compare identical
+    bytes. NOT cached: worker processes are a held resource — callers
+    own the returned group and must ``close()`` it."""
+    from repro.core.multistage import MultiStageParams
+    from repro.core.plaid import PlaidParams
+    from repro.core.sharded import build_shard_group
+    from repro.index.sharding import shard_boundaries, split_index_tree
+
+    corpus, _ = sharded_dataset(name, max(n_shards, 2), mode=mode)
+    cfg = DATASETS[name]
+    _, base = _CACHE[(name, mode, "serve_layout")]
+    group = split_index_tree(base, n_shards,
+                             group_dir=base / f"shards{n_shards}")
+    retr = build_shard_group(
+        [group / str(i) for i in range(n_shards)],
+        shard_boundaries(cfg.n_docs, n_shards), workers="process",
+        mode=mode,
+        plaid_params=PlaidParams(nprobe=4, candidate_cap=1024,
+                                 ndocs=256, k=100),
+        multistage_params=MultiStageParams(first_k=200, k=100,
+                                           alpha=0.3))
+    return corpus, retr
+
+
 def run_all_queries(retr, corpus, method: str, n_queries=None, alpha=None,
                     k=100):
     n = n_queries or len(corpus["qrels"])

@@ -1,35 +1,124 @@
 #!/usr/bin/env bash
-# Tier-1 verification — run this per PR; regressions here block merge.
-# Mirrors ROADMAP.md's "Tier-1 verify" command.
+# Tiered CI entrypoint — the same subcommands the GitHub workflow runs,
+# so local runs and the CI matrix cannot drift.
+#
+#   ci.sh collect      fast-fail: the suite must import and collect
+#   ci.sh unit         full tier-1 pytest run (regressions block merge)
+#   ci.sh kernels      Pallas kernel parity in interpret mode
+#   ci.sh smoke        serving-stack smokes: pipelined, sharded, and
+#                      multi-process shard workers, end-to-end
+#   ci.sh bench-gate   pinned-seed mini benchmark vs committed baseline
+#   ci.sh all          every stage above, in order (tier-1 default)
+#
+# Extra args after `unit` are forwarded to pytest (e.g.
+# `ci.sh unit -k sharding`). Running with no subcommand = `all`.
+# Each stage's wall time is reported in a summary at exit.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-# property tests are skipped without hypothesis (optional test extra);
-# install it when the image has network access so they run in CI
-python -c "import hypothesis" 2>/dev/null \
-    || pip install -q hypothesis 2>/dev/null \
-    || echo "hypothesis unavailable (offline image) — property tests skip"
+STAGE_NAMES=()
+STAGE_SECS=()
 
-python -m pytest -x -q "$@"
+summary() {
+    local status=$?
+    if [ "${#STAGE_NAMES[@]}" -gt 0 ]; then
+        echo
+        echo "── ci stage summary ──────────────────────────"
+        local i
+        for i in "${!STAGE_NAMES[@]}"; do
+            printf '  %-12s %6ss\n' "${STAGE_NAMES[$i]}" "${STAGE_SECS[$i]}"
+        done
+        echo "──────────────────────────────────────────────"
+    fi
+    return $status
+}
+trap summary EXIT
 
-# kernel parity in Pallas interpret mode, run explicitly: the kernel
-# bodies (maxsim, decompress+maxsim, splade single/batched) must match
-# their jnp oracles even when the full run above is filtered by "$@"
-python -m pytest -q tests/test_kernels.py tests/test_splade_stage1.py \
-    -k "interpret"
+run_stage() {
+    local name="$1"; shift
+    echo "── ci stage: ${name} ──"
+    local t0=$SECONDS
+    "$@"
+    STAGE_NAMES+=("$name")
+    STAGE_SECS+=("$((SECONDS - t0))")
+}
 
-# pipelined smoke: bring the full serving stack up with the stage-graph
-# executor (pipeline_depth=2) over interpret-mode Pallas kernels
-# (--splade-backend pallas lowers to interpret off-TPU), serve a
-# Poisson load end-to-end, and shut down cleanly
-python -m repro.launch.serve --pipeline-depth 2 --splade-backend pallas \
-    --max-batch 8 --qps 100 --n 32
+ensure_hypothesis() {
+    # property tests are skipped without hypothesis (optional test
+    # extra); install it when the image has network access
+    python -c "import hypothesis" 2>/dev/null \
+        || pip install -q hypothesis 2>/dev/null \
+        || echo "hypothesis unavailable (offline image) — property tests skip"
+}
 
-# scatter-gather smoke: split the index into a 2-shard group and serve
-# the same pipelined load through the sharded plans (per-shard mmap
-# segments, fanout gathers, global top-k merge)
-python -m repro.launch.serve --shards 2 --pipeline-depth 2 \
-    --max-batch 8 --qps 100 --n 32
+stage_collect() {
+    # cheapest possible fail: import errors and broken test modules
+    # surface in seconds, before any index gets built. Output is
+    # swallowed on success (thousands of test ids) but replayed on
+    # failure — a silent red collect job would be undiagnosable.
+    local out
+    if ! out=$(python -m pytest -q --collect-only 2>&1); then
+        printf '%s\n' "$out" | tail -60
+        return 1
+    fi
+}
+
+stage_unit() {
+    ensure_hypothesis
+    python -m pytest -x -q "$@"
+}
+
+stage_kernels() {
+    # kernel parity in Pallas interpret mode, run explicitly: the kernel
+    # bodies (maxsim, decompress+maxsim, splade single/batched) must
+    # match their jnp oracles even when a filtered unit run skipped them
+    python -m pytest -q tests/test_kernels.py tests/test_splade_stage1.py \
+        -k "interpret"
+}
+
+stage_smoke() {
+    # pipelined smoke: full serving stack with the stage-graph executor
+    # (pipeline_depth=2) over interpret-mode Pallas kernels
+    python -m repro.launch.serve --pipeline-depth 2 --splade-backend pallas \
+        --max-batch 8 --qps 100 --n 32
+
+    # scatter-gather smoke: 2-shard group through the sharded plans
+    # (per-shard mmap segments, fanout gathers, global top-k merge)
+    python -m repro.launch.serve --shards 2 --pipeline-depth 2 \
+        --max-batch 8 --qps 100 --n 32
+
+    # process-group smoke: the same 2-shard topology with one
+    # shared-nothing worker process per shard behind the RPC
+    # coordinator (spawn, serve, graceful shutdown — no orphans)
+    python -m repro.launch.serve --shards 2 --shard-workers process \
+        --pipeline-depth 2 --max-batch 8 --qps 100 --n 24
+}
+
+stage_bench_gate() {
+    python scripts/bench_gate.py
+}
+
+cmd="${1:-all}"
+[ $# -gt 0 ] && shift
+
+case "$cmd" in
+    collect)    run_stage collect stage_collect ;;
+    unit)       run_stage unit stage_unit "$@" ;;
+    kernels)    run_stage kernels stage_kernels ;;
+    smoke)      run_stage smoke stage_smoke ;;
+    bench-gate) run_stage bench-gate stage_bench_gate ;;
+    all)
+        run_stage collect stage_collect
+        run_stage unit stage_unit "$@"
+        run_stage kernels stage_kernels
+        run_stage smoke stage_smoke
+        run_stage bench-gate stage_bench_gate
+        ;;
+    *)
+        echo "usage: ci.sh [collect|unit|kernels|smoke|bench-gate|all]" >&2
+        exit 2
+        ;;
+esac

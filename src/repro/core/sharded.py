@@ -22,16 +22,30 @@ the whole group by compiling *sharded* stage plans:
   ``merge_topk`` fuse stage combines per-shard top-k lists into the
   global ranking.
 
-Parity contract (tested in ``tests/test_sharding.py``): shard-local
-scores are bit-identical to the single index's scores for the same
-document (shared quantisation / geometry), and every top-k selection —
-per shard and at the merges — orders by (score desc, pid asc). Top-k
-selection distributes over a partition under that total order, so
-shards=k returns the same results as shards=1 for all four methods.
-Two documented deviations: a per-shard ``candidate_cap`` truncates
-later than a global one (strictly more candidates survive — never
-fewer), and exact-score ties at the final merge resolve by global pid
-rather than approx-rank.
+Two worker backends share this plan vocabulary (and the merge/fuse
+stage bodies, so they cannot drift):
+
+* :class:`ShardedRetriever` — **thread workers**: every shard lives in
+  this process; per-shard host gathers fan out on a thread pool,
+  device dispatches are async.
+* :class:`ProcessShardGroup` — **process workers**: each shard is its
+  own OS process (``repro.serving.worker``) owning its mmap segment,
+  page-cache working set, SPLADE device cache, and GIL; per-shard
+  stage work crosses a compact RPC (``repro.serving.rpc``) and comes
+  back as synced numpy. Selected by ``--shard-workers=process`` on
+  ``repro.launch.serve``.
+
+Parity contract (tested in ``tests/test_sharding.py`` and
+``tests/test_process_group.py``): shard-local scores are bit-identical
+to the single index's scores for the same document (shared
+quantisation / geometry), and every top-k selection — per shard and at
+the merges — orders by (score desc, pid asc). Top-k selection
+distributes over a partition under that total order, so shards=k
+returns the same results as shards=1 for all four methods, under
+either worker backend. Two documented deviations: a per-shard
+``candidate_cap`` truncates later than a global one (strictly more
+candidates survive — never fewer), and exact-score ties at the final
+merge resolve by global pid rather than approx-rank.
 """
 
 from __future__ import annotations
@@ -47,7 +61,7 @@ import numpy as np
 
 from repro.common.utils import next_pow2 as _next_pow2
 from repro.core import hybrid as hybrid_mod
-from repro.core.multistage import MultiStageRetriever
+from repro.core.multistage import MultiStageParams, MultiStageRetriever
 from repro.core.plaid import (
     _pad_batch_rows,
     pad_query_batch_host,
@@ -122,6 +136,102 @@ def scatter_scores(out: np.ndarray, cols: np.ndarray,
     rows = np.broadcast_to(np.arange(out.shape[0])[:, None],
                            cols.shape)[m]
     out[rows, cols[m]] = scores[m]
+
+
+# ---------------------------------------------------------------------------
+# shared merge/fuse stage bodies
+#
+# Both shard-group backends — in-process thread workers
+# (:class:`ShardedRetriever`) and shared-nothing process workers
+# (:class:`ProcessShardGroup`) — run these exact functions for every
+# coordinator-side merge and fuse, so the two backends cannot drift:
+# given byte-identical per-shard states, the merged ranking is
+# byte-identical by construction.
+# ---------------------------------------------------------------------------
+
+def _concat_shard_topk(shard_states):
+    """Concatenate per-shard stage-1 results (already remapped to
+    global pids) along the candidate axis."""
+    pids = np.concatenate([s["pids"] for s in shard_states], axis=1)
+    scores = np.concatenate([s["scores"] for s in shard_states], axis=1)
+    return pids, scores
+
+
+def fuse_splade_state(cb, first_k: int):
+    """Terminal fuse for the splade-only method: merge the per-shard
+    stage-1 lists and truncate to the request's k."""
+    pids, scores = _concat_shard_topk(cb.shard_states)
+    pids_b, s_scores = merge_topk(pids, scores, first_k, pad_score=0.0)
+    return cb.evolve(pids=pids_b[:, :cb.k], scores=s_scores[:, :cb.k])
+
+
+def merge_stage1_state(cb, first_k: int):
+    """(B, first_k) global candidates — identical content and order to
+    the single index's ``run_splade_batch`` — plus the padded query
+    batch the downstream gather/score stages consume."""
+    pids, scores = _concat_shard_topk(cb.shard_states)
+    pids_b, s_scores = merge_topk(pids, scores, first_k, pad_score=0.0)
+    q, q_valid = pad_query_batch_host(cb.q_embs)
+    B, q, q_valid, gp = _pad_batch_rows(q, q_valid, pids_b)
+    return cb.with_state(pids_b=pids_b, s_scores=s_scores,
+                         q=q, q_valid=q_valid, B=B, gp=gp)
+
+
+def fuse_scatter_rerank(cb, method: str, normalizer: str):
+    """Terminal rerank/hybrid fuse: sync each shard's narrow score
+    slice (``c_dev`` — lazy device value or already-synced numpy),
+    scatter it back into the global candidate columns, α-fuse for
+    hybrid, and take the stable (score desc, pid asc) top-k."""
+    st = cb.state
+    pids_b = st["pids_b"]
+    c_scores = np.full(pids_b.shape, -np.inf, np.float32)
+    for s in cb.shard_states:
+        scatter_scores(c_scores, s["cols"][:pids_b.shape[0]],
+                       np.asarray(s["c_dev"]))
+    if method == "rerank":
+        final = np.where(pids_b >= 0, c_scores, -np.inf)
+    else:
+        mask = pids_b >= 0
+        final = np.asarray(hybrid_mod.hybrid_scores(
+            jnp.asarray(st["s_scores"]), jnp.asarray(c_scores),
+            jnp.asarray(mask), alpha=jnp.asarray(cb.alphas),
+            normalizer=normalizer))
+    order = np.argsort(-final, axis=1, kind="stable")[:, :cb.k]
+    sorted_final = np.take_along_axis(final, order, axis=1)
+    out_pids = np.where(
+        sorted_final > -np.inf,
+        np.take_along_axis(pids_b, order, axis=1), -1)
+    return cb.evolve(pids=out_pids, scores=sorted_final)
+
+
+def merge_approx_state(cb, offsets, ndocs: int):
+    """Global PLAID survivor selection: remap per-shard candidates to
+    global pids, merge raw approx scores, and apply the ndocs cut
+    *globally* (a shard-local cut would diverge from the single-index
+    path)."""
+    gpids = np.concatenate(
+        [np.where(s["cand_np"] >= 0, s["cand_np"] + offsets[i], -1)
+         for i, s in enumerate(cb.shard_states)], axis=1)
+    ascore = np.concatenate(
+        [s["approx_np"] for s in cb.shard_states], axis=1)
+    final_g, _ = merge_topk(gpids, ascore, ndocs)
+    n_real = sum(s["n_real"][:cb.state["B"]] for s in cb.shard_states)
+    return cb.with_state(final_g=final_g, n_real=n_real)
+
+
+def fuse_colbert_state(cb):
+    """Terminal PLAID fuse: every global candidate is owned by exactly
+    one shard — scatter each shard's narrow exact-score slice back into
+    the global matrix and merge."""
+    st = cb.state
+    B, g = st["B"], st["final_g"]
+    ex = np.full(g.shape, -np.inf, np.float32)
+    for s in cb.shard_states:
+        scatter_scores(ex, s["cols"], s["exact_np"])
+    out_pids, out_scores = merge_topk(g[:B], ex[:B], cb.k)
+    aux = [{"candidates": int(x)} for x in st["n_real"]]
+    return cb.evolve(pids=out_pids,
+                     scores=out_scores).with_state(aux=aux)
 
 
 class CombinedAccessStats:
@@ -331,16 +441,7 @@ class ShardedRetriever(MultiStageRetriever):
                 return s
 
             def merge_approx(cb):
-                gpids = np.concatenate(
-                    [np.where(s["cand_np"] >= 0,
-                              s["cand_np"] + offs[i], -1)
-                     for i, s in enumerate(cb.shard_states)], axis=1)
-                ascore = np.concatenate(
-                    [s["approx_np"] for s in cb.shard_states], axis=1)
-                final_g, _ = merge_topk(gpids, ascore, ndocs)
-                n_real = sum(s["n_real"][:cb.state["B"]]
-                             for s in cb.shard_states)
-                return cb.with_state(final_g=final_g, n_real=n_real)
+                return merge_approx_state(cb, offs, ndocs)
 
             def gather_residuals(cb, i):
                 s = dict(cb.shard_states[i])
@@ -367,20 +468,6 @@ class ShardedRetriever(MultiStageRetriever):
                 s["exact_np"] = np.asarray(ex)   # (Bp, W_i) narrow slice
                 return s
 
-            def fuse(cb):
-                st = cb.state
-                B, g = st["B"], st["final_g"]
-                # every global candidate is owned by exactly one shard:
-                # scatter each shard's narrow score slice back into the
-                # global exact-score matrix
-                ex = np.full(g.shape, -np.inf, np.float32)
-                for s in cb.shard_states:
-                    scatter_scores(ex, s["cols"], s["exact_np"])
-                out_pids, out_scores = merge_topk(g[:B], ex[:B], cb.k)
-                aux = [{"candidates": int(x)} for x in st["n_real"]]
-                return cb.evolve(pids=out_pids,
-                                 scores=out_scores).with_state(aux=aux)
-
             stages = (
                 Stage("plaid_probe", DEVICE, probe),
                 Stage("plaid_probe:ivf", DEVICE, candidates, fanout=S),
@@ -391,7 +478,7 @@ class ShardedRetriever(MultiStageRetriever):
                 Stage("host_gather:residuals", gather_kind,
                       gather_residuals, fanout=S, pooled=not dr),
                 Stage("device_score:exact", DEVICE, exact, fanout=S),
-                Stage("merge_topk", HOST, fuse))
+                Stage("merge_topk", HOST, fuse_colbert_state))
             return StagePlan(method=method, stages=stages,
                              access_stats=access, pool=self._pool)
 
@@ -421,34 +508,17 @@ class ShardedRetriever(MultiStageRetriever):
                  "scores": sc}
                 for i, (pd, sc) in enumerate(outs)))
 
-        def _merged_stage1(cb):
-            """(B, first_k) global candidates — identical content and
-            order to the single index's ``run_splade_batch``."""
-            pids = np.concatenate([s["pids"] for s in cb.shard_states],
-                                  axis=1)
-            scores = np.concatenate([s["scores"]
-                                     for s in cb.shard_states], axis=1)
-            return merge_topk(pids, scores, p.first_k, pad_score=0.0)
-
         if method == "splade":
-            def fuse_splade(cb):
-                pids_b, s_scores = _merged_stage1(cb)
-                return cb.evolve(pids=pids_b[:, :cb.k],
-                                 scores=s_scores[:, :cb.k])
-
             stages = (Stage("splade_stage1", s1_kind, splade_stage),
-                      Stage("merge_topk", HOST, fuse_splade))
+                      Stage("merge_topk", HOST,
+                            lambda cb: fuse_splade_state(cb, p.first_k)))
             return StagePlan(method=method, stages=stages,
                              access_stats=access, pool=self._pool)
 
         # rerank / hybrid: merged SPLADE candidates → shard-parallel
         # residual gather → per-shard MaxSim → global fuse (+ α)
         def merge_stage1(cb):
-            pids_b, s_scores = _merged_stage1(cb)
-            q, q_valid = pad_query_batch_host(cb.q_embs)
-            B, q, q_valid, gp = _pad_batch_rows(q, q_valid, pids_b)
-            return cb.with_state(pids_b=pids_b, s_scores=s_scores,
-                                 q=q, q_valid=q_valid, B=B, gp=gp)
+            return merge_stage1_state(cb, p.first_k)
 
         def gather(cb, i):
             st = cb.state
@@ -472,28 +542,9 @@ class ShardedRetriever(MultiStageRetriever):
             return s
 
         def fuse_rerank(cb):
-            st = cb.state
-            pids_b = st["pids_b"]
             # sync each shard's narrow lazy score slice and scatter it
             # back into the global candidate columns
-            c_scores = np.full(pids_b.shape, -np.inf, np.float32)
-            for s in cb.shard_states:
-                scatter_scores(c_scores, s["cols"][:pids_b.shape[0]],
-                               np.asarray(s["c_dev"]))
-            if method == "rerank":
-                final = np.where(pids_b >= 0, c_scores, -np.inf)
-            else:
-                mask = pids_b >= 0
-                final = np.asarray(hybrid_mod.hybrid_scores(
-                    jnp.asarray(st["s_scores"]), jnp.asarray(c_scores),
-                    jnp.asarray(mask), alpha=jnp.asarray(cb.alphas),
-                    normalizer=p.normalizer))
-            order = np.argsort(-final, axis=1, kind="stable")[:, :cb.k]
-            sorted_final = np.take_along_axis(final, order, axis=1)
-            out_pids = np.where(
-                sorted_final > -np.inf,
-                np.take_along_axis(pids_b, order, axis=1), -1)
-            return cb.evolve(pids=out_pids, scores=sorted_final)
+            return fuse_scatter_rerank(cb, method, p.normalizer)
 
         stages = (Stage("splade_stage1", s1_kind, splade_stage),
                   Stage("merge_topk:stage1", HOST, merge_stage1),
@@ -534,3 +585,440 @@ def build_sharded_retriever(shard_dirs, boundaries, *, mode: str = "mmap",
             device=None if devices is None else devices[i], **kw)
         shards.append(retr)
     return ShardedRetriever(shards, boundaries)
+
+
+# ---------------------------------------------------------------------------
+# process-group backend: shared-nothing shard workers over RPC
+# ---------------------------------------------------------------------------
+
+class ProcessShardGroup(MultiStageRetriever):
+    """Scatter-gather retriever whose shards are **separate OS
+    processes** (``repro.serving.worker``), one per ``shards/<i>/``
+    subtree, talked to over the length-prefixed RPC in
+    ``repro.serving.rpc``.
+
+    Shared-nothing is the point: each worker owns its mmap
+    ``PagedStore`` segment (its *own page-cache working set* — the
+    aggregate pool is split across processes, not replicated), its own
+    SPLADE postings slice / device cache, and its own GIL, so per-shard
+    gathers and kernels run truly concurrently on multi-core hosts —
+    the regime where mmap scoring wins.
+
+    Parity contract: workers execute the *same stage functions over the
+    same inputs* as the in-process thread backend (the RPC codec is
+    lossless for numpy dtypes), and every coordinator-side merge/fuse
+    is the same shared function (:func:`merge_stage1_state`,
+    :func:`fuse_scatter_rerank`, :func:`merge_approx_state`,
+    :func:`fuse_colbert_state`) — so ``--shard-workers=process`` is
+    bitwise-identical to ``--shard-workers=thread`` and therefore to
+    ``shards=1``.
+
+    Pipelining/backpressure: per-shard ``score`` dispatches are split
+    into an ``opens_async`` send stage and a ``closes_async`` wait
+    stage, so the executor's software pipelining parks a batch while
+    its workers compute and runs the next batch's host stages — the
+    same overlap semantics as lazy device dispatch, across a process
+    boundary. Each in-flight micro-batch holds at most one outstanding
+    RPC per worker, so the executor's admission semaphore bounds the
+    RPC queue on every worker.
+
+    Lifecycle: spawn-all at construction (first ping is the readiness
+    barrier), heartbeat via :meth:`worker_health`, graceful SIGTERM
+    drain (:meth:`close` escalates shutdown-RPC → SIGTERM → SIGKILL and
+    always reaps — no orphans). A crashed worker fails its in-flight
+    batch with :class:`~repro.serving.rpc.ShardWorkerDied` and is
+    respawned on next use (single-restart healing: a worker that dies
+    again before serving one successful call is not respawned)."""
+
+    def __init__(self, shard_dirs, boundaries, *, mode: str = "mmap",
+                 plaid_params=None, multistage_params=None,
+                 spawn_timeout_s: float = 300.0,
+                 call_timeout_s: float = 300.0,
+                 worker_env: Optional[dict] = None,
+                 autostart: bool = True):
+        from repro.core.plaid import PlaidParams
+
+        self.shard_dirs = [str(d) for d in shard_dirs]
+        if not self.shard_dirs:
+            raise ValueError("empty shard group")
+        self.offsets = np.asarray(boundaries, np.int64)
+        if len(self.offsets) != len(self.shard_dirs) + 1:
+            raise ValueError(
+                f"{len(self.shard_dirs)} shards need "
+                f"{len(self.shard_dirs) + 1} boundaries, "
+                f"got {len(self.offsets)}")
+        self.n_shards = len(self.shard_dirs)
+        self.n_docs = int(self.offsets[-1])
+        self.mode = mode
+        self.plaid_params = plaid_params or PlaidParams()
+        self.params = multistage_params or MultiStageParams()
+        self.spawn_timeout_s = spawn_timeout_s
+        self.call_timeout_s = call_timeout_s
+        if worker_env is None:
+            from repro.launch.mesh import shard_worker_env
+            worker_env = shard_worker_env(self.n_shards)
+        self._worker_env = worker_env
+        self._lock = threading.Lock()
+        self._plans: dict = {}
+        self.pipeline_stats = PipelineStats()
+        self._pool = ThreadPoolExecutor(max_workers=self.n_shards,
+                                        thread_name_prefix="shard-rpc")
+        self._clients: list = [None] * self.n_shards
+        self._spawn_locks = [threading.Lock()
+                             for _ in range(self.n_shards)]
+        self.restarts = [0] * self.n_shards
+        self._consec_restarts = [0] * self.n_shards
+        self._closed = False
+        self._centroids_cache = None
+        self.set_splade_backend(self.params.splade_backend)
+        if autostart:
+            self.start()
+
+    # ------------------------------------------------------------------
+    # worker lifecycle
+    # ------------------------------------------------------------------
+    def start(self):
+        """Spawn every worker concurrently; returns after each one's
+        readiness ping (jax imported, shard subtree mapped). A shard
+        that fails to come up tears the whole group down — a partially
+        spawned group would leak the workers that did start."""
+        try:
+            list(self._pool.map(self._ensure_worker,
+                                range(self.n_shards)))
+        except BaseException:
+            self.close(grace_s=1.0)
+            raise
+        return self
+
+    def _ensure_worker(self, i: int):
+        """Live client for shard ``i``. Spawn-locked per shard so
+        concurrent stages racing into a dead shard act exactly once.
+
+        Crash discipline: a corpse discovered here is reaped and the
+        discovering call **fails fast** with a clear
+        :class:`~repro.serving.rpc.ShardWorkerDied` — a serving batch
+        must not silently absorb a multi-second worker respawn. The
+        *next* call respawns (heal-on-restart). A worker that dies
+        again before serving one successful call is quarantined (no
+        respawn loop); a later successful call resets the budget."""
+        from repro.serving.rpc import ShardWorkerClient, ShardWorkerDied
+
+        with self._spawn_locks[i]:
+            if self._closed:
+                raise ShardWorkerDied(
+                    f"shard group closed; shard {i} unavailable")
+            cli = self._clients[i]
+            if cli is not None and cli.alive():
+                return cli
+            if cli is not None:
+                pid = cli.pid
+                code = cli.terminate(grace_s=0.5)   # reap the corpse
+                self._clients[i] = None
+                self.restarts[i] += 1
+                self._consec_restarts[i] += 1
+                raise ShardWorkerDied(
+                    f"shard {i} worker (pid {pid}) died"
+                    + ("" if code is None else f" (exit code {code})")
+                    + "; healing on next use")
+            if self._consec_restarts[i] > 1:
+                raise ShardWorkerDied(
+                    f"shard {i} worker died again immediately after a "
+                    f"restart — not respawning (investigate the worker, "
+                    f"then rebuild the group)")
+            import dataclasses as _dc
+            cli = ShardWorkerClient(
+                i, self.shard_dirs[i], mode=self.mode,
+                plaid_params=_dc.asdict(self.plaid_params),
+                ms_params=_dc.asdict(self.params),
+                env=self._worker_env,
+                spawn_timeout_s=self.spawn_timeout_s,
+                call_timeout_s=self.call_timeout_s)
+            try:
+                cli.spawn()      # reaps its own child on failure
+            except BaseException:
+                # a failed/hung startup burns restart budget too, or a
+                # worker that can never come up respawns (and leaks
+                # wall time) on every batch forever
+                self._consec_restarts[i] += 1
+                raise
+            self._clients[i] = cli
+            return cli
+
+    def _call_async(self, i: int, op: str, payload):
+        cli = self._ensure_worker(i)
+        return cli, cli.call_async(op, payload)
+
+    def _wait(self, i: int, cli, rep):
+        out = cli.wait(rep)
+        self._consec_restarts[i] = 0          # healed / healthy
+        return out
+
+    def _call(self, i: int, op: str, payload):
+        cli, rep = self._call_async(i, op, payload)
+        return self._wait(i, cli, rep)
+
+    def worker_pids(self) -> list:
+        return [None if c is None else c.pid for c in self._clients]
+
+    def heartbeat(self, timeout_s: float = 10.0) -> list:
+        """Ping every worker; True per shard that answered."""
+        from repro.serving.rpc import ShardWorkerDied, ShardWorkerError
+
+        out = []
+        for i, cli in enumerate(self._clients):
+            if cli is None or not cli.alive():
+                out.append(False)
+                continue
+            try:
+                # soft deadline: a ping queued behind a long op must
+                # not kill a busy worker
+                cli.call("ping", {}, timeout=timeout_s,
+                         kill_on_timeout=False)
+                out.append(True)
+            except (ShardWorkerDied, ShardWorkerError):
+                out.append(False)
+        return out
+
+    def worker_health(self) -> list:
+        """Per-worker vitals (pid, RSS, mmap segment bytes, served
+        count, restart count) — never raises, never respawns: a dead
+        worker reports ``alive: False`` until traffic heals it."""
+        from repro.serving.rpc import ShardWorkerDied, ShardWorkerError
+
+        out = []
+        for i, cli in enumerate(self._clients):
+            rec = {"shard": i,
+                   "pid": None if cli is None else cli.pid,
+                   "alive": bool(cli is not None and cli.alive()),
+                   "restarts": self.restarts[i]}
+            if cli is not None:
+                rec["rpc_bytes_sent"] = cli.bytes_sent
+                rec["rpc_bytes_recv"] = cli.bytes_recv
+            if rec["alive"]:
+                try:
+                    # soft deadline (kill_on_timeout=False): health
+                    # polls queue FIFO behind real work, and a monitor
+                    # must never kill a worker that is merely busy
+                    rec.update(cli.call("health", {}, timeout=10.0,
+                                        kill_on_timeout=False))
+                except ShardWorkerDied as e:
+                    rec["alive"] = False
+                    rec["error"] = str(e)
+                except ShardWorkerError as e:
+                    rec["busy"] = True
+                    rec["error"] = str(e)
+            out.append(rec)
+        return out
+
+    def close(self, grace_s: float = 5.0):
+        """Graceful group shutdown: drain each worker (shutdown RPC,
+        then SIGTERM, then SIGKILL) and reap every child. Idempotent.
+        Takes each shard's spawn lock so a concurrent heal that was
+        already past the closed-check finishes its spawn first and is
+        then terminated here — never leaked."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+        for i in range(self.n_shards):
+            with self._spawn_locks[i]:
+                cli = self._clients[i]
+                if cli is not None:
+                    cli.terminate(grace_s=grace_s)
+        self._pool.shutdown(wait=False)
+
+    # ------------------------------------------------------------------
+    # retriever protocol
+    # ------------------------------------------------------------------
+    def search(self, method, q_emb=None, term_ids=None, term_weights=None,
+               alpha=None, k=None):
+        wrap = (lambda x: None if x is None else [x])
+        pids, scores = self.search_batch(
+            method, q_embs=wrap(q_emb), term_ids=wrap(term_ids),
+            term_weights=wrap(term_weights), alpha=alpha, k=k)
+        return pids[0], scores[0]
+
+    def run_splade_batch(self, term_ids, term_weights, k=None,
+                         backend=None, _record=True):
+        """Group-wide stage 1 over the worker processes (benchmarks
+        poke this directly; serving goes through the compiled plans)."""
+        k = self.params.first_k if k is None else k
+        payload = {"term_ids": list(term_ids),
+                   "term_weights": list(term_weights), "k": k,
+                   "backend": backend or self.splade_backend}
+        pends = [self._call_async(i, "splade", payload)
+                 for i in range(self.n_shards)]
+        outs = [self._wait(i, cli, rep)
+                for i, (cli, rep) in enumerate(pends)]
+        pids = np.concatenate(
+            [np.where(r["pids"] >= 0, r["pids"] + self.offsets[i], -1)
+             for i, r in enumerate(outs)], axis=1)
+        scores = np.concatenate([r["scores"] for r in outs], axis=1)
+        return merge_topk(pids, scores, k, pad_score=0.0)
+
+    def splade_device_cache(self):
+        """Warm every worker's padded-postings device cache for the
+        current stage-1 backend (no-op per worker on ``host``)."""
+        pends = [self._call_async(i, "warm",
+                                  {"backend": self.splade_backend})
+                 for i in range(self.n_shards)]
+        return [self._wait(i, cli, rep)
+                for i, (cli, rep) in enumerate(pends)]
+
+    def _centroids(self):
+        """Replicated centroid geometry, loaded once from shard 0's
+        subtree (metadata-sized; byte-identical across shards)."""
+        if self._centroids_cache is None:
+            import pathlib as _pl
+            self._centroids_cache = jnp.asarray(np.load(
+                _pl.Path(self.shard_dirs[0]) / "colbert"
+                / "centroids.npy"))
+        return self._centroids_cache
+
+    # ------------------------------------------------------------------
+    # RPC stage plans
+    # ------------------------------------------------------------------
+    def _build_plan(self, method: str) -> StagePlan:
+        """Compile the scatter-gather stage graph with per-shard work
+        delegated to the worker processes. Coordinator-side stages are
+        the shared merge/fuse bodies; per-shard RPC stages are
+        DEVICE-kind (the worker pool is this plan's compute resource —
+        socket waits release the GIL exactly like a device sync)."""
+        p = self.params
+        S = self.n_shards
+        offs = self.offsets
+        backend = self.splade_backend
+        ndocs = min(self.plaid_params.ndocs,
+                    self.plaid_params.candidate_cap)
+
+        if method == "colbert":
+            from repro.core.plaid import (
+                pad_query_batch,
+                stage1_centroid_probe_batch,
+            )
+            nprobe = self.plaid_params.nprobe
+
+            def probe(cb):
+                # ONE centroid probe for the whole group (replicated
+                # geometry), synced to host here so every downstream
+                # stage ships plain numpy
+                q, q_valid = pad_query_batch(cb.q_embs)
+                B, q, q_valid = _pad_batch_rows(q, q_valid)
+                scores_c, cids = stage1_centroid_probe_batch(
+                    q, q_valid, self._centroids(), nprobe)
+                return cb.with_state(
+                    B=B, q=np.asarray(q), q_valid=np.asarray(q_valid),
+                    scores_c=np.asarray(scores_c),
+                    cids=np.asarray(cids))
+
+            def candidates_rpc(cb, i):
+                st = cb.state
+                r = self._call(i, "colbert_candidates",
+                               {"scores_c": st["scores_c"],
+                                "cids": st["cids"],
+                                "q_valid": st["q_valid"]})
+                return {"cand_np": r["cand"], "approx_np": r["approx"],
+                        "n_real": r["n_real"]}
+
+            def exact_rpc(cb, i):
+                st = cb.state
+                cols, sel = compact_owned(st["final_g"],
+                                          offs[i], offs[i + 1])
+                r = self._call(i, "colbert_exact",
+                               {"q": st["q"], "q_valid": st["q_valid"],
+                                "sel": sel})
+                return {"cols": cols, "exact_np": r["scores"]}
+
+            stages = (
+                Stage("plaid_probe", DEVICE, probe),
+                Stage("shard_rpc:candidates", DEVICE, candidates_rpc,
+                      fanout=S, pooled=True),
+                Stage("merge_topk:approx", HOST,
+                      lambda cb: merge_approx_state(cb, offs, ndocs)),
+                Stage("shard_rpc:exact", DEVICE, exact_rpc,
+                      fanout=S, pooled=True),
+                Stage("merge_topk", HOST, fuse_colbert_state))
+            return StagePlan(method=method, stages=stages,
+                             access_stats=None, pool=self._pool)
+
+        def splade_stage(cb):
+            """Group stage 1: every shard's request goes onto its wire
+            *before* any reply is read (pipelined sockets), so all S
+            worker processes score their postings slices concurrently —
+            the process analogue of dispatch-all-then-sync-all."""
+            payload = {"term_ids": list(cb.term_ids),
+                       "term_weights": list(cb.term_weights),
+                       "k": p.first_k, "backend": backend}
+            pends = [self._call_async(i, "splade", payload)
+                     for i in range(S)]
+            outs = [self._wait(i, cli, rep)
+                    for i, (cli, rep) in enumerate(pends)]
+            return cb.evolve(shard_states=tuple(
+                {"pids": np.where(r["pids"] >= 0,
+                                  r["pids"] + offs[i], -1),
+                 "scores": r["scores"]}
+                for i, r in enumerate(outs)))
+
+        if method == "splade":
+            stages = (Stage("splade_stage1", DEVICE, splade_stage),
+                      Stage("merge_topk", HOST,
+                            lambda cb: fuse_splade_state(cb, p.first_k)))
+            return StagePlan(method=method, stages=stages,
+                             access_stats=None, pool=self._pool)
+
+        # rerank / hybrid: merged SPLADE candidates → per-shard RPC
+        # (compacted gather + MaxSim inside the worker) → global fuse.
+        # The dispatch/wait split is what preserves the executor's
+        # software pipelining: the batch parks at the wait stage while
+        # its S workers gather+score, and the coordinator runs the next
+        # batch's host stages.
+        def score_dispatch(cb, i):
+            st = cb.state
+            cols, sel = compact_owned(st["gp"], offs[i], offs[i + 1])
+            cli, rep = self._call_async(
+                i, "score_tokens",
+                {"q": st["q"], "q_valid": st["q_valid"], "sel": sel})
+            return {"cols": cols, "_cli": cli, "_rep": rep}
+
+        def score_wait(cb, i):
+            s = dict(cb.shard_states[i])
+            r = self._wait(i, s.pop("_cli"), s.pop("_rep"))
+            s["c_dev"] = r["scores"][:cb.state["B"]]
+            return s
+
+        stages = (
+            Stage("splade_stage1", DEVICE, splade_stage),
+            Stage("merge_topk:stage1", HOST,
+                  lambda cb: merge_stage1_state(cb, p.first_k)),
+            Stage("shard_rpc:score", DEVICE, score_dispatch, fanout=S,
+                  opens_async=True),
+            Stage("shard_rpc:wait", DEVICE, score_wait, fanout=S,
+                  closes_async=True),
+            Stage("fuse_topk", HOST,
+                  lambda cb: fuse_scatter_rerank(cb, method,
+                                                 p.normalizer)))
+        return StagePlan(method=method, stages=stages,
+                         access_stats=None, pool=self._pool)
+
+
+def build_shard_group(shard_dirs, boundaries, *, workers: str = "thread",
+                      mode: str = "mmap", plaid_params=None,
+                      multistage_params=None, devices=None, **kw):
+    """Load a shard group behind either worker backend.
+
+    ``workers="thread"`` → in-process :class:`ShardedRetriever`
+    (:func:`build_sharded_retriever`); ``workers="process"`` → one OS
+    process per shard behind a :class:`ProcessShardGroup`. Both present
+    the same retriever interface and return identical results."""
+    if workers == "process":
+        return ProcessShardGroup(shard_dirs, boundaries, mode=mode,
+                                 plaid_params=plaid_params,
+                                 multistage_params=multistage_params,
+                                 **kw)
+    if workers != "thread":
+        raise ValueError(f"shard workers {workers!r} not in "
+                         f"('thread', 'process')")
+    return build_sharded_retriever(shard_dirs, boundaries, mode=mode,
+                                   plaid_params=plaid_params,
+                                   multistage_params=multistage_params,
+                                   devices=devices)

@@ -157,3 +157,17 @@ def split_index_tree(base_dir, n_shards: int, group_dir=None):
     meta_path.write_text(json.dumps(
         {"n_shards": n_shards, "boundaries": bounds.tolist()}))
     return group
+
+
+def load_group(group_dir):
+    """Read a shard group's layout back from its ``meta.json``.
+
+    Returns ``(shard_dirs, boundaries)`` — the inputs every group
+    backend (in-process ``build_sharded_retriever``, process-worker
+    ``ProcessShardGroup``, or a standalone ``repro.serving.worker``
+    deployment script) needs to attach to a group written by
+    :func:`split_index_tree`."""
+    group = pathlib.Path(group_dir)
+    meta = json.loads((group / "meta.json").read_text())
+    dirs = [group / str(i) for i in range(meta["n_shards"])]
+    return dirs, np.asarray(meta["boundaries"], np.int64)

@@ -6,6 +6,9 @@ module never touches jax device state.
 
 from __future__ import annotations
 
+import os
+from typing import Optional
+
 import jax
 
 from repro.common.compat import make_mesh
@@ -48,3 +51,28 @@ def shard_device_map(n_shards: int, devices=None) -> list:
     if not devices:
         raise ValueError("no devices to map shards onto")
     return [devices[i % len(devices)] for i in range(n_shards)]
+
+
+def shard_worker_env(n_workers: int, *, pin_host_threads: bool = False,
+                     base: Optional[dict] = None) -> dict:
+    """Environment for spawned shard *worker processes*.
+
+    Inherits the parent env and pins ``JAX_PLATFORMS`` to ``cpu``
+    unless the caller already set it: most accelerators are
+    single-owner per host, and N worker processes racing to initialise
+    the same device would fail (the coordinator keeps the accelerator;
+    workers own the mmap/host side).
+
+    ``pin_host_threads`` restricts each worker's XLA CPU compute to one
+    thread — worth it when ``n_workers`` approaches the core count so
+    the workers' kernels don't thrash each other's cores. **Off by
+    default**: a different intra-op thread count changes floating-point
+    reduction order, and the process-group parity contract (process ==
+    thread == shards-1, bitwise) requires workers to run the exact XLA
+    configuration the coordinator would have used."""
+    env = dict(os.environ if base is None else base)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    if pin_host_threads and n_workers > 1 and "XLA_FLAGS" not in env:
+        env["XLA_FLAGS"] = ("--xla_cpu_multi_thread_eigen=false "
+                            "intra_op_parallelism_threads=1")
+    return env

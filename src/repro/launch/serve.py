@@ -19,7 +19,7 @@ import numpy as np
 
 from repro.core.multistage import MultiStageParams, MultiStageRetriever
 from repro.core.plaid import PLAIDSearcher, PlaidParams
-from repro.core.sharded import build_sharded_retriever
+from repro.core.sharded import build_shard_group
 from repro.core.store import PAGE_BYTES
 from repro.data.synth import SynthCfg, make_corpus
 from repro.index.builder import ColBERTIndex, build_colbert_index
@@ -28,18 +28,22 @@ from repro.index.splade_index import SpladeIndex, build_splade_index
 from repro.launch.mesh import shard_device_map
 from repro.serving.engine import Request, ServeEngine
 from repro.serving.loadgen import run_open_loop, run_poisson_load
-from repro.serving.server import RetrievalServer, TCPRetrievalServer
+from repro.serving.server import RetrievalServer
 
 
 def build_or_load(index_dir: str | None, mode: str,
                   splade_backend: str = "host",
                   splade_max_df: int | None = None,
-                  n_shards: int = 1):
+                  n_shards: int = 1, shard_workers: str = "thread"):
     """Build (or load) the serving index and retriever. ``n_shards >= 2``
     splits the single index into a contiguous-range shard group on disk
     (``<dir>/shards/``, reused if already split at this count) and
-    returns a scatter-gather :class:`ShardedRetriever` whose stage-1
-    device caches are mapped round-robin onto the local devices."""
+    returns a scatter-gather retriever over it: ``shard_workers=
+    "thread"`` keeps the group in this process (stage-1 device caches
+    mapped round-robin onto the local devices); ``"process"`` spawns
+    one shared-nothing worker process per shard (own mmap segment, own
+    page cache, own GIL) behind an RPC coordinator — results are
+    bitwise-identical across both backends."""
     if index_dir and (pathlib.Path(index_dir) / "colbert").exists():
         base = pathlib.Path(index_dir)
         corpus = None
@@ -57,15 +61,15 @@ def build_or_load(index_dir: str | None, mode: str,
     ms_params = MultiStageParams(first_k=200, alpha=0.3,
                                  splade_backend=splade_backend,
                                  splade_max_df=splade_max_df)
-    if n_shards > 1:
-        import json
+    if n_shards > 1 or shard_workers == "process":
+        from repro.index.sharding import load_group
         group = split_index_tree(base, n_shards)
-        meta = json.loads((group / "meta.json").read_text())
-        retr = build_sharded_retriever(
-            [group / str(i) for i in range(n_shards)],
-            meta["boundaries"], mode=mode, plaid_params=plaid_params,
-            multistage_params=ms_params,
-            devices=shard_device_map(n_shards))
+        shard_dirs, boundaries = load_group(group)
+        retr = build_shard_group(
+            shard_dirs, boundaries, workers=shard_workers, mode=mode,
+            plaid_params=plaid_params, multistage_params=ms_params,
+            devices=(None if shard_workers == "process"
+                     else shard_device_map(n_shards)))
         # the unsharded index handle is informational only (pool-size
         # print) — serving reads the per-shard segments, so always open
         # it mmap: a second full-RAM copy of the pool would double
@@ -96,6 +100,13 @@ def main():
                          "contiguous doc-range shards (scatter-gather "
                          "serving with a global top-k merge; per-shard "
                          "mmap segments fault pages in parallel)")
+    ap.add_argument("--shard-workers", default="thread",
+                    choices=["thread", "process"],
+                    help="shard group backend: in-process thread "
+                         "fanouts, or one shared-nothing worker "
+                         "process per shard (own mmap page cache + "
+                         "GIL) behind the scatter-gather RPC — "
+                         "bitwise-identical results")
     ap.add_argument("--max-batch", type=int, default=1)
     ap.add_argument("--batch-timeout-ms", type=float, default=2.0)
     ap.add_argument("--latency-slo-ms", type=float, default=None,
@@ -117,8 +128,10 @@ def main():
     ap.add_argument("--arrival-rate", type=float, default=None,
                     help="strictly open-loop Poisson arrivals at this "
                          "QPS (instead of the default generator)")
-    ap.add_argument("--port", type=int, default=0,
-                    help=">0: serve forever on this TCP port")
+    ap.add_argument("--port", type=int, default=None,
+                    help="serve forever on this TCP port (0 binds an "
+                         "ephemeral port and prints the real one); "
+                         "omit to run the bounded load test instead")
     ap.add_argument("--qps", type=float, default=2.0)
     ap.add_argument("--n", type=int, default=60)
     args = ap.parse_args()
@@ -128,66 +141,85 @@ def main():
     corpus, index, retr = build_or_load(args.index_dir, args.mode,
                                         args.splade_backend,
                                         args.splade_max_df,
-                                        n_shards=args.shards)
+                                        n_shards=args.shards,
+                                        shard_workers=args.shard_workers)
     # backend already configured (and device cache pre-materialised) via
-    # MultiStageParams in build_or_load
+    # MultiStageParams in build_or_load; the engine owns the retriever so
+    # a process shard group's workers are reaped on every exit path
+    engine = ServeEngine(retr, pipeline_depth=depth,
+                         pipeline_workers=args.pipeline_workers,
+                         own_retriever=True)
     server = RetrievalServer(
-        ServeEngine(retr, pipeline_depth=depth,
-                    pipeline_workers=args.pipeline_workers),
-        n_threads=args.threads, max_batch=args.max_batch,
+        engine, n_threads=args.threads, max_batch=args.max_batch,
         batch_timeout_ms=args.batch_timeout_ms,
         latency_slo_ms=args.latency_slo_ms)
     server.start()
     print(f"serving ({args.mode} index, {args.threads} thread(s), "
           f"stage1={args.splade_backend}, pipeline_depth={depth}, "
-          f"shards={args.shards}); "
+          f"shards={args.shards} [{args.shard_workers} workers]); "
           f"pool={index.store.total_bytes() / 1e6:.1f} MB")
 
-    if args.port:
-        tcp = TCPRetrievalServer(("0.0.0.0", args.port), server)
-        print(f"TCP front on :{args.port} (newline-delimited JSON; "
-              f"Ctrl-C to stop)")
-        try:
-            tcp.serve_forever()
-        except KeyboardInterrupt:
-            pass
-        finally:
-            tcp.shutdown()
-            server.drain()
-            server.stop()
-        return
+    try:
+        if args.port is not None:
+            tcp = server.serve_tcp("0.0.0.0", args.port)
+            server.install_sigterm_handler()   # graceful drain on TERM
+            print(f"TCP front on :{server.tcp_port} (newline-delimited "
+                  f"JSON; SIGTERM or Ctrl-C to stop)")
+            try:
+                tcp.serve_forever()
+            except KeyboardInterrupt:
+                pass
+            finally:
+                server.shutdown_gracefully()
+            return
 
-    assert corpus is not None, "--port 0 load test needs a built-in corpus"
-    reqs = [Request(qid=i, method=args.method,
-                    q_emb=corpus["q_embs"][i % 300],
-                    term_ids=corpus["q_term_ids"][i % 300],
-                    term_weights=corpus["q_term_weights"][i % 300], k=20)
-            for i in range(args.n)]
-    if args.arrival_rate is not None:
-        res = run_open_loop(server, reqs, arrival_rate=args.arrival_rate,
-                            seed=0)
-    else:
-        res = run_poisson_load(server, reqs, qps=args.qps, seed=0,
-                               burst=args.max_batch)
-    s = res.summary()
-    print(f"offered {s['offered_qps']:.2f} QPS → achieved "
-          f"{s['achieved_qps']:.2f}; p50 {s['p50'] * 1e3:.1f} ms, "
-          f"p95 {s['p95'] * 1e3:.1f} ms, p99 {s['p99'] * 1e3:.1f} ms")
-    if depth > 1:
-        h = server.health()
-        print(f"pipeline overlap: "
-              f"{100 * h.get('overlap_fraction', 0.0):.1f}% "
-              f"(stage queues: {h['pipeline']['queues']})")
-    # under sharding the gathers hit the per-shard segments, not the
-    # original single store — report the group's aggregate working set
-    stores = ([sh.searcher.index.store for sh in retr.shards]
-              if hasattr(retr, "shards") else [index.store])
-    touched = sum(len(s.stats.unique_pages or ()) for s in stores)
-    total = sum(max(1, s.total_bytes() // PAGE_BYTES) for s in stores)
-    print(f"mmap working set: {100 * touched / total:.1f}% of pool"
-          + (f" ({len(stores)} segments)" if len(stores) > 1 else ""))
-    server.drain()
-    server.stop()
+        assert corpus is not None, \
+            "the bounded load test needs a built-in corpus"
+        reqs = [Request(qid=i, method=args.method,
+                        q_emb=corpus["q_embs"][i % 300],
+                        term_ids=corpus["q_term_ids"][i % 300],
+                        term_weights=corpus["q_term_weights"][i % 300],
+                        k=20)
+                for i in range(args.n)]
+        if args.arrival_rate is not None:
+            res = run_open_loop(server, reqs,
+                                arrival_rate=args.arrival_rate, seed=0)
+        else:
+            res = run_poisson_load(server, reqs, qps=args.qps, seed=0,
+                                   burst=args.max_batch)
+        s = res.summary()
+        print(f"offered {s['offered_qps']:.2f} QPS → achieved "
+              f"{s['achieved_qps']:.2f}; p50 {s['p50'] * 1e3:.1f} ms, "
+              f"p95 {s['p95'] * 1e3:.1f} ms, p99 {s['p99'] * 1e3:.1f} ms")
+        if depth > 1:
+            h = server.health()
+            print(f"pipeline overlap: "
+                  f"{100 * h.get('overlap_fraction', 0.0):.1f}% "
+                  f"(stage queues: {h['pipeline']['queues']})")
+        if hasattr(retr, "worker_health"):
+            # process group: the aggregate pool is split across worker
+            # working sets, not replicated into the coordinator
+            for w in retr.worker_health():
+                print(f"shard worker {w['shard']}: pid={w['pid']} "
+                      f"rss={w.get('rss_bytes', 0) / 1e6:.1f} MB "
+                      f"segment={w.get('pool_bytes', 0) / 1e6:.1f} MB "
+                      f"served={w.get('served', 0)}")
+        else:
+            # in-process serving: the gathers hit this process's stores
+            # (per-shard segments under thread sharding)
+            stores = ([sh.searcher.index.store for sh in retr.shards]
+                      if hasattr(retr, "shards") else [index.store])
+            touched = sum(len(s.stats.unique_pages or ())
+                          for s in stores)
+            total = sum(max(1, s.total_bytes() // PAGE_BYTES)
+                        for s in stores)
+            print(f"mmap working set: {100 * touched / total:.1f}% of "
+                  f"pool" + (f" ({len(stores)} segments)"
+                             if len(stores) > 1 else ""))
+        server.drain()
+        server.stop()
+    finally:
+        engine.close()     # stops pipelines + reaps shard workers
 
 
 if __name__ == "__main__":

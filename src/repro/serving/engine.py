@@ -69,7 +69,8 @@ class ServeEngine:
     def __init__(self, retriever: MultiStageRetriever,
                  splade_backend: Optional[str] = None,
                  pipeline_depth: int = 1,
-                 pipeline_workers: str = "single"):
+                 pipeline_workers: str = "single",
+                 own_retriever: bool = False):
         """``splade_backend`` (host | jax | pallas) switches the
         retriever's stage-1 scorer at construction time — a convenience
         for retrievers built elsewhere, NOT a per-engine scope: the
@@ -84,8 +85,15 @@ class ServeEngine:
         mode — ``"single"`` (software pipelining; default) or ``"kind"``
         (host/device worker threads; see ``PipelineExecutor``).
         Pipelining needs a retriever that can ``compile_plan``; others
-        silently stay synchronous."""
+        silently stay synchronous.
+
+        ``own_retriever=True`` transfers the retriever's lifecycle to
+        this engine: ``close()`` also calls ``retriever.close()`` when
+        it has one. Launchers set it so a process-shard group's worker
+        processes are reaped on every exit path (no orphans); leave it
+        False when the retriever is shared across engines."""
         self.retriever = retriever
+        self._own_retriever = own_retriever
         if splade_backend is not None:
             retriever.set_splade_backend(splade_backend)
             if splade_backend != "host":
@@ -149,10 +157,14 @@ class ServeEngine:
             px.stop()
 
     def close(self):
-        """stop_pipelines() + refuse to build new executors. Terminal."""
+        """stop_pipelines() + refuse to build new executors. Terminal.
+        An engine that owns its retriever shuts it down too (a process
+        shard group terminates and reaps its worker processes here)."""
         with self._plock:
             self._closed = True
         self.stop_pipelines()
+        if self._own_retriever and hasattr(self.retriever, "close"):
+            self.retriever.close()
 
     def pipeline_health(self) -> dict:
         """Executor-specific vitals: queue depths per stage, per method.

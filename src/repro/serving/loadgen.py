@@ -36,6 +36,7 @@ class LoadResult:
     service_times: np.ndarray
     wall_time: float
     offered_qps: float
+    failed: int = 0          # requests that raised (tolerate_failures)
 
     def percentile(self, p: float) -> float:
         return float(np.percentile(self.latencies, p)) if len(self.latencies) else float("nan")
@@ -62,14 +63,16 @@ class LoadResult:
                 "p50": self.p50, "p95": self.p95, "p99": self.p99,
                 "mean_service": float(np.mean(self.service_times))
                 if len(self.service_times) else float("nan"),
-                "n": int(len(self.latencies))}
+                "n": int(len(self.latencies)),
+                "failed": int(self.failed)}
 
 
 def run_poisson_load(server: RetrievalServer, requests: list[Request],
                      qps: float, seed: int = 0,
                      time_scale: float = 1.0,
                      burst: int = 1,
-                     on_result: Optional[Callable] = None) -> LoadResult:
+                     on_result: Optional[Callable] = None,
+                     tolerate_failures: bool = False) -> LoadResult:
     """Submit ``requests`` with Poisson(qps) inter-arrival gaps.
 
     Latency statistics are reported raw (client-observed). ``time_scale``
@@ -94,7 +97,8 @@ def run_poisson_load(server: RetrievalServer, requests: list[Request],
     arrivals = np.cumsum(rng.exponential(burst / qps, n_arrivals)
                          / time_scale)
     return _run_scheduled(server, requests, arrivals, burst=burst,
-                          offered_qps=qps, on_result=on_result)
+                          offered_qps=qps, on_result=on_result,
+                          tolerate_failures=tolerate_failures)
 
 
 def run_open_loop(server: RetrievalServer, requests: list[Request],
@@ -119,12 +123,19 @@ def run_open_loop(server: RetrievalServer, requests: list[Request],
 def _run_scheduled(server: RetrievalServer, requests: list[Request],
                    arrivals: np.ndarray, *, burst: int,
                    offered_qps: float, timeout: float = 300.0,
-                   on_result: Optional[Callable] = None) -> LoadResult:
+                   on_result: Optional[Callable] = None,
+                   tolerate_failures: bool = False) -> LoadResult:
     """Shared submit-on-absolute-schedule loop: ``burst`` requests enter
     at each arrival instant (a late submitter skips its sleep and
     catches up), then every future is drained into a
     :class:`LoadResult`. Both Poisson generators are this loop with
-    different schedules — fixes to the discipline land once."""
+    different schedules — fixes to the discipline land once.
+
+    ``tolerate_failures`` counts failed requests into
+    ``LoadResult.failed`` instead of aborting the run on the first
+    exception — the discipline for availability experiments (e.g. a
+    shard worker crashing and healing mid-load), where the question is
+    how many requests a fault cost, not whether one happened."""
     futures = []
     t0 = time.perf_counter()
     for i, t_sched in zip(range(0, len(requests), burst), arrivals):
@@ -134,8 +145,15 @@ def _run_scheduled(server: RetrievalServer, requests: list[Request],
         for req in requests[i:i + burst]:
             futures.append(server.submit(req))
     lat, svc = [], []
+    failed = 0
     for fut in futures:
-        res = fut.result(timeout=timeout)
+        try:
+            res = fut.result(timeout=timeout)
+        except Exception:
+            if not tolerate_failures:
+                raise
+            failed += 1
+            continue
         lat.append(res.latency)
         svc.append(res.service_time)
         if on_result is not None:
@@ -143,7 +161,8 @@ def _run_scheduled(server: RetrievalServer, requests: list[Request],
     wall = time.perf_counter() - t0
     return LoadResult(latencies=np.asarray(lat),
                       service_times=np.asarray(svc),
-                      wall_time=wall, offered_qps=offered_qps)
+                      wall_time=wall, offered_qps=offered_qps,
+                      failed=failed)
 
 
 def run_closed_loop(server: RetrievalServer, requests: list[Request],

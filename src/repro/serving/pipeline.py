@@ -230,10 +230,27 @@ class StagePlan:
     def run(self, cb: CandidateBatch,
             stats: Optional["PipelineStats"] = None) -> CandidateBatch:
         """Synchronous execution — the ``pipeline_depth=1`` path. Same
-        stage functions, same order as the pipelined executor."""
-        for stage in self.stages:
-            cb = self.run_stage(stage, cb, stats)
-        return cb
+        stage functions, same order as the pipelined executor.
+
+        A batch that dies between its ``opens_async`` and
+        ``closes_async`` stages (a failed device sync, a shard worker
+        crashing under its score RPC) must balance the async window on
+        the way out — the executor does this in ``_finish``; here the
+        raise path does it — or the shared overlap accounting would
+        count "dispatch in flight" forever after one failure."""
+        window_open = False
+        try:
+            for stage in self.stages:
+                if stage.closes_async:
+                    window_open = False    # run_stage closes it up front
+                cb = self.run_stage(stage, cb, stats)
+                if stage.opens_async:
+                    window_open = True
+            return cb
+        except BaseException:
+            if window_open and stats is not None:
+                stats.async_close()
+            raise
 
 
 # ---------------------------------------------------------------------------

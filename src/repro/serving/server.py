@@ -34,6 +34,7 @@ from __future__ import annotations
 
 import json
 import queue
+import signal
 import socket
 import socketserver
 import threading
@@ -80,6 +81,10 @@ class RetrievalServer:
         self._lock = threading.Lock()
         self._retry_cond = threading.Condition()
         self._retries = 0                # pipelined failure retries live
+        self.tcp: Optional["TCPRetrievalServer"] = None
+        self.tcp_port: Optional[int] = None
+        self._shutdown_once = threading.Lock()
+        self._shut_down = False
 
     # -- lifecycle -------------------------------------------------------
     def start(self):
@@ -305,6 +310,49 @@ class RetrievalServer:
         with self._retry_cond:
             self._retry_cond.wait_for(lambda: self._retries == 0)
 
+    # -- TCP front / graceful shutdown ------------------------------------
+    def serve_tcp(self, host: str = "0.0.0.0", port: int = 0
+                  ) -> "TCPRetrievalServer":
+        """Attach the TCP front. ``port=0`` binds an ephemeral port —
+        the kernel picks a free one, so CI smokes can never clash — and
+        the *real* port is reported in :attr:`tcp_port`, ``health()``,
+        and on stdout. The caller runs ``.serve_forever()`` (or puts it
+        on a thread)."""
+        self.tcp = TCPRetrievalServer((host, port), self)
+        self.tcp_port = self.tcp.server_address[1]
+        print(f"RETRIEVAL_PORT={self.tcp_port}", flush=True)
+        return self.tcp
+
+    def shutdown_gracefully(self):
+        """Drain, then stop — the SIGTERM path. Stops accepting new TCP
+        connections first, completes everything queued (including
+        in-flight pipeline batches and failure retries), then stops the
+        workers. Idempotent, and the lock is held for the *whole*
+        drain: a second caller (the launcher's exit path racing the
+        SIGTERM handler thread) blocks until the drain completes
+        instead of returning early and tearing the engine down under
+        in-flight batches."""
+        with self._shutdown_once:
+            if self._shut_down:
+                return
+            if self.tcp is not None:
+                self.tcp.shutdown()
+            self.drain()
+            self.stop()
+            self._shut_down = True
+
+    def install_sigterm_handler(self):
+        """Route SIGTERM to :meth:`shutdown_gracefully` on a separate
+        thread (``TCPServer.shutdown`` deadlocks if called from the
+        thread running ``serve_forever``, which is where the signal
+        lands). Returns the previous handler. Main thread only — signal
+        registration is a CPython restriction."""
+        def handler(signum, frame):
+            threading.Thread(target=self.shutdown_gracefully,
+                             name="sigterm-drain", daemon=True).start()
+
+        return signal.signal(signal.SIGTERM, handler)
+
     # -- client API -------------------------------------------------------
     def submit(self, req: Request) -> Future:
         req.t_arrival = time.perf_counter()
@@ -325,8 +373,14 @@ class RetrievalServer:
              "workers": sum(t.is_alive() for t in self.workers),
              "batch_cap": self.batch_cap,
              "ewma_latency_ms": self.ewma_latency_ms,
+             "port": self.tcp_port,
              "n_shards": getattr(getattr(self.engine, "retriever", None),
                                  "n_shards", 1)}
+        retr = getattr(self.engine, "retriever", None)
+        if hasattr(retr, "worker_health"):
+            # process-group backend: per-shard worker vitals (pid, RSS,
+            # mmap segment bytes, restarts) for external monitors
+            h["shard_workers"] = retr.worker_health()
         stats = getattr(getattr(self.engine, "retriever", None),
                         "pipeline_stats", None)
         if stats is not None:

@@ -1,0 +1,266 @@
+"""Shard worker process: one shard's stage plan behind a socket RPC.
+
+    python -m repro.serving.worker --shard-dir <base>/shards/0 \
+        [--fd N | --port 0] [--mode mmap] [--shard-index 0] \
+        [--plaid-json '{...}'] [--ms-json '{...}']
+
+Each worker is a **shared-nothing** serving process: it loads only its
+own ``shards/<i>/{colbert,splade}`` subtree — its own mmap
+:class:`PagedStore` segment (independent page cache working set), its
+own SPLADE postings slice (and device cache when a device backend is
+selected), and its own Python interpreter (independent GIL). The
+coordinator (:class:`repro.core.sharded.ProcessShardGroup`) ships
+shard slices of the batch over ``repro.serving.rpc`` and merges the
+returned scores with the same ``merge_topk`` the in-process shard
+group uses, so process-group results are bitwise-identical to thread
+workers (and therefore to ``shards=1``).
+
+Exposed ops (each mirrors one per-shard stage of the sharded plans;
+inputs and the underlying stage functions are exactly the in-process
+ones, which is the parity argument):
+
+* ``ping`` / ``health``          — readiness + vitals (pid, RSS, mmap
+  segment bytes, served count)
+* ``warm {backend}``             — pre-materialise the SPLADE device
+  cache for a device stage-1 backend
+* ``splade``                     — shard-local stage-1 top-k
+* ``score_tokens``               — compacted-candidate residual gather
+  + exact MaxSim (rerank/hybrid stage 3–4)
+* ``colbert_candidates``         — IVF candidate gen + codes gather +
+  approximate scoring (PLAID stages 2–3)
+* ``colbert_exact``              — survivor residual gather + exact
+  scoring (PLAID stage 4)
+* ``shutdown``                   — reply, then exit 0
+
+Lifecycle: SIGTERM requests a **graceful drain** — the op in flight
+finishes and its reply is sent before the process exits 0, so a batch
+never loses a shard's answer to a routine redeploy; SIGKILL (crash) is
+detected by the coordinator as EOF and surfaces as ``ShardWorkerDied``.
+The worker serves one request at a time; concurrency comes from the
+coordinator running one worker per shard (and pipelining at most one
+outstanding request per in-flight micro-batch).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import signal
+import socket
+import sys
+import time
+
+import numpy as np
+
+# jax imports are deferred to main() on purpose: the coordinator treats
+# the first ping reply as the readiness barrier, and everything heavy
+# (jax init, index mmap) must happen before that reply, not lazily
+# inside the first scoring op.
+
+
+class _WorkerState:
+    def __init__(self, retriever, shard_index: int):
+        self.retr = retriever
+        self.shard = shard_index
+        self.served = 0
+        self.t_start = time.monotonic()
+        self.draining = False
+
+
+def _rss_bytes() -> int:
+    from repro.core.store import rss_bytes
+    return rss_bytes()
+
+
+def _handle(state: _WorkerState, op: str, payload: dict):
+    import jax.numpy as jnp
+
+    from repro.common.utils import next_pow2
+    from repro.core.plaid import (
+        stage2_candidates_batch,
+        stage3_approx_score_batch,
+    )
+
+    retr = state.retr
+    sr = retr.searcher
+
+    if op == "ping":
+        return {"pid": os.getpid(), "shard": state.shard,
+                "ready": True}
+
+    if op == "health":
+        return {"pid": os.getpid(), "shard": state.shard,
+                "rss_bytes": _rss_bytes(),
+                "pool_bytes": sr.index.store.total_bytes(),
+                "n_docs": retr.splade.n_docs,
+                "served": state.served,
+                "uptime_s": time.monotonic() - state.t_start,
+                "access": sr.index.store.stats.snapshot()}
+
+    if op == "warm":
+        backend = payload.get("backend", "host")
+        retr.set_splade_backend(backend)
+        if backend != "host":
+            retr.splade_device_cache()
+        return {"warmed": backend}
+
+    if op == "splade":
+        # identical call to the thread-mode group stage: shard-local
+        # postings, shard-local top-k; the coordinator remaps to global
+        # pids and merge_topk's the group
+        pids, scores = retr.run_splade_batch(
+            list(payload["term_ids"]), list(payload["term_weights"]),
+            int(payload["k"]), backend=payload.get("backend"),
+            _record=False)
+        return {"pids": pids, "scores": scores}
+
+    if op == "score_tokens":
+        # rerank/hybrid stages 3-4 for this shard's compacted slice:
+        # mmap residual gather + exact MaxSim, synced before the reply
+        # (no lazy device values cross a process boundary)
+        sel = payload["sel"]
+        codes, packed, valid = sr._dedup_gather(sel, codes_only=False)
+        scores = np.asarray(sr.score_gathered_lazy(
+            jnp.asarray(payload["q"]), jnp.asarray(payload["q_valid"]),
+            jnp.asarray(codes), jnp.asarray(packed), jnp.asarray(valid),
+            sel))
+        return {"scores": scores}
+
+    if op == "colbert_candidates":
+        # PLAID stages 2-3 over this shard's IVF slice; the candidate
+        # matrix narrows to the densest row's pow2 bucket exactly like
+        # the in-process fanout stage, and raw approx scores go back
+        # unsorted — survivor selection stays global on the coordinator
+        cand = stage2_candidates_batch(
+            sr.ivf_padded, jnp.asarray(payload["cids"]),
+            sr.params.candidate_cap)
+        cand_np = np.asarray(cand)
+        n_real = (cand_np >= 0).sum(axis=1)
+        W = min(next_pow2(max(int(n_real.max()), 8)), cand_np.shape[1])
+        cand, cand_np = cand[:, :W], cand_np[:, :W]
+        codes, _, valid = sr._dedup_gather(cand_np, codes_only=True)
+        approx = stage3_approx_score_batch(
+            jnp.asarray(payload["scores_c"]), jnp.asarray(codes),
+            jnp.asarray(valid), jnp.asarray(payload["q_valid"]))
+        approx = jnp.where(cand >= 0, approx, -jnp.inf)
+        return {"cand": cand_np, "approx": np.asarray(approx),
+                "n_real": n_real}
+
+    if op == "colbert_exact":
+        sel = payload["sel"]
+        codes, packed, valid = sr._dedup_gather(sel, codes_only=False)
+        exact = sr.exact_score_gathered(
+            jnp.asarray(payload["q"]), jnp.asarray(payload["q_valid"]),
+            jnp.asarray(codes), jnp.asarray(packed), jnp.asarray(valid),
+            jnp.asarray(sel))
+        return {"scores": np.asarray(exact)}
+
+    raise ValueError(f"unknown RPC op {op!r}")
+
+
+def serve_connection(sock: socket.socket, state: _WorkerState):
+    """Request loop: one op at a time, FIFO replies, per-op errors
+    reported (never fatal), SIGTERM drained between ops."""
+    import select
+
+    from repro.serving import rpc
+
+    sock.setblocking(True)
+    while not state.draining:
+        # select (not a socket timeout) polls the drain flag: a recv
+        # timeout could fire mid-frame and lose bytes, desyncing the
+        # stream; select only gates the *start* of a message
+        readable, _, _ = select.select([sock], [], [], 0.5)
+        if not readable:
+            continue
+        try:
+            msg = rpc.recv_msg(sock, timeout=None)
+        except (ConnectionError, OSError):
+            return                       # coordinator went away
+        op = msg.get("op", "")
+        try:
+            result = _handle(state, op, msg.get("payload") or {})
+            reply = {"ok": True, "result": result}
+            state.served += 1
+        except Exception:                # compute error ≠ worker death
+            import traceback
+            reply = {"ok": False, "error": traceback.format_exc()}
+        try:
+            rpc.send_msg(sock, reply)
+        except (ConnectionError, OSError):
+            return
+        if op == "shutdown":
+            return
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--shard-dir", required=True,
+                    help="this shard's subtree: <dir>/{colbert,splade}")
+    ap.add_argument("--shard-index", type=int, default=0)
+    ap.add_argument("--mode", default="mmap", choices=["mmap", "ram"])
+    ap.add_argument("--fd", type=int, default=None,
+                    help="inherited socketpair fd (coordinator-spawned)")
+    ap.add_argument("--port", type=int, default=None,
+                    help="standalone mode: listen on 127.0.0.1:PORT "
+                         "(0 = ephemeral; prints RPC_PORT=<n>)")
+    ap.add_argument("--plaid-json", default="{}")
+    ap.add_argument("--ms-json", default="{}")
+    args = ap.parse_args(argv)
+    if (args.fd is None) == (args.port is None):
+        ap.error("exactly one of --fd / --port is required")
+
+    # heavy imports after arg validation; the parent's first ping blocks
+    # until this completes
+    import pathlib
+
+    from repro.core.multistage import MultiStageParams, MultiStageRetriever
+    from repro.core.plaid import PLAIDSearcher, PlaidParams
+    from repro.index.builder import ColBERTIndex
+    from repro.index.splade_index import SpladeIndex
+
+    d = pathlib.Path(args.shard_dir)
+    index = ColBERTIndex(d / "colbert", mode=args.mode)
+    sidx = SpladeIndex.load(d / "splade", mmap=(args.mode == "mmap"))
+    retr = MultiStageRetriever(
+        sidx, PLAIDSearcher(index, PlaidParams(**json.loads(args.plaid_json))),
+        MultiStageParams(**json.loads(args.ms_json)))
+    state = _WorkerState(retr, args.shard_index)
+
+    def on_sigterm(signum, frame):
+        # graceful drain: finish (and answer) the op in flight, then
+        # exit — the loop checks the flag between requests
+        state.draining = True
+
+    signal.signal(signal.SIGTERM, on_sigterm)
+
+    if args.fd is not None:
+        sock = socket.socket(fileno=args.fd)
+        try:
+            serve_connection(sock, state)
+        finally:
+            try:
+                sock.close()
+            except OSError:
+                pass
+        return 0
+
+    srv = socket.create_server(("127.0.0.1", args.port))
+    srv.settimeout(0.5)
+    print(f"RPC_PORT={srv.getsockname()[1]}", flush=True)
+    try:
+        while not state.draining:
+            try:
+                conn, _ = srv.accept()
+            except socket.timeout:
+                continue
+            with conn:
+                serve_connection(conn, state)
+    finally:
+        srv.close()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -490,3 +490,36 @@ def test_access_stats_concurrent_account_and_snapshot():
     assert snap["gathers"] == N_THREADS * N_ITERS
     assert snap["tokens_read"] == N_THREADS * N_ITERS * len(ids)
     assert snap["residual_gathers"] == N_THREADS * N_ITERS // 2
+
+
+def test_sync_run_balances_async_window_on_error():
+    """A batch dying between its opens_async dispatch and closes_async
+    sync (failed device sync, crashed shard worker) must not leave the
+    shared overlap accounting stuck at 'dispatch in flight'."""
+    from repro.serving.pipeline import PipelineStats
+
+    stats = PipelineStats()
+
+    def boom(cb):
+        raise RuntimeError("dies while the async window is open")
+
+    plan = StagePlan(method="x", stages=(
+        Stage("dispatch", DEVICE, lambda cb: cb, opens_async=True),
+        Stage("mid", HOST, boom),
+        Stage("wait", DEVICE, lambda cb: cb, closes_async=True)))
+    with pytest.raises(RuntimeError):
+        plan.run(CandidateBatch(method="x", k=1), stats=stats)
+    assert stats._async == 0
+
+    # raising inside the closes_async stage itself must not
+    # double-close (run_stage closes the window before calling it)
+    plan2 = StagePlan(method="x", stages=(
+        Stage("dispatch", DEVICE, lambda cb: cb, opens_async=True),
+        Stage("wait", DEVICE, boom, closes_async=True)))
+    stats2 = PipelineStats()
+    stats2.async_open()          # an unrelated window stays untouched
+    with pytest.raises(RuntimeError):
+        plan2.run(CandidateBatch(method="x", k=1), stats=stats2)
+    # the plan's own window closed exactly once (net 0); the unrelated
+    # window is untouched — a double-close would have zeroed it
+    assert stats2._async == 1

@@ -1,0 +1,469 @@
+"""Multi-process shard serving: RPC codec roundtrips, process-group
+parity with the in-process shard group (all four methods, mixed
+batches, per-query alpha — bitwise), worker crash → ``ShardWorkerDied``
+→ heal-on-restart, graceful SIGTERM drain with no orphan processes,
+the pipelined engine over a process group, and the server's ephemeral
+port-0 TCP bind."""
+
+import os
+import signal
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.multistage import MultiStageParams, MultiStageRetriever
+from repro.core.plaid import PLAIDSearcher, PlaidParams
+from repro.core.sharded import ProcessShardGroup, build_shard_group
+from repro.index.builder import ColBERTIndex, build_colbert_index
+from repro.index.sharding import load_group, split_index_tree
+from repro.index.splade_index import SpladeIndex, build_splade_index
+from repro.serving.engine import Request, ServeEngine
+from repro.serving.rpc import ShardWorkerDied, decode, encode
+from repro.serving.server import RetrievalServer, tcp_query
+
+METHODS = ("splade", "rerank", "hybrid", "colbert")
+PLAID = PlaidParams(nprobe=8, candidate_cap=512, ndocs=128, k=50)
+MS = MultiStageParams(first_k=50, k=20)
+
+
+# ---------------------------------------------------------------------------
+# RPC codec
+# ---------------------------------------------------------------------------
+
+def _roundtrip_equal(val):
+    for force in (False, True):           # msgpack and fallback codecs
+        got = decode(encode(val, force_fallback=force))
+        _assert_value_equal(val, got)
+
+
+def _assert_value_equal(a, b):
+    if isinstance(a, np.ndarray):
+        assert isinstance(b, np.ndarray)
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(a, b)
+    elif isinstance(a, dict):
+        assert set(a) == set(b)
+        for k in a:
+            _assert_value_equal(a[k], b[k])
+    elif isinstance(a, (list, tuple)):
+        assert len(a) == len(b)
+        for x, y in zip(a, b):
+            _assert_value_equal(x, y)
+    elif isinstance(a, float) and a != a:    # NaN
+        assert b != b
+    else:
+        assert a == b and type(b) in (type(a), int, float, bool,
+                                      str, bytes, type(None))
+
+
+def test_rpc_roundtrip_basic():
+    _roundtrip_equal({"op": "x", "payload": {
+        "none": None, "flag": True, "neg": -(2 ** 40),
+        "pi": 3.140625, "s": "héllo", "b": b"\x00\xff",
+        "list": [1, [2.5, "three"], {"k": None}],
+        "i64": np.arange(7, dtype=np.int64).reshape(1, 7),
+        "f32": np.linspace(-1, 1, 12, dtype=np.float32).reshape(3, 4),
+        "bool": np.array([[True, False]]),
+        "empty": np.zeros((0, 4), np.float32),
+    }})
+
+
+def test_rpc_roundtrip_preserves_dtype_bits():
+    """Scores must cross the wire bit-for-bit — the parity contract
+    rests on it. Includes -inf/NaN payload bits."""
+    a = np.array([np.inf, -np.inf, np.nan, -0.0, 1e-45], np.float32)
+    for force in (False, True):
+        got = decode(encode({"a": a}, force_fallback=force))["a"]
+        np.testing.assert_array_equal(a.view(np.uint32),
+                                      got.view(np.uint32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.recursive(
+    st.one_of(
+        st.none(), st.booleans(),
+        st.integers(min_value=-2 ** 62, max_value=2 ** 62),
+        st.floats(allow_nan=False, width=64), st.text(max_size=20),
+        st.binary(max_size=32)),
+    lambda leaf: st.one_of(
+        st.lists(leaf, max_size=4),
+        st.dictionaries(st.text(max_size=8), leaf, max_size=4)),
+    max_leaves=12))
+def test_rpc_roundtrip_property(value):
+    """Property roundtrip over nested scalar containers (both codecs).
+    Skips when hypothesis is absent (conftest stub)."""
+    _roundtrip_equal(value)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from(["<i8", "<i4", "<f4", "<f8", "|b1", "<u2"]),
+       st.lists(st.integers(min_value=0, max_value=5), min_size=1,
+                max_size=3),
+       st.integers(min_value=0, max_value=2 ** 31))
+def test_rpc_roundtrip_ndarray_property(dtype_str, shape, seed):
+    rng = np.random.default_rng(seed)
+    arr = (rng.integers(-100, 100, size=shape)
+           .astype(np.dtype(dtype_str)))
+    _roundtrip_equal({"arr": arr, "nested": [arr, {"x": arr}]})
+
+
+def test_rpc_send_failure_fails_pending_without_deadlock():
+    """A send onto a dead peer must raise ShardWorkerDied and fail the
+    outstanding pipelined replies — from *inside* the send critical
+    section (re-entrant), and without wedging on a full pipe."""
+    import socket
+    import threading
+
+    from repro.serving.rpc import ShardWorkerClient
+
+    cli = ShardWorkerClient(0, "/tmp/nowhere")
+    a, b = socket.socketpair()
+    cli.sock = a
+
+    class FakeProc:
+        pid = -1
+
+        def poll(self):
+            return -9
+
+    cli.proc = FakeProc()
+    rep = cli.call_async("ping", {})        # absorbed by the buffer
+    b.close()                               # peer 'dies'
+    failures = []
+
+    def second_send():
+        try:
+            # oversized payload forces sendall to hit the closed peer
+            cli.call_async("x", {"big": np.zeros(1 << 22, np.uint8)})
+        except ShardWorkerDied as e:
+            failures.append(e)
+
+    t = threading.Thread(target=second_send, daemon=True)
+    t.start()
+    t.join(timeout=10)
+    a.close()
+    assert not t.is_alive(), "sender deadlocked marking the peer dead"
+    assert failures
+    assert rep.event.is_set() and isinstance(rep.error, ShardWorkerDied)
+
+
+# ---------------------------------------------------------------------------
+# group fixtures (one spawn for the whole module — workers import jax)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def base_dir(tmp_path_factory, small_corpus):
+    base = tmp_path_factory.mktemp("pgroup_base")
+    build_colbert_index(base / "colbert", small_corpus["doc_embs"],
+                        small_corpus["doc_lens"], nbits=4,
+                        n_centroids=128, kmeans_iters=4)
+    build_splade_index(small_corpus["doc_term_ids"],
+                       small_corpus["doc_term_weights"],
+                       small_corpus["cfg"].vocab,
+                       small_corpus["cfg"].n_docs).save(base / "splade")
+    return base
+
+
+@pytest.fixture(scope="module")
+def unsharded(base_dir):
+    index = ColBERTIndex(base_dir / "colbert", mode="mmap")
+    sidx = SpladeIndex.load(base_dir / "splade", mmap=True)
+    return MultiStageRetriever(sidx, PLAIDSearcher(index, PLAID), MS)
+
+
+@pytest.fixture(scope="module")
+def thread_group(base_dir, small_corpus):
+    group = split_index_tree(base_dir, 2)
+    dirs, bounds = load_group(group)
+    return build_shard_group(dirs, bounds, workers="thread",
+                             mode="mmap", plaid_params=PLAID,
+                             multistage_params=MS)
+
+
+@pytest.fixture(scope="module")
+def process_group(base_dir, thread_group):
+    dirs, bounds = load_group(base_dir / "shards")
+    g = build_shard_group(dirs, bounds, workers="process", mode="mmap",
+                          plaid_params=PLAID, multistage_params=MS)
+    yield g
+    g.close()
+    for cli in g._clients:
+        assert cli is None or cli.proc.poll() is not None
+
+
+def _batch(corpus, lo, hi):
+    return dict(q_embs=corpus["q_embs"][lo:hi],
+                term_ids=corpus["q_term_ids"][lo:hi],
+                term_weights=corpus["q_term_weights"][lo:hi])
+
+
+def _assert_bitwise(ref, got):
+    np.testing.assert_array_equal(np.asarray(ref[0]), np.asarray(got[0]))
+    np.testing.assert_array_equal(np.asarray(ref[1]), np.asarray(got[1]))
+
+
+# ---------------------------------------------------------------------------
+# parity: process workers == thread workers == shards=1
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", METHODS)
+def test_process_parity_per_method(unsharded, thread_group,
+                                   process_group, small_corpus, method):
+    kw = _batch(small_corpus, 0, 6)
+    ref = unsharded.search_batch(method, k=15, **kw)
+    thr = thread_group.search_batch(method, k=15, **kw)
+    got = process_group.search_batch(method, k=15, **kw)
+    # pid-identical to the single index…
+    np.testing.assert_array_equal(np.asarray(ref[0]), np.asarray(got[0]))
+    # …and bitwise (pids AND scores) to the in-process shard group
+    _assert_bitwise(thr, got)
+
+
+def test_process_parity_mixed_batch_and_alpha(thread_group,
+                                              process_group,
+                                              small_corpus):
+    methods = [METHODS[i % 4] for i in range(8)]
+    alphas = [None, 0.1, 0.9, None, 0.5, 0.3, None, 0.7]
+    kw = _batch(small_corpus, 0, 8)
+    thr = thread_group.search_batch(methods, alpha=alphas, k=10, **kw)
+    got = process_group.search_batch(methods, alpha=alphas, k=10, **kw)
+    _assert_bitwise(thr, got)
+
+
+def test_process_per_query_search(thread_group, process_group,
+                                  small_corpus):
+    for method in ("hybrid", "colbert"):
+        thr = thread_group.search(
+            method, q_emb=small_corpus["q_embs"][3],
+            term_ids=small_corpus["q_term_ids"][3],
+            term_weights=small_corpus["q_term_weights"][3], k=12)
+        got = process_group.search(
+            method, q_emb=small_corpus["q_embs"][3],
+            term_ids=small_corpus["q_term_ids"][3],
+            term_weights=small_corpus["q_term_weights"][3], k=12)
+        _assert_bitwise(thr, got)
+
+
+def test_process_group_stage1_api(thread_group, process_group,
+                                  small_corpus):
+    """``run_splade_batch`` (the benchmark entry point) matches the
+    thread group's group-wide stage 1."""
+    tids = list(small_corpus["q_term_ids"][:4])
+    tw = list(small_corpus["q_term_weights"][:4])
+    thr = thread_group.run_splade_batch(tids, tw, 20)
+    got = process_group.run_splade_batch(tids, tw, 20)
+    _assert_bitwise(thr, got)
+
+
+def test_process_parity_jax_stage1_backend(thread_group, process_group,
+                                           small_corpus):
+    """Device stage-1 backend: workers build their own padded-postings
+    device caches (warmed via the ``warm`` RPC) and must match the
+    in-process group bitwise."""
+    kw = _batch(small_corpus, 0, 5)
+    try:
+        thread_group.set_splade_backend("jax")
+        process_group.set_splade_backend("jax")
+        process_group.splade_device_cache()      # broadcast warm
+        thr = thread_group.search_batch("splade", k=10, **kw)
+        got = process_group.search_batch("splade", k=10, **kw)
+        _assert_bitwise(thr, got)
+    finally:
+        thread_group.set_splade_backend("host")
+        process_group.set_splade_backend("host")
+
+
+def test_worker_health_reports_split_pool(unsharded, process_group):
+    """Shared-nothing check: each worker maps only its segment — the
+    segments sum to the single pool and no worker holds it all."""
+    health = process_group.worker_health()
+    assert all(w["alive"] for w in health)
+    total = unsharded.searcher.index.store.total_bytes()
+    seg = [w["pool_bytes"] for w in health]
+    assert sum(seg) == total
+    assert max(seg) < total
+    assert all(w["rss_bytes"] > 0 for w in health)
+    assert all(w["rpc_bytes_sent"] > 0 for w in health)
+
+
+# ---------------------------------------------------------------------------
+# lifecycle: crash → ShardWorkerDied → heal; SIGTERM drain; no orphans
+# ---------------------------------------------------------------------------
+
+def test_worker_crash_raises_then_heals(process_group, thread_group,
+                                        small_corpus):
+    kw = _batch(small_corpus, 0, 4)
+    victim = process_group._clients[0].proc
+    os.kill(victim.pid, signal.SIGKILL)          # hard crash
+    victim.wait(timeout=10)
+    with pytest.raises(ShardWorkerDied):
+        process_group.search_batch("rerank", k=10, **kw)
+    # heal-on-restart: the next batch respawns the worker and serves
+    got = process_group.search_batch("rerank", k=10, **kw)
+    thr = thread_group.search_batch("rerank", k=10, **kw)
+    _assert_bitwise(thr, got)
+    assert process_group.restarts[0] == 1
+    assert all(process_group.heartbeat())
+
+
+def test_sigterm_drains_gracefully_no_orphans(process_group,
+                                              thread_group,
+                                              small_corpus):
+    """SIGTERM = graceful drain: the worker exits 0 on its own (no
+    SIGKILL escalation), leaves no orphan process, and the group heals
+    on the next batch."""
+    cli = process_group._clients[1]
+    pid = cli.proc.pid
+    os.kill(pid, signal.SIGTERM)
+    assert cli.proc.wait(timeout=15) == 0        # clean exit, reaped
+    with pytest.raises(ProcessLookupError):      # no orphan remains
+        os.kill(pid, 0)
+    kw = _batch(small_corpus, 4, 8)
+    with pytest.raises(ShardWorkerDied):
+        process_group.search_batch("splade", k=10, **kw)
+    got = process_group.search_batch("splade", k=10, **kw)
+    thr = thread_group.search_batch("splade", k=10, **kw)
+    _assert_bitwise(thr, got)
+
+
+def test_restart_loop_is_capped(base_dir):
+    """A worker that dies again before serving one successful call is
+    not respawned (single-restart healing, not a spawn storm)."""
+    dirs, bounds = load_group(base_dir / "shards")
+    g = ProcessShardGroup(dirs, bounds, mode="mmap", plaid_params=PLAID,
+                          multistage_params=MS)
+    try:
+        os.kill(g._clients[0].proc.pid, signal.SIGKILL)
+        g._clients[0].proc.wait(timeout=10)
+        with pytest.raises(ShardWorkerDied, match="healing"):
+            g._call(0, "ping", {})
+        # the heal respawn — kill it again before any successful
+        # group-level call can reset the restart budget
+        cli = g._ensure_worker(0)
+        os.kill(cli.proc.pid, signal.SIGKILL)
+        cli.proc.wait(timeout=10)
+        with pytest.raises(ShardWorkerDied, match="healing"):
+            g._call(0, "ping", {})
+        with pytest.raises(ShardWorkerDied, match="not respawning"):
+            g._call(0, "ping", {})
+        assert g.restarts[0] == 2
+    finally:
+        g.close()
+
+
+def test_close_is_idempotent_and_reaps(base_dir):
+    dirs, bounds = load_group(base_dir / "shards")
+    g = ProcessShardGroup(dirs, bounds, mode="mmap", plaid_params=PLAID,
+                          multistage_params=MS)
+    pids = [c.proc.pid for c in g._clients]
+    g.close()
+    g.close()
+    for pid in pids:
+        with pytest.raises(ProcessLookupError):
+            os.kill(pid, 0)
+    with pytest.raises(ShardWorkerDied, match="closed"):
+        g._call(0, "ping", {})
+
+
+# ---------------------------------------------------------------------------
+# engine / server integration
+# ---------------------------------------------------------------------------
+
+def _requests(corpus, n, methods=METHODS, k=10):
+    return [Request(qid=i, method=methods[i % len(methods)],
+                    q_emb=corpus["q_embs"][i],
+                    term_ids=corpus["q_term_ids"][i],
+                    term_weights=corpus["q_term_weights"][i], k=k)
+            for i in range(n)]
+
+
+def test_pipelined_engine_over_process_group(thread_group, process_group,
+                                             small_corpus):
+    reqs = _requests(small_corpus, 16)
+    ref = ServeEngine(thread_group).process_batch(reqs)
+    eng = ServeEngine(process_group, pipeline_depth=2)
+    assert eng.pipelined
+    futs = [eng.process_batch_async(reqs[i:i + 4])
+            for i in range(0, 16, 4)]
+    got = [r for f in futs for r in f.result(timeout=300)]
+    eng.stop_pipelines()      # group is module-scoped: do not close it
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(a.pids, b.pids)
+        np.testing.assert_array_equal(a.scores, b.scores)
+
+
+def test_server_health_includes_shard_workers(process_group,
+                                              small_corpus):
+    srv = RetrievalServer(ServeEngine(process_group), n_threads=1)
+    srv.start()
+    try:
+        for f in [srv.submit(r) for r in _requests(small_corpus, 4)]:
+            f.result(timeout=120)
+        h = srv.health()
+        assert h["n_shards"] == 2
+        workers = h["shard_workers"]
+        assert len(workers) == 2
+        assert all(w["alive"] for w in workers)
+    finally:
+        srv.stop()
+
+
+def test_serve_tcp_port0_ephemeral_and_graceful(unsharded, small_corpus):
+    """Port 0 binds an ephemeral port, reports the real one in
+    health(), serves over TCP, and shuts down gracefully (idempotent)."""
+    import threading
+
+    srv = RetrievalServer(ServeEngine(unsharded), n_threads=1)
+    srv.start()
+    tcp = srv.serve_tcp("127.0.0.1", 0)
+    port = srv.health()["port"]
+    assert port and port > 0
+    t = threading.Thread(target=tcp.serve_forever, daemon=True)
+    t.start()
+    try:
+        out = tcp_query("127.0.0.1", port, {
+            "qid": 1, "method": "splade",
+            "term_ids": small_corpus["q_term_ids"][0].tolist(),
+            "term_weights": small_corpus["q_term_weights"][0].tolist(),
+            "k": 5})
+        assert out["qid"] == 1 and len(out["pids"]) == 5
+    finally:
+        srv.shutdown_gracefully()
+        srv.shutdown_gracefully()        # idempotent
+        t.join(timeout=10)
+    assert not t.is_alive()
+    assert srv.health()["workers"] == 0
+
+
+def test_sigterm_handler_drains_server(unsharded, small_corpus):
+    """The installed SIGTERM handler completes queued work before
+    stopping — clients get results, not dropped futures."""
+    import signal as _signal
+
+    srv = RetrievalServer(ServeEngine(unsharded), n_threads=1)
+    srv.start()
+    old = srv.install_sigterm_handler()
+    try:
+        futs = [srv.submit(r) for r in _requests(small_corpus, 6)]
+        os.kill(os.getpid(), _signal.SIGTERM)
+        for f in futs:
+            assert f.result(timeout=120).pids.shape == (10,)
+        deadline = time.monotonic() + 10
+        while srv.health()["workers"] and time.monotonic() < deadline:
+            time.sleep(0.05)
+        assert srv.health()["workers"] == 0
+    finally:
+        _signal.signal(_signal.SIGTERM, old)
+        srv.stop()
+
+
+def test_group_validates_inputs(base_dir):
+    with pytest.raises(ValueError, match="empty"):
+        ProcessShardGroup([], [0])
+    with pytest.raises(ValueError, match="boundaries"):
+        ProcessShardGroup([base_dir], [0, 10, 20], autostart=False)
+    with pytest.raises(ValueError, match="workers"):
+        build_shard_group([base_dir], [0, 10], workers="fibers")
