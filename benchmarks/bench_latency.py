@@ -11,9 +11,12 @@ QPS + gather-stage wall time at shard counts 1/2/4 — per-shard mmap
 segments fault independent page streams, so the gather stage shrinks
 as the shard count grows), and a shard-worker backend sweep
 (``--worker-sweep``: in-process thread workers vs shared-nothing
-process workers at shards 1/2/4 — QPS/p99 plus per-worker RSS and
-mmap-segment bytes, showing the aggregate pool is split across worker
-processes, not replicated)."""
+process workers at shards 1/2/4, the latter on both the zero-copy shm
+arena transport and the socket stream — QPS/p99 plus per-worker RSS,
+mmap-segment bytes, the transport's copied vs zero-copy byte split and
+RPC dispatch/coalescing counts, showing the aggregate pool is split
+across worker processes, not replicated, and that tensor bytes cross
+the shm path without serialization)."""
 
 from __future__ import annotations
 
@@ -359,84 +362,163 @@ def measure_worker_sweep(name: str = "marco", method: str = "hybrid",
                          n_queries: int = 128, max_batch: int = 8,
                          shard_counts=SHARD_COUNTS, concurrency: int = 4,
                          depth: int = 2):
-    """In-process vs process shard workers at several shard counts:
-    QPS + p50/p99 through the pipelined server, plus — for the process
-    backend — per-worker RSS and mmap-segment bytes.
+    """In-process vs process shard workers at several shard counts —
+    the process backend measured on both transports (``shm`` ring
+    arenas at every count, the ``socket`` stream at the widest count as
+    the copy-path reference): QPS + p50/p99 through the pipelined
+    server, plus — for process configs — per-worker RSS, mmap-segment
+    bytes, transport byte split (copied vs zero-copy) and the RPC
+    dispatch/coalescing counters, so the transport win is visible in
+    the JSON, not just QPS.
 
     The memory record is the tentpole's deployment claim: the aggregate
     token pool is **split** across the worker processes (each maps
     ~1/S of the bytes, so each worker's page-cache working set is its
-    own shard's), not replicated into every process. Segment bytes are
+    own shard's), not replicated into every process. Segment bytes and
+    the copy-split invariant (tensors under ARENA_MIN_BYTES inline,
+    bigger ones cross the shm arena unserialized — demonstrated by an
+    explicit over-threshold probe per process run) are
     deterministic and asserted; RSS and QPS are recorded for the
     machine-dependent picture (on a big multi-core host the process
-    backend's independent GILs pay off; on a busy 2-core CI box the
-    RPC hop usually costs more than it buys).
+    backend's independent GILs pay off; on a busy 1–2 core CI box the
+    RPC hop can still cost more than it buys).
 
     Every configuration must return identical top-k pids for the probe
-    queries (the process==thread==shards-1 parity contract under the
-    full server stack)."""
+    queries (the shm==socket==thread==shards-1 parity contract under
+    the full server stack)."""
     from benchmarks.common import process_sharded_dataset, sharded_dataset
     from repro.core.store import rss_bytes
     from repro.serving.loadgen import run_closed_loop
 
+    widest = max(shard_counts)
+    configs = [("thread", None, s) for s in shard_counts]
+    configs += [("process", "shm", s) for s in shard_counts]
+    configs += [("process", "socket", widest)]
     out = {}
     probe_ref = None
-    for backend in ("thread", "process"):
-        for s in shard_counts:
-            if backend == "thread":
-                corpus, retr = sharded_dataset(name, s)
-            else:
-                corpus, retr = process_sharded_dataset(name, s)
-            srv = RetrievalServer(ServeEngine(retr, pipeline_depth=depth),
-                                  n_threads=1, max_batch=max_batch,
-                                  batch_timeout_ms=4.0)
-            srv.start()
-            try:
-                warm = [srv.submit(r) for r in
-                        _requests(corpus, method, 2 * max_batch)]
-                for f in warm:
-                    f.result(timeout=600)
-                res = run_closed_loop(
-                    srv, _requests(corpus, method, n_queries),
-                    concurrency=concurrency)
-                probe = [srv.submit(r).result(timeout=300).pids
-                         for r in _requests(corpus, method, 8)]
-                if probe_ref is None:
-                    probe_ref = probe
-                else:       # parity across backends and shard counts
-                    for a, b in zip(probe_ref, probe):
-                        np.testing.assert_array_equal(a, b)
-                rec = {"qps": res.achieved_qps,
-                       "p50_ms": res.p50 * 1e3, "p99_ms": res.p99 * 1e3}
-                if backend == "process":
-                    wh = retr.worker_health()
-                    rec["workers"] = [
-                        {"pid": w["pid"], "rss_bytes": w["rss_bytes"],
-                         "pool_bytes": w["pool_bytes"],
-                         "served": w["served"]} for w in wh]
-                    rec["coordinator_rss_bytes"] = rss_bytes()
-                    segs = [w["pool_bytes"] for w in wh]
-                    rec["pool_total_bytes"] = int(sum(segs))
-                    rec["pool_max_segment_bytes"] = int(max(segs))
-            finally:
-                srv.stop()
-                if backend == "process":
-                    retr.close()
-            out[f"{backend}_{s}"] = rec
-            extra = ""
+    for backend, transport, s in configs:
+        if backend == "thread":
+            corpus, retr = sharded_dataset(name, s)
+            key = f"thread_{s}"
+        else:
+            corpus, retr = process_sharded_dataset(name, s,
+                                                   transport=transport)
+            key = f"process_{retr.transport}_{s}"
+        srv = RetrievalServer(ServeEngine(retr, pipeline_depth=depth),
+                              n_threads=1, max_batch=max_batch,
+                              batch_timeout_ms=4.0)
+        srv.start()
+        try:
+            warm = [srv.submit(r) for r in
+                    _requests(corpus, method, 2 * max_batch)]
+            for f in warm:
+                f.result(timeout=600)
+            # concurrency-shaped warm pass: closed-loop traffic hits
+            # micro-batch sizes the sequential warm never does, and the
+            # first topology measured in this process must not pay
+            # those jit compiles inside its measured window (that skew
+            # is what made transports look 2x apart on a cold start)
+            run_closed_loop(srv, _requests(corpus, method, 24),
+                            concurrency=concurrency)
+            res = run_closed_loop(
+                srv, _requests(corpus, method, n_queries),
+                concurrency=concurrency)
+            probe = [srv.submit(r).result(timeout=300).pids
+                     for r in _requests(corpus, method, 8)]
+            if probe_ref is None:
+                probe_ref = probe
+            else:   # parity across backends, transports, shard counts
+                for a, b in zip(probe_ref, probe):
+                    np.testing.assert_array_equal(a, b)
+            rec = {"qps": res.achieved_qps,
+                   "p50_ms": res.p50 * 1e3, "p99_ms": res.p99 * 1e3}
             if backend == "process":
-                extra = (f"  max-segment={rec['pool_max_segment_bytes']}"
-                         f"/{rec['pool_total_bytes']}B")
-            print(f"workers[{backend:7s} x{s}] "
-                  f"qps={rec['qps']:7.1f}  p99={rec['p99_ms']:7.1f}ms"
-                  + extra)
+                wh = retr.worker_health()
+                rec["workers"] = [
+                    {"pid": w["pid"], "rss_bytes": w["rss_bytes"],
+                     "pool_bytes": w["pool_bytes"],
+                     "served": w["served"]} for w in wh]
+                rec["coordinator_rss_bytes"] = rss_bytes()
+                segs = [w["pool_bytes"] for w in wh]
+                rec["pool_total_bytes"] = int(sum(segs))
+                rec["pool_max_segment_bytes"] = int(max(segs))
+                ts = retr.transport_stats()
+                rec["transport"] = ts["transport"]
+                rec["transport_bytes"] = ts["total"]
+                counters = retr.pipeline_stats.snapshot()["counters"]
+                rec["rpc"] = {k: v for k, v in sorted(counters.items())
+                              if k.startswith("rpc_")}
+                # serving tensors on this synth corpus sit under
+                # ARENA_MIN_BYTES (they inline: a ring span's fixed
+                # bookkeeping costs more than a small memcpy), so
+                # drive one over-threshold op per run and record that
+                # big tensors cross the arena, not the serializer
+                from repro.serving.transport.shm import ARENA_MIN_BYTES
+                q = np.asarray(corpus["q_embs"][:4])
+                sel = np.zeros((4, (2 * ARENA_MIN_BYTES) // 8),
+                               np.int64)
+                t0 = time.perf_counter()
+                scores = retr._disp[0].call("score_tokens", {
+                    "q": q, "q_valid": np.ones(q.shape[:2], bool),
+                    "sel": sel})["scores"]
+                dt = time.perf_counter() - t0
+                ts2 = retr.transport_stats()["total"]
+                rec["big_tensor_probe"] = {
+                    "sel_bytes": int(sel.nbytes),
+                    "reply_bytes": int(scores.nbytes),
+                    "ms": dt * 1e3,
+                    "zero_copy_delta": (ts2["bytes_zero_copy"]
+                                        - ts["total"]["bytes_zero_copy"]),
+                    "copied_delta": (ts2["bytes_copied"]
+                                     - ts["total"]["bytes_copied"])}
+        finally:
+            srv.stop()
+            if backend == "process":
+                retr.close()
+        out[key] = rec
+        extra = ""
+        if backend == "process":
+            tb = rec["transport_bytes"]
+            extra = (f"  max-segment={rec['pool_max_segment_bytes']}"
+                     f"/{rec['pool_total_bytes']}B"
+                     f"  zero-copy={tb['bytes_zero_copy']}B"
+                     f" copied={tb['bytes_copied']}B"
+                     f" dispatches={rec['rpc'].get('rpc_dispatches', 0)}"
+                     f" coalesced="
+                     f"{rec['rpc'].get('rpc_coalesced_ops', 0)}"
+                     f" probe[{rec['big_tensor_probe']['ms']:.1f}ms"
+                     f" zc={rec['big_tensor_probe']['zero_copy_delta']}B]")
+        label = backend if transport is None else f"{backend}-{transport}"
+        print(f"workers[{label:14s} x{s}] "
+              f"qps={rec['qps']:7.1f}  p99={rec['p99_ms']:7.1f}ms"
+              + extra)
     # the shared-nothing memory claim is deterministic: at S shards no
-    # worker maps more than ~1/S of the pool (+1 doc of slack)
+    # worker maps more than ~1/S of the pool (+1 doc of slack)…
     for s in shard_counts:
-        if s >= 2:
-            rec = out[f"process_{s}"]
+        if s >= 2 and f"process_shm_{s}" in out:
+            rec = out[f"process_shm_{s}"]
             assert rec["pool_max_segment_bytes"] < \
                 0.75 * rec["pool_total_bytes"], out
+    # …and so is the copy-split invariant: small tensors inline in the
+    # control frame on shm (never counted as copied), big tensors
+    # cross the arena — never the serializer — while the socket
+    # channel shows the inverse split on the same probe
+    for key, rec in out.items():
+        tb = rec.get("transport_bytes")
+        if tb is None:
+            continue
+        probe = rec["big_tensor_probe"]
+        if rec["transport"] == "shm":
+            assert tb["bytes_copied"] == 0, (key, tb)
+            assert probe["copied_delta"] == 0, (key, probe)
+            assert probe["zero_copy_delta"] >= \
+                probe["sel_bytes"] + probe["reply_bytes"], (key, probe)
+        else:
+            assert tb["bytes_copied"] > 0 and tb["bytes_zero_copy"] == 0, \
+                (key, tb)
+            assert probe["zero_copy_delta"] == 0, (key, probe)
+            assert probe["copied_delta"] >= probe["reply_bytes"], \
+                (key, probe)
     return out
 
 
@@ -492,9 +574,11 @@ if __name__ == "__main__":
                          "record it into the bench JSON")
     ap.add_argument("--worker-sweep", action="store_true",
                     help="run only the shard-worker backend sweep "
-                         "(thread vs process workers at shards 1/2/4: "
-                         "QPS, p99, per-worker RSS + segment bytes) and "
-                         "record it into the bench JSON")
+                         "(thread vs process workers at shards 1/2/4, "
+                         "process on both shm and socket transports: "
+                         "QPS, p99, per-worker RSS + segment bytes, "
+                         "transport copy split, RPC dispatch counts) "
+                         "and record it into the bench JSON")
     args = ap.parse_args()
     if args.worker_sweep:
         sweep = measure_worker_sweep("marco")

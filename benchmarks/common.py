@@ -104,12 +104,16 @@ def sharded_dataset(name: str, n_shards: int, mode: str = "mmap"):
 
 
 def process_sharded_dataset(name: str, n_shards: int,
-                            mode: str = "mmap"):
+                            mode: str = "mmap",
+                            transport: str | None = None,
+                            arena_bytes: int | None = None):
     """(corpus, ProcessShardGroup) over the same on-disk shard split
     :func:`sharded_dataset` uses (n_shards=1 runs the whole index in a
     single worker process), so thread/process sweeps compare identical
-    bytes. NOT cached: worker processes are a held resource — callers
-    own the returned group and must ``close()`` it."""
+    bytes. ``transport`` selects the worker tensor path (``shm`` ring
+    arenas / ``socket`` stream / None = platform default). NOT cached:
+    worker processes are a held resource — callers own the returned
+    group and must ``close()`` it."""
     from repro.core.multistage import MultiStageParams
     from repro.core.plaid import PlaidParams
     from repro.core.sharded import build_shard_group
@@ -127,7 +131,8 @@ def process_sharded_dataset(name: str, n_shards: int,
         plaid_params=PlaidParams(nprobe=4, candidate_cap=1024,
                                  ndocs=256, k=100),
         multistage_params=MultiStageParams(first_k=200, k=100,
-                                           alpha=0.3))
+                                           alpha=0.3),
+        transport=transport, arena_bytes=arena_bytes)
     return corpus, retr
 
 

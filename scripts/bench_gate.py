@@ -3,9 +3,12 @@
 trajectory CI refuses to let slide.
 
 Runs a small, fully deterministic workload (synthetic corpus, fixed
-seeds, 2-shard pipelined serving of a mixed closed-loop load), writes
-the measured metrics to ``results/bench_ci.json``, and compares them
-against the committed baseline in ``results/bench_baseline.json``:
+seeds, 2-shard pipelined serving of a mixed closed-loop load), then a
+mini thread-vs-process worker comparison over the same split (process
+rankings must match the thread run exactly; QPS plus the transport's
+zero-copy/copied byte split and RPC dispatch counts are recorded),
+writes the measured metrics to ``results/bench_ci.json``, and compares
+them against the committed baseline in ``results/bench_baseline.json``:
 
 * **perf metrics** (QPS, gather-stage wall) are gated with a ±tolerance
   band (default 50%, override with ``--tolerance`` or
@@ -71,10 +74,10 @@ def run_bench() -> dict:
                        cfg.n_docs).save(base / "splade")
     group = split_index_tree(base, 2)
     dirs, bounds = load_group(group)
-    retr = build_shard_group(
-        dirs, bounds, workers="thread", mode="mmap",
-        plaid_params=PlaidParams(nprobe=4, candidate_cap=512, ndocs=128),
-        multistage_params=MultiStageParams(first_k=100, k=50, alpha=0.3))
+    plaid = PlaidParams(nprobe=4, candidate_cap=512, ndocs=128)
+    ms = MultiStageParams(first_k=100, k=50, alpha=0.3)
+    retr = build_shard_group(dirs, bounds, workers="thread", mode="mmap",
+                             plaid_params=plaid, multistage_params=ms)
 
     reqs = [Request(qid=i, method=METHODS[i % len(METHODS)],
                     q_emb=corpus["q_embs"][i % cfg.n_queries],
@@ -111,6 +114,43 @@ def run_bench() -> dict:
     finally:
         srv.stop()
 
+    # mini thread-vs-process worker comparison: the same shard split and
+    # request stream through shared-nothing worker processes over the
+    # default transport (shm ring arenas where /dev/shm is writable).
+    # Rankings must match the thread run exactly (parity is a hard
+    # in-run assert); QPS and the transport byte split are recorded so
+    # the trajectory of the process-worker cliff stays visible in CI.
+    pg = build_shard_group(dirs, bounds, workers="process", mode="mmap",
+                           plaid_params=plaid, multistage_params=ms)
+    srv = RetrievalServer(ServeEngine(pg, pipeline_depth=2),
+                          n_threads=1, max_batch=8, batch_timeout_ms=4.0)
+    srv.start()
+    try:
+        for f in [srv.submit(r) for r in reqs[:16]]:     # warm workers
+            f.result(timeout=600)
+        pres = run_closed_loop(srv, reqs[:48], concurrency=4)
+        crc = 0
+        for q in reqs[:32]:
+            out = srv.submit(q).result(timeout=600)
+            crc = zlib.crc32(
+                np.ascontiguousarray(out.pids).tobytes(), crc)
+        assert crc == pids_crc, (
+            "process-group rankings diverged from thread workers "
+            f"({crc} vs {pids_crc})")
+        ts = pg.transport_stats()
+        counters = pg.pipeline_stats.snapshot()["counters"]
+        process_workers = {
+            "qps": pres.achieved_qps, "p99_ms": pres.p99 * 1e3,
+            "transport": ts["transport"],
+            "bytes_zero_copy": int(ts["total"]["bytes_zero_copy"]),
+            "bytes_copied": int(ts["total"]["bytes_copied"]),
+            "rpc_dispatches": int(counters.get("rpc_dispatches", 0)),
+            "rpc_coalesced_ops": int(
+                counters.get("rpc_coalesced_ops", 0))}
+    finally:
+        srv.stop()
+        pg.close()
+
     import platform
 
     import jax
@@ -128,6 +168,9 @@ def run_bench() -> dict:
         "perf": {"qps": res.achieved_qps,
                  "p50_ms": res.p50 * 1e3, "p99_ms": res.p99 * 1e3,
                  "gather_wall_s": gather_wall},
+        # recorded (not perf-gated — worker spawn + a 1-core box make
+        # it noisy); parity with the thread run is asserted in-run
+        "process_workers": process_workers,
         "determinism": {"pids_crc32": pids_crc,
                         "residual_tokens_read": int(tokens),
                         "served": int(len(res.latencies)),
@@ -194,6 +237,13 @@ def main(argv=None):
           f"tokens={metrics['determinism']['residual_tokens_read']} "
           f"crc={metrics['determinism']['pids_crc32']} "
           f"→ {CI_JSON.relative_to(REPO)}")
+    pw = metrics.get("process_workers") or {}
+    if pw:
+        print(f"bench-gate: process workers qps={pw['qps']:.1f} "
+              f"({pw['transport']}: zero_copy={pw['bytes_zero_copy']}B "
+              f"copied={pw['bytes_copied']}B "
+              f"dispatches={pw['rpc_dispatches']} "
+              f"coalesced={pw['rpc_coalesced_ops']})")
 
     if args.update_baseline or not BASELINE_JSON.exists():
         BASELINE_JSON.write_text(json.dumps(metrics, indent=1))

@@ -92,8 +92,10 @@ stage_smoke() {
 
     # process-group smoke: the same 2-shard topology with one
     # shared-nothing worker process per shard behind the RPC
-    # coordinator (spawn, serve, graceful shutdown — no orphans)
+    # coordinator, tensors over the zero-copy shm ring arenas
+    # (spawn, serve, graceful shutdown — no orphans, no arena leaks)
     python -m repro.launch.serve --shards 2 --shard-workers process \
+        --shard-transport shm \
         --pipeline-depth 2 --max-batch 8 --qps 100 --n 24
 }
 

@@ -591,11 +591,129 @@ def build_sharded_retriever(shard_dirs, boundaries, *, mode: str = "mmap",
 # process-group backend: shared-nothing shard workers over RPC
 # ---------------------------------------------------------------------------
 
+class _Slot:
+    """One logical RPC enqueued on a :class:`_ShardDispatcher`; resolves
+    to either its own reply or its slice of a coalesced ``multi``
+    reply."""
+
+    __slots__ = ("op", "payload", "cli", "rep", "index", "error")
+
+    def __init__(self, op: str, payload):
+        self.op = op
+        self.payload = payload
+        self.cli = None
+        self.rep = None               # None until flushed to the wire
+        self.index = None             # position inside a multi dispatch
+        self.error = None
+
+
+class _ShardDispatcher:
+    """Per-worker RPC coalescer: one dispatch per worker per stage.
+
+    ``enqueue`` flushes immediately when the worker is idle (it should
+    start computing as early as possible), and *buffers* while the
+    worker has outstanding work — the worker serves FIFO one op at a
+    time, so buffering behind an in-flight op costs zero worker idle,
+    and every op that accumulates meanwhile rides the next flush as one
+    ``multi`` frame (one encode, one send, one wakeup) instead of N.
+    ``wait`` flushes anything still buffered — a slot can never
+    strand — and demuxes per-op ok/error slices so one bad micro-batch
+    doesn't poison its co-batched neighbours. Replies stay FIFO per
+    connection, so the client's pipelined stream discipline is
+    untouched."""
+
+    def __init__(self, group: "ProcessShardGroup", index: int):
+        self.group = group
+        self.i = index
+        self._lock = threading.Lock()
+        self._buf: list = []
+        self._last_cli = None
+        self._last: dict = {}
+
+    def enqueue(self, op: str, payload) -> _Slot:
+        slot = _Slot(op, payload)
+        with self._lock:
+            cli = self.group._ensure_worker(self.i)   # fails fast dead
+            self._buf.append(slot)
+            if cli.outstanding() == 0:
+                self._flush_locked(cli)
+        return slot
+
+    def _flush_locked(self, cli):
+        if not self._buf:
+            return
+        slots, self._buf = self._buf, []
+        stats = self.group.pipeline_stats
+        try:
+            if len(slots) == 1:
+                s = slots[0]
+                s.cli, s.rep = cli, cli.call_async(s.op, s.payload)
+            else:
+                rep = cli.call_async("multi", {"ops": [
+                    {"op": s.op, "payload": s.payload} for s in slots]})
+                for j, s in enumerate(slots):
+                    s.cli, s.rep, s.index = cli, rep, j
+                stats.counter("rpc_coalesced_ops", len(slots) - 1)
+        except BaseException as e:
+            # fan the send failure out to every co-batched slot; their
+            # waiters must fail, not re-flush an empty buffer forever
+            for s in slots:
+                if s.rep is None:
+                    s.error = e
+            raise
+        stats.counter("rpc_dispatches")
+        for s in slots:
+            stats.counter(f"rpc_ops:{s.op}")
+        self._account(cli)
+
+    def _account(self, cli):
+        """Mirror the channel's monotonic byte counters into
+        PipelineStats as deltas (a respawned client restarts at 0)."""
+        ts = cli.transport_stats()
+        if cli is not self._last_cli:
+            self._last_cli, self._last = cli, {}
+        for key in ("bytes_sent", "bytes_recv", "bytes_copied",
+                    "bytes_zero_copy"):
+            delta = ts[key] - self._last.get(key, 0)
+            if delta > 0:
+                self.group.pipeline_stats.counter(
+                    f"transport_{key}", delta)
+            self._last[key] = ts[key]
+
+    def wait(self, slot: _Slot):
+        if slot.rep is None and slot.error is None:
+            with self._lock:
+                if slot.rep is None and slot.error is None:
+                    self._flush_locked(
+                        self.group._ensure_worker(self.i))
+        if slot.error is not None:
+            raise slot.error
+        out = self.group._wait(self.i, slot.cli, slot.rep)
+        with self._lock:
+            self._account(slot.cli)
+        if slot.index is None:
+            return out
+        sub = out["replies"][slot.index]
+        if not sub.get("ok", False):
+            from repro.serving.transport import ShardWorkerError
+            raise ShardWorkerError(
+                f"shard {self.i} op {slot.op!r} failed:\n"
+                f"{sub.get('error')}")
+        return sub.get("result")
+
+    def call(self, op: str, payload):
+        return self.wait(self.enqueue(op, payload))
+
+
 class ProcessShardGroup(MultiStageRetriever):
     """Scatter-gather retriever whose shards are **separate OS
     processes** (``repro.serving.worker``), one per ``shards/<i>/``
-    subtree, talked to over the length-prefixed RPC in
-    ``repro.serving.rpc``.
+    subtree, talked to over the layered ``repro.serving.transport``
+    stack — shared-memory ring arenas (``transport="shm"``, tensor
+    bytes cross zero-copy) or a socketpair stream (``"socket"``,
+    portable), with per-worker RPC coalescing: ops that land on a busy
+    worker ride the next flush as one ``multi`` frame, one dispatch per
+    worker per stage across co-batched micro-batches.
 
     Shared-nothing is the point: each worker owns its mmap
     ``PagedStore`` segment (its *own page-cache working set* — the
@@ -635,8 +753,12 @@ class ProcessShardGroup(MultiStageRetriever):
                  spawn_timeout_s: float = 300.0,
                  call_timeout_s: float = 300.0,
                  worker_env: Optional[dict] = None,
+                 transport: Optional[str] = None,
+                 arena_bytes: Optional[int] = None,
                  autostart: bool = True):
         from repro.core.plaid import PlaidParams
+        from repro.launch.mesh import (default_shard_transport,
+                                       shard_arena_bytes)
 
         self.shard_dirs = [str(d) for d in shard_dirs]
         if not self.shard_dirs:
@@ -654,6 +776,12 @@ class ProcessShardGroup(MultiStageRetriever):
         self.params = multistage_params or MultiStageParams()
         self.spawn_timeout_s = spawn_timeout_s
         self.call_timeout_s = call_timeout_s
+        self.transport = transport or default_shard_transport()
+        if self.transport not in ("shm", "socket"):
+            raise ValueError(
+                f"shard transport {self.transport!r} not in "
+                f"('shm', 'socket')")
+        self.arena_bytes = shard_arena_bytes(self.n_shards, arena_bytes)
         if worker_env is None:
             from repro.launch.mesh import shard_worker_env
             worker_env = shard_worker_env(self.n_shards)
@@ -668,6 +796,8 @@ class ProcessShardGroup(MultiStageRetriever):
                              for _ in range(self.n_shards)]
         self.restarts = [0] * self.n_shards
         self._consec_restarts = [0] * self.n_shards
+        self._disp = [_ShardDispatcher(self, i)
+                      for i in range(self.n_shards)]
         self._closed = False
         self._centroids_cache = None
         self.set_splade_backend(self.params.splade_backend)
@@ -732,7 +862,13 @@ class ProcessShardGroup(MultiStageRetriever):
                 ms_params=_dc.asdict(self.params),
                 env=self._worker_env,
                 spawn_timeout_s=self.spawn_timeout_s,
-                call_timeout_s=self.call_timeout_s)
+                call_timeout_s=self.call_timeout_s,
+                transport=self.transport,
+                arena_bytes=self.arena_bytes,
+                # fresh arena per respawn: a locator minted against a
+                # dead worker's arena can never resolve against the new
+                # one (generation embedded in every locator)
+                generation=self.restarts[i] + 1)
             try:
                 cli.spawn()      # reaps its own child on failure
             except BaseException:
@@ -792,8 +928,14 @@ class ProcessShardGroup(MultiStageRetriever):
                    "alive": bool(cli is not None and cli.alive()),
                    "restarts": self.restarts[i]}
             if cli is not None:
-                rec["rpc_bytes_sent"] = cli.bytes_sent
-                rec["rpc_bytes_recv"] = cli.bytes_recv
+                ts = cli.transport_stats()
+                rec["transport"] = ts["transport"]
+                rec["rpc_bytes_sent"] = ts["bytes_sent"]
+                rec["rpc_bytes_recv"] = ts["bytes_recv"]
+                rec["rpc_bytes_copied"] = ts["bytes_copied"]
+                rec["rpc_bytes_zero_copy"] = ts["bytes_zero_copy"]
+                if cli.arena_generation is not None:
+                    rec["arena_generation"] = cli.arena_generation
             if rec["alive"]:
                 try:
                     # soft deadline (kill_on_timeout=False): health
@@ -809,6 +951,23 @@ class ProcessShardGroup(MultiStageRetriever):
                     rec["error"] = str(e)
             out.append(rec)
         return out
+
+    def transport_stats(self) -> dict:
+        """Group-wide transport byte accounting: per-worker channel
+        stats plus copied/zero-copy totals — how much tensor traffic
+        actually bypassed serialization."""
+        per, total = [], {"bytes_sent": 0, "bytes_recv": 0,
+                          "bytes_copied": 0, "bytes_zero_copy": 0}
+        for i, cli in enumerate(self._clients):
+            if cli is None:
+                continue
+            ts = cli.transport_stats()
+            ts["shard"] = i
+            per.append(ts)
+            for k in total:
+                total[k] += ts[k]
+        return {"transport": self.transport, "per_worker": per,
+                "total": total}
 
     def close(self, grace_s: float = 5.0):
         """Graceful group shutdown: drain each worker (shutdown RPC,
@@ -846,10 +1005,9 @@ class ProcessShardGroup(MultiStageRetriever):
         payload = {"term_ids": list(term_ids),
                    "term_weights": list(term_weights), "k": k,
                    "backend": backend or self.splade_backend}
-        pends = [self._call_async(i, "splade", payload)
+        slots = [self._disp[i].enqueue("splade", payload)
                  for i in range(self.n_shards)]
-        outs = [self._wait(i, cli, rep)
-                for i, (cli, rep) in enumerate(pends)]
+        outs = [self._disp[i].wait(s) for i, s in enumerate(slots)]
         pids = np.concatenate(
             [np.where(r["pids"] >= 0, r["pids"] + self.offsets[i], -1)
              for i, r in enumerate(outs)], axis=1)
@@ -859,11 +1017,10 @@ class ProcessShardGroup(MultiStageRetriever):
     def splade_device_cache(self):
         """Warm every worker's padded-postings device cache for the
         current stage-1 backend (no-op per worker on ``host``)."""
-        pends = [self._call_async(i, "warm",
-                                  {"backend": self.splade_backend})
+        slots = [self._disp[i].enqueue("warm",
+                                       {"backend": self.splade_backend})
                  for i in range(self.n_shards)]
-        return [self._wait(i, cli, rep)
-                for i, (cli, rep) in enumerate(pends)]
+        return [self._disp[i].wait(s) for i, s in enumerate(slots)]
 
     def _centroids(self):
         """Replicated centroid geometry, loaded once from shard 0's
@@ -913,10 +1070,10 @@ class ProcessShardGroup(MultiStageRetriever):
 
             def candidates_rpc(cb, i):
                 st = cb.state
-                r = self._call(i, "colbert_candidates",
-                               {"scores_c": st["scores_c"],
-                                "cids": st["cids"],
-                                "q_valid": st["q_valid"]})
+                r = self._disp[i].call(
+                    "colbert_candidates",
+                    {"scores_c": st["scores_c"], "cids": st["cids"],
+                     "q_valid": st["q_valid"]})
                 return {"cand_np": r["cand"], "approx_np": r["approx"],
                         "n_real": r["n_real"]}
 
@@ -924,9 +1081,10 @@ class ProcessShardGroup(MultiStageRetriever):
                 st = cb.state
                 cols, sel = compact_owned(st["final_g"],
                                           offs[i], offs[i + 1])
-                r = self._call(i, "colbert_exact",
-                               {"q": st["q"], "q_valid": st["q_valid"],
-                                "sel": sel})
+                r = self._disp[i].call(
+                    "colbert_exact",
+                    {"q": st["q"], "q_valid": st["q_valid"],
+                     "sel": sel})
                 return {"cols": cols, "exact_np": r["scores"]}
 
             stages = (
@@ -945,14 +1103,15 @@ class ProcessShardGroup(MultiStageRetriever):
             """Group stage 1: every shard's request goes onto its wire
             *before* any reply is read (pipelined sockets), so all S
             worker processes score their postings slices concurrently —
-            the process analogue of dispatch-all-then-sync-all."""
+            the process analogue of dispatch-all-then-sync-all. Under
+            concurrent micro-batches the dispatcher coalesces the
+            stage-1 ops that land on a busy worker into one frame."""
             payload = {"term_ids": list(cb.term_ids),
                        "term_weights": list(cb.term_weights),
                        "k": p.first_k, "backend": backend}
-            pends = [self._call_async(i, "splade", payload)
+            slots = [self._disp[i].enqueue("splade", payload)
                      for i in range(S)]
-            outs = [self._wait(i, cli, rep)
-                    for i, (cli, rep) in enumerate(pends)]
+            outs = [self._disp[i].wait(s) for i, s in enumerate(slots)]
             return cb.evolve(shard_states=tuple(
                 {"pids": np.where(r["pids"] >= 0,
                                   r["pids"] + offs[i], -1),
@@ -975,14 +1134,14 @@ class ProcessShardGroup(MultiStageRetriever):
         def score_dispatch(cb, i):
             st = cb.state
             cols, sel = compact_owned(st["gp"], offs[i], offs[i + 1])
-            cli, rep = self._call_async(
-                i, "score_tokens",
+            slot = self._disp[i].enqueue(
+                "score_tokens",
                 {"q": st["q"], "q_valid": st["q_valid"], "sel": sel})
-            return {"cols": cols, "_cli": cli, "_rep": rep}
+            return {"cols": cols, "_slot": slot}
 
         def score_wait(cb, i):
             s = dict(cb.shard_states[i])
-            r = self._wait(i, s.pop("_cli"), s.pop("_rep"))
+            r = self._disp[i].wait(s.pop("_slot"))
             s["c_dev"] = r["scores"][:cb.state["B"]]
             return s
 
@@ -1003,17 +1162,23 @@ class ProcessShardGroup(MultiStageRetriever):
 
 def build_shard_group(shard_dirs, boundaries, *, workers: str = "thread",
                       mode: str = "mmap", plaid_params=None,
-                      multistage_params=None, devices=None, **kw):
+                      multistage_params=None, devices=None,
+                      transport=None, arena_bytes=None, **kw):
     """Load a shard group behind either worker backend.
 
     ``workers="thread"`` → in-process :class:`ShardedRetriever`
     (:func:`build_sharded_retriever`); ``workers="process"`` → one OS
     process per shard behind a :class:`ProcessShardGroup`. Both present
-    the same retriever interface and return identical results."""
+    the same retriever interface and return identical results.
+    ``transport`` (process workers only): ``"shm"`` zero-copy ring
+    arenas / ``"socket"`` in-frame segments; None picks the platform
+    default (:func:`repro.launch.mesh.default_shard_transport`)."""
     if workers == "process":
         return ProcessShardGroup(shard_dirs, boundaries, mode=mode,
                                  plaid_params=plaid_params,
                                  multistage_params=multistage_params,
+                                 transport=transport,
+                                 arena_bytes=arena_bytes,
                                  **kw)
     if workers != "thread":
         raise ValueError(f"shard workers {workers!r} not in "

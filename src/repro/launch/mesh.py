@@ -53,6 +53,39 @@ def shard_device_map(n_shards: int, devices=None) -> list:
     return [devices[i % len(devices)] for i in range(n_shards)]
 
 
+def default_shard_transport() -> str:
+    """Pick the tensor transport for process shard workers.
+
+    ``shm`` (zero-copy ring arenas) whenever a writable ``/dev/shm``
+    exists — the normal case on Linux serving hosts; ``socket``
+    (in-frame ``sendmsg`` segments) otherwise. Overridable per launch
+    via ``--shard-transport`` and per group via
+    ``build_shard_group(transport=…)``."""
+    shm = "/dev/shm"
+    if os.path.isdir(shm) and os.access(shm, os.W_OK):
+        return "shm"
+    return "socket"
+
+
+def shard_arena_bytes(n_workers: int,
+                      requested: Optional[int] = None) -> int:
+    """Per-direction ring capacity for each worker's shm arena.
+
+    The arena bounds in-flight tensor bytes per worker (allocation
+    back-pressure), so it must cover a few pipelined micro-batches of
+    query tensors + candidate slices + reply scores — tens of MB, not
+    the index size (index bytes never cross the transport; workers mmap
+    their own shard subtree). 64 MiB/direction is comfortable for
+    depth≲4 pipelines; when many workers share a small ``/dev/shm``,
+    the cap splits a 1 GiB budget evenly rather than oversubscribing
+    tmpfs."""
+    if requested is not None:
+        return max(1 << 20, int(requested))
+    budget = 1 << 30
+    per = min(64 << 20, budget // max(1, 2 * n_workers))
+    return max(8 << 20, per)
+
+
 def shard_worker_env(n_workers: int, *, pin_host_threads: bool = False,
                      base: Optional[dict] = None) -> dict:
     """Environment for spawned shard *worker processes*.

@@ -34,7 +34,9 @@ from repro.serving.server import RetrievalServer
 def build_or_load(index_dir: str | None, mode: str,
                   splade_backend: str = "host",
                   splade_max_df: int | None = None,
-                  n_shards: int = 1, shard_workers: str = "thread"):
+                  n_shards: int = 1, shard_workers: str = "thread",
+                  shard_transport: str | None = None,
+                  arena_bytes: int | None = None):
     """Build (or load) the serving index and retriever. ``n_shards >= 2``
     splits the single index into a contiguous-range shard group on disk
     (``<dir>/shards/``, reused if already split at this count) and
@@ -43,7 +45,10 @@ def build_or_load(index_dir: str | None, mode: str,
     mapped round-robin onto the local devices); ``"process"`` spawns
     one shared-nothing worker process per shard (own mmap segment, own
     page cache, own GIL) behind an RPC coordinator — results are
-    bitwise-identical across both backends."""
+    bitwise-identical across both backends. ``shard_transport`` picks
+    the process-worker tensor path (``shm`` zero-copy ring arenas /
+    ``socket`` stream; None = platform default) and ``arena_bytes``
+    sizes each worker's per-direction ring."""
     if index_dir and (pathlib.Path(index_dir) / "colbert").exists():
         base = pathlib.Path(index_dir)
         corpus = None
@@ -68,6 +73,7 @@ def build_or_load(index_dir: str | None, mode: str,
         retr = build_shard_group(
             shard_dirs, boundaries, workers=shard_workers, mode=mode,
             plaid_params=plaid_params, multistage_params=ms_params,
+            transport=shard_transport, arena_bytes=arena_bytes,
             devices=(None if shard_workers == "process"
                      else shard_device_map(n_shards)))
         # the unsharded index handle is informational only (pool-size
@@ -107,6 +113,18 @@ def main():
                          "process per shard (own mmap page cache + "
                          "GIL) behind the scatter-gather RPC — "
                          "bitwise-identical results")
+    ap.add_argument("--shard-transport", default=None,
+                    choices=["shm", "socket"],
+                    help="process-worker tensor transport: shm = "
+                         "zero-copy shared-memory ring arenas (one per "
+                         "worker, /dev/shm), socket = in-frame sendmsg "
+                         "segments over the socketpair; default picks "
+                         "shm when /dev/shm is writable")
+    ap.add_argument("--arena-bytes", type=int, default=None,
+                    help="per-direction ring capacity of each worker's "
+                         "shm arena (bounds in-flight tensor bytes; "
+                         "default auto-sizes, see launch.mesh."
+                         "shard_arena_bytes)")
     ap.add_argument("--max-batch", type=int, default=1)
     ap.add_argument("--batch-timeout-ms", type=float, default=2.0)
     ap.add_argument("--latency-slo-ms", type=float, default=None,
@@ -138,11 +156,12 @@ def main():
 
     depth = (args.pipeline_depth if args.pipeline_depth is not None
              else (2 if args.pipeline else 1))
-    corpus, index, retr = build_or_load(args.index_dir, args.mode,
-                                        args.splade_backend,
-                                        args.splade_max_df,
-                                        n_shards=args.shards,
-                                        shard_workers=args.shard_workers)
+    corpus, index, retr = build_or_load(
+        args.index_dir, args.mode, args.splade_backend,
+        args.splade_max_df, n_shards=args.shards,
+        shard_workers=args.shard_workers,
+        shard_transport=args.shard_transport,
+        arena_bytes=args.arena_bytes)
     # backend already configured (and device cache pre-materialised) via
     # MultiStageParams in build_or_load; the engine owns the retriever so
     # a process shard group's workers are reaped on every exit path
@@ -203,7 +222,11 @@ def main():
                 print(f"shard worker {w['shard']}: pid={w['pid']} "
                       f"rss={w.get('rss_bytes', 0) / 1e6:.1f} MB "
                       f"segment={w.get('pool_bytes', 0) / 1e6:.1f} MB "
-                      f"served={w.get('served', 0)}")
+                      f"served={w.get('served', 0)} "
+                      f"transport={w.get('transport', '?')} "
+                      f"copied={w.get('rpc_bytes_copied', 0) / 1e6:.2f}"
+                      f" MB zero_copy="
+                      f"{w.get('rpc_bytes_zero_copy', 0) / 1e6:.2f} MB")
         else:
             # in-process serving: the gathers hit this process's stores
             # (per-shard segments under thread sharding)

@@ -299,6 +299,7 @@ class PipelineStats:
         self._t_mark: Optional[float] = None
         self._busy_any_s = 0.0
         self._overlap_s = 0.0
+        self._counters: dict[str, int] = {}
 
     def reset(self):
         with self._lock:
@@ -308,6 +309,7 @@ class PipelineStats:
             self._t_mark = None
             self._busy_any_s = 0.0
             self._overlap_s = 0.0
+            self._counters.clear()
 
     # -- overlap ---------------------------------------------------------
     def _tick(self, now: float):
@@ -361,6 +363,13 @@ class PipelineStats:
                            else self._ewma_alpha * ms
                            + (1 - self._ewma_alpha) * rec.ewma_ms)
 
+    def counter(self, name: str, delta: int = 1):
+        """Bump a named monotonic counter (transport bytes, RPC
+        dispatches, coalesced-op counts, …); surfaced in
+        :meth:`snapshot` under ``"counters"``."""
+        with self._lock:
+            self._counters[name] = self._counters.get(name, 0) + delta
+
     @property
     def overlap_fraction(self) -> float:
         with self._lock:
@@ -369,12 +378,14 @@ class PipelineStats:
 
     def snapshot(self) -> dict:
         """Atomic copy: {"stages": {name: record-dict}, "busy_s": ...,
-        "overlap_s": ..., "overlap_fraction": ...}."""
+        "overlap_s": ..., "overlap_fraction": ..., "counters": ...}."""
         with self._lock:
             stages = {n: r.as_dict() for n, r in self._stages.items()}
             busy, over = self._busy_any_s, self._overlap_s
+            counters = dict(self._counters)
         return {"stages": stages, "busy_s": busy, "overlap_s": over,
-                "overlap_fraction": over / busy if busy > 0 else 0.0}
+                "overlap_fraction": over / busy if busy > 0 else 0.0,
+                "counters": counters}
 
 
 # ---------------------------------------------------------------------------

@@ -1,533 +1,33 @@
-"""Compact length-prefixed RPC for shard worker processes.
+"""Back-compat shim over :mod:`repro.serving.transport`.
 
-Multi-process scatter-gather serving needs shard-local stage work to
-cross an OS-process boundary: the coordinator ships ``CandidateBatch``
-shard slices (query tensors, compacted candidate lists) to a worker
-that owns one shard's mmap segment, and gets back synced numpy scores.
-This module is the wire layer:
+The monolithic RPC module (codec + framing + socket + client lifecycle
+interleaved in one file) was refactored into the layered
+``transport/`` package:
 
-* **codec** — msgpack when available (ndarrays as an ExtType carrying
-  ``(dtype, shape, raw bytes)``), with a dependency-free fallback codec
-  covering the same value space (None/bool/int/float/str/bytes/
-  list/dict/ndarray). Both are lossless for numpy dtypes, which is what
-  makes process-group results bitwise-identical to the in-process
-  shard group: scores are computed from byte-identical inputs by the
-  same jitted programs and travel back as raw dtype bytes.
-* **framing** — 8-byte big-endian length prefix per message over a
-  stream socket (the coordinator spawns each worker with one end of a
-  ``socketpair``, so there is no port management and worker death is an
-  unambiguous EOF).
-* :class:`ShardWorkerClient` — coordinator-side handle: spawn, ping,
-  **pipelined** request/response (requests may be sent before earlier
-  replies are read; replies are FIFO per connection, so the pipelined
-  executor can keep one RPC in flight per in-flight micro-batch —
-  backpressure across the process boundary is the executor's admission
-  semaphore), crash detection (:class:`ShardWorkerDied` on EOF/reset/
-  timeout, with the worker's exit code when it already died), and
-  graceful shutdown (RPC ``shutdown`` → SIGTERM → kill escalation).
+* ``transport.codec``   — message values ⇄ control bytes, ndarrays as
+  ``(dtype, shape, locator)``
+* ``transport.framing`` — length-prefixed frames, ``sendmsg`` gather
+* ``transport.shm``     — shared-memory ring arenas (zero-copy path)
+* ``transport.channel`` — ``StreamChannel`` / ``ShmChannel``
+* ``transport.client``  — ``ShardWorkerClient``
 
-Remote *compute* errors (a stage op raising inside a healthy worker)
-are :class:`ShardWorkerError` — the worker survives and keeps serving;
-only transport-level failures are :class:`ShardWorkerDied`.
+Every public name this module used to define is re-exported here, so
+existing imports (``from repro.serving.rpc import ShardWorkerClient,
+encode, decode, send_msg, recv_msg …``) keep working unchanged. New
+code should import from :mod:`repro.serving.transport` directly.
 """
 
-from __future__ import annotations
+from repro.serving.transport import (  # noqa: F401
+    HAVE_MSGPACK, ArenaDead, SegmentSink, ShardWorkerClient,
+    ShardWorkerDied, ShardWorkerError, ShmArena, ShmChannel,
+    StreamChannel, _Reply, _src_pythonpath, decode, decode_control,
+    encode, encode_control, recv_msg, send_msg)
+from repro.serving.transport.codec import (  # noqa: F401
+    _nd_from_wire, _nd_to_wire)
 
-import collections
-import json
-import os
-import pathlib
-import select
-import signal
-import socket
-import struct
-import subprocess
-import sys
-import threading
-import time
-from typing import Any, Optional
-
-import numpy as np
-
-try:
-    import msgpack
-    HAVE_MSGPACK = True
-except ImportError:                                   # pragma: no cover
-    msgpack = None
-    HAVE_MSGPACK = False
-
-
-class ShardWorkerDied(RuntimeError):
-    """The worker process behind a shard is gone (EOF, reset, timeout,
-    or a nonzero exit) — the current batch has no answer for that
-    shard. The group heals by respawning the worker on next use."""
-
-
-class ShardWorkerError(RuntimeError):
-    """A stage op raised *inside* a healthy worker; the worker keeps
-    serving. Carries the remote traceback text."""
-
-
-# ---------------------------------------------------------------------------
-# codec
-# ---------------------------------------------------------------------------
-
-_ND_EXT = 42          # msgpack ExtType code for ndarrays
-
-
-def _nd_to_wire(arr: np.ndarray) -> tuple:
-    a = np.ascontiguousarray(arr)
-    return (a.dtype.str, list(a.shape), a.tobytes())
-
-
-def _nd_from_wire(dtype_str: str, shape, raw: bytes) -> np.ndarray:
-    # copy: frombuffer views are read-only and may alias the recv buffer
-    return np.frombuffer(raw, dtype=np.dtype(dtype_str)) \
-        .reshape(shape).copy()
-
-
-def _msgpack_default(obj):
-    if isinstance(obj, np.ndarray):
-        d, s, b = _nd_to_wire(obj)
-        return msgpack.ExtType(_ND_EXT, msgpack.packb((d, s, b)))
-    if isinstance(obj, np.integer):
-        return int(obj)
-    if isinstance(obj, np.floating):
-        return float(obj)
-    if isinstance(obj, np.bool_):
-        return bool(obj)
-    if isinstance(obj, tuple):
-        return list(obj)
-    raise TypeError(f"unencodable RPC value: {type(obj)!r}")
-
-
-def _msgpack_ext_hook(code, data):
-    if code == _ND_EXT:
-        d, s, b = msgpack.unpackb(data)
-        return _nd_from_wire(d, s, b)
-    return msgpack.ExtType(code, data)              # pragma: no cover
-
-
-# -- fallback codec (no msgpack on the image) -------------------------------
-# One tag byte per value; ints are 8-byte signed, floats are doubles,
-# containers carry a 4-byte count. Covers exactly the RPC value space.
-
-def _enc_py(obj, out: list):
-    if obj is None:
-        out.append(b"N")
-    elif isinstance(obj, (bool, np.bool_)):
-        out.append(b"T" if obj else b"F")
-    elif isinstance(obj, (int, np.integer)):
-        out.append(b"I" + struct.pack(">q", int(obj)))
-    elif isinstance(obj, (float, np.floating)):
-        out.append(b"D" + struct.pack(">d", float(obj)))
-    elif isinstance(obj, str):
-        raw = obj.encode()
-        out.append(b"S" + struct.pack(">I", len(raw)) + raw)
-    elif isinstance(obj, bytes):
-        out.append(b"B" + struct.pack(">I", len(obj)) + obj)
-    elif isinstance(obj, np.ndarray):
-        d, s, raw = _nd_to_wire(obj)
-        head = json.dumps([d, s]).encode()
-        out.append(b"A" + struct.pack(">I", len(head)) + head
-                   + struct.pack(">Q", len(raw)) + raw)
-    elif isinstance(obj, (list, tuple)):
-        out.append(b"L" + struct.pack(">I", len(obj)))
-        for x in obj:
-            _enc_py(x, out)
-    elif isinstance(obj, dict):
-        out.append(b"M" + struct.pack(">I", len(obj)))
-        for k, v in obj.items():
-            _enc_py(str(k), out)
-            _enc_py(v, out)
-    else:
-        raise TypeError(f"unencodable RPC value: {type(obj)!r}")
-
-
-def _dec_py(buf: memoryview, pos: int):
-    tag = bytes(buf[pos:pos + 1])
-    pos += 1
-    if tag == b"N":
-        return None, pos
-    if tag == b"T":
-        return True, pos
-    if tag == b"F":
-        return False, pos
-    if tag == b"I":
-        return struct.unpack(">q", buf[pos:pos + 8])[0], pos + 8
-    if tag == b"D":
-        return struct.unpack(">d", buf[pos:pos + 8])[0], pos + 8
-    if tag in (b"S", b"B"):
-        n = struct.unpack(">I", buf[pos:pos + 4])[0]
-        raw = bytes(buf[pos + 4:pos + 4 + n])
-        return (raw.decode() if tag == b"S" else raw), pos + 4 + n
-    if tag == b"A":
-        hn = struct.unpack(">I", buf[pos:pos + 4])[0]
-        d, s = json.loads(bytes(buf[pos + 4:pos + 4 + hn]).decode())
-        pos += 4 + hn
-        rn = struct.unpack(">Q", buf[pos:pos + 8])[0]
-        arr = _nd_from_wire(d, s, bytes(buf[pos + 8:pos + 8 + rn]))
-        return arr, pos + 8 + rn
-    if tag == b"L":
-        n = struct.unpack(">I", buf[pos:pos + 4])[0]
-        pos += 4
-        out = []
-        for _ in range(n):
-            v, pos = _dec_py(buf, pos)
-            out.append(v)
-        return out, pos
-    if tag == b"M":
-        n = struct.unpack(">I", buf[pos:pos + 4])[0]
-        pos += 4
-        out = {}
-        for _ in range(n):
-            k, pos = _dec_py(buf, pos)
-            v, pos = _dec_py(buf, pos)
-            out[k] = v
-        return out, pos
-    raise ValueError(f"bad RPC tag {tag!r}")
-
-
-def encode(obj, *, force_fallback: bool = False) -> bytes:
-    """Message → wire bytes (msgpack when available)."""
-    if HAVE_MSGPACK and not force_fallback:
-        return b"\x01" + msgpack.packb(obj, default=_msgpack_default,
-                                       use_bin_type=True)
-    out: list = []
-    _enc_py(obj, out)
-    return b"\x00" + b"".join(out)
-
-
-def decode(raw: bytes):
-    """Wire bytes → message (codec chosen by the leading byte, so a
-    msgpack coordinator can talk to a fallback worker and vice versa)."""
-    if raw[:1] == b"\x01":
-        if not HAVE_MSGPACK:
-            raise RuntimeError("peer sent msgpack but msgpack is not "
-                               "installed here")
-        return msgpack.unpackb(raw[1:], ext_hook=_msgpack_ext_hook,
-                               raw=False, strict_map_key=False)
-    val, pos = _dec_py(memoryview(raw), 1)
-    if pos != len(raw):
-        raise ValueError(f"trailing RPC bytes ({len(raw) - pos})")
-    return val
-
-
-# ---------------------------------------------------------------------------
-# framing
-# ---------------------------------------------------------------------------
-
-_LEN = struct.Struct(">Q")
-
-
-def send_msg(sock: socket.socket, obj) -> int:
-    """Encode + length-prefix + sendall. Returns bytes written."""
-    payload = encode(obj)
-    sock.sendall(_LEN.pack(len(payload)) + payload)
-    return _LEN.size + len(payload)
-
-
-def _recv_exact(sock: socket.socket, n: int,
-                deadline: Optional[float]) -> bytes:
-    chunks = []
-    got = 0
-    while got < n:
-        if deadline is not None:
-            remaining = deadline - time.monotonic()
-            if remaining <= 0:
-                raise socket.timeout("RPC recv deadline exceeded")
-            sock.settimeout(min(remaining, 1.0))
-        try:
-            chunk = sock.recv(min(n - got, 1 << 20))
-        except socket.timeout:
-            continue                 # re-check the deadline
-        if not chunk:
-            raise ConnectionError("RPC peer closed the connection")
-        chunks.append(chunk)
-        got += len(chunk)
-    return b"".join(chunks)
-
-
-def recv_msg(sock: socket.socket, timeout: Optional[float] = None):
-    """Read one length-prefixed message; ``timeout`` is the whole-message
-    deadline (None = block forever)."""
-    deadline = None if timeout is None else time.monotonic() + timeout
-    head = _recv_exact(sock, _LEN.size, deadline)
-    (n,) = _LEN.unpack(head)
-    return decode(_recv_exact(sock, n, deadline))
-
-
-# ---------------------------------------------------------------------------
-# coordinator-side worker handle
-# ---------------------------------------------------------------------------
-
-class _Reply:
-    """One outstanding pipelined request's reply slot."""
-
-    __slots__ = ("event", "value", "error")
-
-    def __init__(self):
-        self.event = threading.Event()
-        self.value = None
-        self.error: Optional[BaseException] = None
-
-    def resolve(self, value=None, error: Optional[BaseException] = None):
-        self.value = value
-        self.error = error
-        self.event.set()
-
-
-def _src_pythonpath() -> str:
-    """PYTHONPATH entry that makes ``repro`` importable in the child."""
-    import repro
-
-    # repro may be a namespace package (__file__ is None) — __path__
-    # always carries the package directory
-    pkg_dir = (pathlib.Path(repro.__file__).parent if repro.__file__
-               else pathlib.Path(next(iter(repro.__path__))))
-    src = str(pkg_dir.resolve().parent)
-    existing = os.environ.get("PYTHONPATH", "")
-    return src if not existing else f"{src}{os.pathsep}{existing}"
-
-
-class ShardWorkerClient:
-    """Spawn and talk to one shard worker process.
-
-    The connection is a ``socketpair`` end inherited by the child, so
-    liveness is exact: worker death is EOF, not a guessed timeout.
-    Requests are **pipelined**: ``call_async`` sends immediately and
-    returns a handle; replies are read strictly in request order (the
-    worker serves one request at a time), so an abandoned handle's
-    reply is still consumed by the next waiter and the stream can never
-    desynchronise. All transport failures mark the client dead and fail
-    every outstanding handle with :class:`ShardWorkerDied`.
-    """
-
-    def __init__(self, shard_index: int, shard_dir, *, mode: str = "mmap",
-                 plaid_params: Optional[dict] = None,
-                 ms_params: Optional[dict] = None,
-                 env: Optional[dict] = None,
-                 spawn_timeout_s: float = 180.0,
-                 call_timeout_s: float = 300.0):
-        self.shard_index = shard_index
-        self.shard_dir = str(shard_dir)
-        self.mode = mode
-        self.plaid_params = plaid_params or {}
-        self.ms_params = ms_params or {}
-        self.env = env
-        self.spawn_timeout_s = spawn_timeout_s
-        self.call_timeout_s = call_timeout_s
-        self.proc: Optional[subprocess.Popen] = None
-        self.sock: Optional[socket.socket] = None
-        self.dead = False
-        self.bytes_sent = 0
-        self.bytes_recv = 0
-        # RLock: a send failure marks the client dead from *inside* the
-        # send critical section (_mark_dead re-enters to fail pending)
-        self._send_lock = threading.RLock()
-        self._recv_lock = threading.Lock()
-        self._rx = bytearray()         # partial-frame receive buffer
-        self._pending: collections.deque[_Reply] = collections.deque()
-
-    # -- lifecycle -------------------------------------------------------
-    def spawn(self):
-        parent, child = socket.socketpair()
-        cmd = [sys.executable, "-m", "repro.serving.worker",
-               "--shard-dir", self.shard_dir,
-               "--shard-index", str(self.shard_index),
-               "--mode", self.mode,
-               "--fd", str(child.fileno()),
-               "--plaid-json", json.dumps(self.plaid_params),
-               "--ms-json", json.dumps(self.ms_params)]
-        env = dict(os.environ if self.env is None else self.env)
-        env["PYTHONPATH"] = _src_pythonpath()
-        self.proc = subprocess.Popen(cmd, pass_fds=(child.fileno(),),
-                                     env=env, stdin=subprocess.DEVNULL)
-        child.close()
-        self.sock = parent
-        self.dead = False
-        try:
-            # first ping doubles as the readiness barrier: the worker
-            # replies only after importing jax and mapping its subtree
-            return self.call("ping", {}, timeout=self.spawn_timeout_s)
-        except BaseException:
-            # a worker that hung or died during startup must be reaped
-            # here — the caller has no client slot for it yet, so an
-            # unreaped child would be a permanent orphan
-            try:
-                self.proc.kill()
-            except OSError:
-                pass
-            self.proc.wait()
-            self.dead = True
-            raise
-
-    @property
-    def pid(self) -> Optional[int]:
-        return self.proc.pid if self.proc is not None else None
-
-    def alive(self) -> bool:
-        return (not self.dead and self.proc is not None
-                and self.proc.poll() is None)
-
-    # -- request/response ------------------------------------------------
-    def call_async(self, op: str, payload: Any) -> _Reply:
-        rep = _Reply()
-        with self._send_lock:
-            if self.dead or self.sock is None:
-                raise self._died_error("is not running")
-            try:
-                self.bytes_sent += send_msg(
-                    self.sock, {"op": op, "payload": payload})
-            except OSError as e:
-                self._mark_dead()
-                raise self._died_error(f"send failed ({e})") from e
-            self._pending.append(rep)
-        return rep
-
-    def _pump_frame(self, slice_timeout: float):
-        """Complete at most one frame within ``slice_timeout``; returns
-        the decoded message or None.
-
-        Two properties this must preserve (both were live bugs):
-        partially received bytes persist in :attr:`_rx` across slices —
-        a timeout mid-frame must never discard them, or the
-        length-prefixed stream desynchronises and a healthy worker
-        looks dead; and pacing uses ``select``, never
-        ``sock.settimeout`` — socket timeouts are socket-wide, so a
-        recv slice would also arm concurrent ``sendall`` calls, which
-        then spuriously 'fail' whenever a busy worker (first-shape jax
-        compile) lets the pipe fill for over a second. A blocked send
-        is backpressure, not death. Caller holds ``_recv_lock``."""
-        deadline = time.monotonic() + slice_timeout
-        while True:
-            if len(self._rx) >= _LEN.size:
-                (n,) = _LEN.unpack(bytes(self._rx[:_LEN.size]))
-                if len(self._rx) >= _LEN.size + n:
-                    payload = bytes(self._rx[_LEN.size:_LEN.size + n])
-                    del self._rx[:_LEN.size + n]
-                    return decode(payload)
-            remaining = deadline - time.monotonic()
-            if remaining <= 0:
-                return None
-            readable, _, _ = select.select([self.sock], [], [],
-                                           remaining)
-            if not readable:
-                return None
-            chunk = self.sock.recv(1 << 20)   # readable: won't block
-            if not chunk:
-                raise ConnectionError("RPC peer closed the connection")
-            self._rx += chunk
-            self.bytes_recv += len(chunk)
-
-    def wait(self, rep: _Reply, timeout: Optional[float] = None,
-             kill_on_timeout: bool = True):
-        """Wait for one handle; any waiter pumps the shared socket, and
-        frames resolve pending handles strictly in FIFO order.
-
-        ``kill_on_timeout=False`` makes the deadline *soft*: expiry
-        raises :class:`ShardWorkerError` without marking the worker
-        dead — the discipline for health/heartbeat polls, which queue
-        FIFO behind real work and must never kill a worker that is
-        merely busy (a first-shape compile easily exceeds a monitor's
-        patience). The abandoned reply stays pending and is consumed,
-        in order, by the next waiter."""
-        deadline = time.monotonic() + (timeout if timeout is not None
-                                       else self.call_timeout_s)
-        while not rep.event.is_set():
-            if not self._recv_lock.acquire(timeout=0.02):
-                continue
-            try:
-                if rep.event.is_set():
-                    break
-                remaining = deadline - time.monotonic()
-                if remaining <= 0:
-                    if not kill_on_timeout:
-                        raise ShardWorkerError(
-                            f"shard {self.shard_index} soft RPC "
-                            f"deadline expired (worker busy)")
-                    self._mark_dead()
-                    raise self._died_error("RPC timed out")
-                try:
-                    msg = self._pump_frame(min(remaining, 1.0))
-                except (OSError, ConnectionError, ValueError,
-                        RuntimeError) as e:
-                    self._mark_dead()
-                    raise self._died_error(f"recv failed ({e})") from e
-                if msg is None:
-                    continue               # slice expired; frame intact
-                try:
-                    head = self._pending.popleft()
-                except IndexError:
-                    # a concurrent _mark_dead (send failure on another
-                    # thread) drained the deque between our pump and
-                    # this pop — the client is dead, not corrupted
-                    raise self._died_error(
-                        "reply arrived after the client was marked "
-                        "dead")
-                head.resolve(value=msg)
-            finally:
-                self._recv_lock.release()
-        if rep.error is not None:
-            raise rep.error
-        msg = rep.value
-        if not msg.get("ok", False):
-            raise ShardWorkerError(
-                f"shard {self.shard_index} op failed:\n{msg.get('error')}")
-        return msg.get("result")
-
-    def call(self, op: str, payload: Any,
-             timeout: Optional[float] = None,
-             kill_on_timeout: bool = True):
-        return self.wait(self.call_async(op, payload), timeout=timeout,
-                         kill_on_timeout=kill_on_timeout)
-
-    # -- failure / shutdown ----------------------------------------------
-    def _mark_dead(self):
-        self.dead = True
-        # wake any sender blocked in sendall on a full pipe *before*
-        # taking the send lock it holds — shutdown errors the send out
-        if self.sock is not None:
-            try:
-                self.sock.shutdown(socket.SHUT_RDWR)
-            except OSError:
-                pass
-        err = self._died_error("died mid-conversation")
-        with self._send_lock:
-            while self._pending:
-                self._pending.popleft().resolve(error=err)
-
-    def _died_error(self, why: str) -> ShardWorkerDied:
-        code = self.proc.poll() if self.proc is not None else None
-        tail = "" if code is None else f"; exit code {code}"
-        return ShardWorkerDied(
-            f"shard {self.shard_index} worker (pid {self.pid}) {why}"
-            f"{tail}")
-
-    def terminate(self, grace_s: float = 5.0) -> Optional[int]:
-        """Graceful shutdown escalation: ``shutdown`` RPC → SIGTERM →
-        SIGKILL. Always reaps; returns the exit code."""
-        if self.proc is None:
-            return None
-        if self.proc.poll() is None and not self.dead:
-            try:
-                self.call("shutdown", {}, timeout=grace_s)
-            except (ShardWorkerDied, ShardWorkerError):
-                pass
-        try:
-            self.proc.wait(timeout=grace_s)
-        except subprocess.TimeoutExpired:
-            try:
-                self.proc.send_signal(signal.SIGTERM)
-                self.proc.wait(timeout=grace_s)
-            except subprocess.TimeoutExpired:
-                self.proc.kill()
-                self.proc.wait()
-        self.dead = True
-        if self.sock is not None:
-            try:
-                self.sock.close()
-            except OSError:
-                pass
-            self.sock = None
-        return self.proc.returncode
+__all__ = [
+    "ArenaDead", "HAVE_MSGPACK", "SegmentSink", "ShardWorkerClient",
+    "ShardWorkerDied", "ShardWorkerError", "ShmArena", "ShmChannel",
+    "StreamChannel", "decode", "decode_control", "encode",
+    "encode_control", "recv_msg", "send_msg",
+]

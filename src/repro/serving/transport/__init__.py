@@ -1,0 +1,42 @@
+"""Layered shard transport: codec ⇄ framing ⇄ channel ⇄ client.
+
+* :mod:`~repro.serving.transport.codec` — message values ⇄ control
+  bytes, ndarrays as ``(dtype, shape, locator)`` with pluggable
+  sink/resolver seams (msgpack + dependency-free fallback).
+* :mod:`~repro.serving.transport.framing` — length-prefixed frames;
+  multi-part frames gather tensor segments into a ``sendmsg`` iovec.
+* :mod:`~repro.serving.transport.shm` — shared-memory ring arenas
+  (zero-copy tensor transport with back-pressure and crash-safe
+  generations).
+* :mod:`~repro.serving.transport.channel` — :class:`StreamChannel`
+  (portable socketpair) and :class:`ShmChannel` (arena-backed).
+* :mod:`~repro.serving.transport.client` —
+  :class:`ShardWorkerClient`, the coordinator-side worker handle.
+"""
+
+from repro.serving.transport.channel import (ShmChannel, StreamChannel,
+                                             _FramedChannel)
+from repro.serving.transport.client import (DEFAULT_ARENA_BYTES,
+                                            ShardWorkerClient, _Reply,
+                                            _src_pythonpath)
+from repro.serving.transport.codec import (HAVE_MSGPACK, decode,
+                                           decode_control, encode,
+                                           encode_control)
+from repro.serving.transport.errors import (ArenaDead, ShardWorkerDied,
+                                            ShardWorkerError)
+from repro.serving.transport.framing import (SegmentSink, frame_buffers,
+                                             parse_payload, recv_msg,
+                                             send_msg, sendmsg_gather)
+from repro.serving.transport.shm import (RING_C2W, RING_W2C, ArenaSink,
+                                         ShmArena, arena_path,
+                                         default_arena_dir)
+
+__all__ = [
+    "ArenaDead", "ArenaSink", "DEFAULT_ARENA_BYTES", "HAVE_MSGPACK",
+    "RING_C2W", "RING_W2C", "SegmentSink", "ShardWorkerClient",
+    "ShardWorkerDied", "ShardWorkerError", "ShmArena", "ShmChannel",
+    "StreamChannel", "_FramedChannel", "_Reply", "_src_pythonpath",
+    "arena_path", "decode", "decode_control", "default_arena_dir",
+    "encode", "encode_control", "frame_buffers", "parse_payload",
+    "recv_msg", "send_msg", "sendmsg_gather",
+]

@@ -1,0 +1,198 @@
+"""Channel layer: one seam, two transports.
+
+A channel owns one stream socket and moves whole RPC *messages*; the
+codec and framing layers above it never see which transport carries the
+tensor bytes:
+
+* :class:`StreamChannel` — portable socketpair path. Control bytes and
+  tensor segments travel on the socket as one multi-part frame via a
+  ``sendmsg`` gather, so each array is copied at most once in userspace
+  (``ascontiguousarray`` for strided sources; the kernel's copy into
+  the socket buffer is the floor).
+* :class:`ShmChannel` — the socket carries *only* control frames;
+  ndarray payloads are written once into a shared-memory ring arena
+  and cross as ``("arena", …)`` locators. The receive side maps spans
+  directly as read-only views — zero serialize, zero copy.
+
+Both count ``bytes_copied`` (tensor bytes that crossed the socket or
+were memcpy'd) vs ``bytes_zero_copy`` (tensor bytes that crossed via
+arena mapping), surfaced through ``health()`` so the transport win is
+observable, not folklore.
+
+Channels are not internally locked: the client serialises sends under
+its send lock and pumps under its recv lock; the worker is
+single-threaded. ``pump`` keeps partial frames in a persistent buffer
+across slices and paces with ``select`` — never ``sock.settimeout``,
+which is socket-wide and would spuriously fail concurrent sends when a
+busy worker lets the pipe fill (a blocked send is backpressure, not
+death).
+"""
+
+from __future__ import annotations
+
+import select
+import socket
+import time
+from typing import Optional
+
+from repro.serving.transport import codec, framing
+from repro.serving.transport.errors import ArenaDead
+from repro.serving.transport.shm import (RING_C2W, RING_W2C, ArenaSink,
+                                         ShmArena)
+
+_LEN = framing.LEN_SIZE
+
+
+class _FramedChannel:
+    """Shared machinery: frame assembly/gather on send, persistent
+    partial-frame buffer + select pacing on receive."""
+
+    transport = "?"
+
+    def __init__(self, sock: socket.socket):
+        self.sock = sock
+        self.bytes_sent = 0          # socket bytes out (incl. headers)
+        self.bytes_recv = 0          # socket bytes in
+        self.bytes_copied = 0        # tensor bytes that were memcpy'd
+        self.bytes_zero_copy = 0     # tensor bytes mapped, not copied
+        self._rx = bytearray()       # partial-frame receive buffer
+
+    # subclasses override the two transport-specific seams
+    def _make_sink(self):
+        return None, None            # (sink, seg_sink)
+
+    def _arena_resolver(self, kind, dtype_str, shape, fields):
+        raise ValueError(f"no resolver for {kind!r} ndarray locator on "
+                         f"a {self.transport} channel")
+
+    # -- send --------------------------------------------------------------
+    def send(self, obj) -> int:
+        sink, seg_sink = self._make_sink()
+        control = codec.encode_control(obj, sink)
+        bufs = framing.frame_buffers(control, seg_sink)
+        n = framing.sendmsg_gather(self.sock, bufs)
+        self.bytes_sent += n
+        self.bytes_copied += (0 if seg_sink is None else seg_sink.nbytes)
+        if sink is not None and isinstance(sink, ArenaSink):
+            self.bytes_zero_copy += sink.arena_bytes
+        return n
+
+    # -- receive -----------------------------------------------------------
+    def pump(self, slice_timeout: float):
+        """Complete at most one frame within ``slice_timeout``; returns
+        the decoded message or None. Partially received bytes persist in
+        the buffer across slices — a timeout mid-frame must never
+        discard them, or the length-prefixed stream desynchronises and
+        a healthy worker looks dead."""
+        deadline = time.monotonic() + slice_timeout
+        while True:
+            if len(self._rx) >= _LEN:
+                (n,) = framing._LEN.unpack(bytes(self._rx[:_LEN]))
+                if len(self._rx) >= _LEN + n:
+                    payload = bytes(self._rx[_LEN:_LEN + n])
+                    del self._rx[:_LEN + n]
+                    return framing.parse_payload(payload,
+                                                 self._arena_resolver)
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                return None
+            readable, _, _ = select.select([self.sock], [], [],
+                                           remaining)
+            if not readable:
+                return None
+            chunk = self.sock.recv(1 << 20)   # readable: won't block
+            if not chunk:
+                raise ConnectionError("RPC peer closed the connection")
+            self._rx += chunk
+            self.bytes_recv += len(chunk)
+
+    def recv(self, timeout: Optional[float] = None):
+        """Blocking single-message receive (worker serve loop and spawn
+        handshake); ``timeout`` is the whole-message deadline."""
+        deadline = (None if timeout is None
+                    else time.monotonic() + timeout)
+        while True:
+            if deadline is None:
+                slice_s = 1.0
+            else:
+                slice_s = deadline - time.monotonic()
+                if slice_s <= 0:
+                    raise socket.timeout("RPC recv deadline exceeded")
+                slice_s = min(slice_s, 1.0)
+            msg = self.pump(slice_s)
+            if msg is not None:
+                return msg
+
+    def stats(self) -> dict:
+        return {"transport": self.transport,
+                "bytes_sent": self.bytes_sent,
+                "bytes_recv": self.bytes_recv,
+                "bytes_copied": self.bytes_copied,
+                "bytes_zero_copy": self.bytes_zero_copy}
+
+    def close(self):
+        if self.sock is not None:
+            try:
+                self.sock.close()
+            except OSError:
+                pass
+            self.sock = None
+
+
+class StreamChannel(_FramedChannel):
+    """Socketpair stream transport (portable fallback): tensors ride as
+    in-frame segments gathered into the ``sendmsg`` iovec."""
+
+    transport = "socket"
+
+    def _make_sink(self):
+        seg = framing.SegmentSink()
+        return seg, seg
+
+
+class ShmChannel(_FramedChannel):
+    """Shared-memory arena transport: the socket carries control frames
+    only; tensor payloads cross via the ring arena.
+
+    ``tx_ring``/``rx_ring`` select direction: the coordinator transmits
+    on ring 0 (c→w) and receives on ring 1; the worker is the mirror
+    image. ``liveness`` (producer side) turns a dead peer into
+    :class:`ArenaDead` instead of an indefinite back-pressure stall.
+    """
+
+    transport = "shm"
+
+    def __init__(self, sock: socket.socket, arena: ShmArena, *,
+                 tx_ring: int = RING_C2W, rx_ring: int = RING_W2C,
+                 liveness=None, alloc_timeout_s: float = 60.0,
+                 own_arena: bool = True):
+        super().__init__(sock)
+        self.arena = arena
+        self._tx = arena.ring(tx_ring)
+        self._rx_ring = arena.ring(rx_ring)
+        self._liveness = liveness
+        self._alloc_timeout_s = alloc_timeout_s
+        self._own_arena = own_arena
+
+    def _make_sink(self):
+        seg = framing.SegmentSink()
+        sink = ArenaSink(self._tx, seg, timeout_s=self._alloc_timeout_s,
+                         liveness=self._liveness)
+        return sink, seg
+
+    def _arena_resolver(self, kind, dtype_str, shape, fields):
+        if kind != "arena":
+            raise ValueError(f"unexpected {kind!r} ndarray locator")
+        gen, start, span, nbytes = fields
+        if gen != self.arena.generation:
+            raise ArenaDead(
+                f"arena locator from generation {gen} but this arena is "
+                f"generation {self.arena.generation}")
+        view = self._rx_ring.take(start, span, nbytes, dtype_str, shape)
+        self.bytes_zero_copy += nbytes
+        return view
+
+    def close(self):
+        super().close()
+        if self._own_arena and self.arena is not None:
+            self.arena.close()

@@ -1,0 +1,353 @@
+"""Coordinator-side worker handle over a pluggable channel.
+
+:class:`ShardWorkerClient` spawns one shard worker process and talks
+to it through a :class:`~repro.serving.transport.channel.StreamChannel`
+(socketpair, portable) or :class:`ShmChannel` (shared-memory arena,
+zero-copy) — selected per worker via ``transport=``. The request/
+response discipline is unchanged from the monolithic rpc module:
+
+* requests are **pipelined** (``call_async`` sends immediately and
+  returns a handle; replies are FIFO per connection, so an abandoned
+  handle's reply is still consumed by the next waiter and the stream
+  can never desynchronise),
+* liveness is exact (worker death is socket EOF, not a guessed
+  timeout; on shm, a producer blocked on ring back-pressure polls a
+  liveness callback so a dead peer raises instead of wedging),
+* soft deadlines (``kill_on_timeout=False``) never kill a merely busy
+  worker,
+* all transport failures mark the client dead and fail every
+  outstanding handle with :class:`ShardWorkerDied`.
+
+Arena lifecycle: the coordinator creates the arena file (in
+``/dev/shm`` when present), passes its path to the child, and unlinks
+it right after the first ping — by then both sides have it mapped, so
+the name is unnecessary and a crashed pair can never leak a file. Each
+respawn gets a fresh arena at a bumped generation; locators from an
+old generation are rejected by construction.
+"""
+
+from __future__ import annotations
+
+import collections
+import json
+import os
+import pathlib
+import signal
+import socket
+import subprocess
+import sys
+import threading
+import time
+from typing import Any, Optional
+
+from repro.serving.transport.channel import ShmChannel, StreamChannel
+from repro.serving.transport.errors import (ShardWorkerDied,
+                                            ShardWorkerError)
+from repro.serving.transport.shm import ShmArena, arena_path
+
+DEFAULT_ARENA_BYTES = 64 << 20     # per direction, per worker
+
+
+class _Reply:
+    """One outstanding pipelined request's reply slot."""
+
+    __slots__ = ("event", "value", "error")
+
+    def __init__(self):
+        self.event = threading.Event()
+        self.value = None
+        self.error: Optional[BaseException] = None
+
+    def resolve(self, value=None, error: Optional[BaseException] = None):
+        self.value = value
+        self.error = error
+        self.event.set()
+
+
+def _src_pythonpath() -> str:
+    """PYTHONPATH entry that makes ``repro`` importable in the child."""
+    import repro
+
+    # repro may be a namespace package (__file__ is None) — __path__
+    # always carries the package directory
+    pkg_dir = (pathlib.Path(repro.__file__).parent if repro.__file__
+               else pathlib.Path(next(iter(repro.__path__))))
+    src = str(pkg_dir.resolve().parent)
+    existing = os.environ.get("PYTHONPATH", "")
+    return src if not existing else f"{src}{os.pathsep}{existing}"
+
+
+class ShardWorkerClient:
+    """Spawn and talk to one shard worker process over a channel."""
+
+    def __init__(self, shard_index: int, shard_dir, *, mode: str = "mmap",
+                 plaid_params: Optional[dict] = None,
+                 ms_params: Optional[dict] = None,
+                 env: Optional[dict] = None,
+                 spawn_timeout_s: float = 180.0,
+                 call_timeout_s: float = 300.0,
+                 transport: str = "shm",
+                 arena_bytes: int = DEFAULT_ARENA_BYTES,
+                 arena_dir: Optional[str] = None,
+                 generation: int = 1):
+        if transport not in ("shm", "socket"):
+            raise ValueError(f"unknown shard transport {transport!r}")
+        self.shard_index = shard_index
+        self.shard_dir = str(shard_dir)
+        self.mode = mode
+        self.plaid_params = plaid_params or {}
+        self.ms_params = ms_params or {}
+        self.env = env
+        self.spawn_timeout_s = spawn_timeout_s
+        self.call_timeout_s = call_timeout_s
+        self.transport = transport
+        self.arena_bytes = arena_bytes
+        self.arena_dir = arena_dir
+        self.generation = generation
+        self.proc: Optional[subprocess.Popen] = None
+        self.channel = None
+        self.dead = False
+        # RLock: a send failure marks the client dead from *inside* the
+        # send critical section (_mark_dead re-enters to fail pending)
+        self._send_lock = threading.RLock()
+        self._recv_lock = threading.Lock()
+        self._pending: collections.deque[_Reply] = collections.deque()
+
+    # -- channel plumbing ------------------------------------------------
+    @property
+    def sock(self) -> Optional[socket.socket]:
+        return None if self.channel is None else self.channel.sock
+
+    @sock.setter
+    def sock(self, s: Optional[socket.socket]):
+        # legacy seam (tests drive a bare socketpair end through the
+        # client): wrapping in a stream channel preserves it
+        self.channel = None if s is None else StreamChannel(s)
+
+    @property
+    def bytes_sent(self) -> int:
+        return 0 if self.channel is None else self.channel.bytes_sent
+
+    @property
+    def bytes_recv(self) -> int:
+        return 0 if self.channel is None else self.channel.bytes_recv
+
+    @property
+    def arena_generation(self) -> Optional[int]:
+        ch = self.channel
+        return ch.arena.generation if isinstance(ch, ShmChannel) else None
+
+    def transport_stats(self) -> dict:
+        if self.channel is None:
+            return {"transport": self.transport, "bytes_sent": 0,
+                    "bytes_recv": 0, "bytes_copied": 0,
+                    "bytes_zero_copy": 0}
+        return self.channel.stats()
+
+    def outstanding(self) -> int:
+        return len(self._pending)
+
+    def _peer_gone(self) -> Optional[str]:
+        """Liveness callback for arena back-pressure waits."""
+        if self.dead:
+            return "client marked dead"
+        if self.proc is not None:
+            code = self.proc.poll()
+            if code is not None:
+                return f"worker exited with code {code}"
+        return None
+
+    # -- lifecycle -------------------------------------------------------
+    def spawn(self):
+        arena = None
+        if self.transport == "shm":
+            path = arena_path(self.shard_index, self.generation,
+                              self.arena_dir)
+            try:
+                arena = ShmArena.create(path, self.arena_bytes,
+                                        self.generation)
+            except OSError:
+                # no usable shm/tmp space — the stream path always works
+                self.transport = "socket"
+        parent, child = socket.socketpair()
+        cmd = [sys.executable, "-m", "repro.serving.worker",
+               "--shard-dir", self.shard_dir,
+               "--shard-index", str(self.shard_index),
+               "--mode", self.mode,
+               "--fd", str(child.fileno()),
+               "--transport", self.transport,
+               "--plaid-json", json.dumps(self.plaid_params),
+               "--ms-json", json.dumps(self.ms_params)]
+        if arena is not None:
+            cmd += ["--arena", arena.path]
+        env = dict(os.environ if self.env is None else self.env)
+        env["PYTHONPATH"] = _src_pythonpath()
+        self.proc = subprocess.Popen(cmd, pass_fds=(child.fileno(),),
+                                     env=env, stdin=subprocess.DEVNULL)
+        child.close()
+        if arena is not None:
+            self.channel = ShmChannel(
+                parent, arena, liveness=self._peer_gone,
+                alloc_timeout_s=min(60.0, self.call_timeout_s))
+        else:
+            self.channel = StreamChannel(parent)
+        self.dead = False
+        try:
+            # first ping doubles as the readiness barrier: the worker
+            # replies only after importing jax and mapping its subtree
+            result = self.call("ping", {}, timeout=self.spawn_timeout_s)
+        except BaseException:
+            # a worker that hung or died during startup must be reaped
+            # here — the caller has no client slot for it yet, so an
+            # unreaped child would be a permanent orphan
+            try:
+                self.proc.kill()
+            except OSError:
+                pass
+            self.proc.wait()
+            self.dead = True
+            if arena is not None:
+                arena.unlink()
+            raise
+        if arena is not None:
+            # both sides have the arena mapped now; dropping the name
+            # means a crashed pair can never leak a /dev/shm file
+            arena.unlink()
+        return result
+
+    @property
+    def pid(self) -> Optional[int]:
+        return self.proc.pid if self.proc is not None else None
+
+    def alive(self) -> bool:
+        return (not self.dead and self.proc is not None
+                and self.proc.poll() is None)
+
+    # -- request/response ------------------------------------------------
+    def call_async(self, op: str, payload: Any) -> _Reply:
+        rep = _Reply()
+        with self._send_lock:
+            if self.dead or self.channel is None:
+                raise self._died_error("is not running")
+            try:
+                self.channel.send({"op": op, "payload": payload})
+            except OSError as e:
+                # includes ArenaDead (ConnectionError): the ring filled
+                # past its deadline or the peer vanished mid-alloc
+                self._mark_dead()
+                raise self._died_error(f"send failed ({e})") from e
+            self._pending.append(rep)
+        return rep
+
+    def wait(self, rep: _Reply, timeout: Optional[float] = None,
+             kill_on_timeout: bool = True):
+        """Wait for one handle; any waiter pumps the shared channel, and
+        frames resolve pending handles strictly in FIFO order.
+
+        ``kill_on_timeout=False`` makes the deadline *soft*: expiry
+        raises :class:`ShardWorkerError` without marking the worker
+        dead — the discipline for health/heartbeat polls, which queue
+        FIFO behind real work and must never kill a worker that is
+        merely busy (a first-shape compile easily exceeds a monitor's
+        patience). The abandoned reply stays pending and is consumed,
+        in order, by the next waiter."""
+        deadline = time.monotonic() + (timeout if timeout is not None
+                                       else self.call_timeout_s)
+        while not rep.event.is_set():
+            if not self._recv_lock.acquire(timeout=0.02):
+                continue
+            try:
+                if rep.event.is_set():
+                    break
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    if not kill_on_timeout:
+                        raise ShardWorkerError(
+                            f"shard {self.shard_index} soft RPC "
+                            f"deadline expired (worker busy)")
+                    self._mark_dead()
+                    raise self._died_error("RPC timed out")
+                try:
+                    msg = self.channel.pump(min(remaining, 1.0))
+                except (OSError, ConnectionError, ValueError,
+                        RuntimeError) as e:
+                    self._mark_dead()
+                    raise self._died_error(f"recv failed ({e})") from e
+                if msg is None:
+                    continue               # slice expired; frame intact
+                try:
+                    head = self._pending.popleft()
+                except IndexError:
+                    # a concurrent _mark_dead (send failure on another
+                    # thread) drained the deque between our pump and
+                    # this pop — the client is dead, not corrupted
+                    raise self._died_error(
+                        "reply arrived after the client was marked "
+                        "dead")
+                head.resolve(value=msg)
+            finally:
+                self._recv_lock.release()
+        if rep.error is not None:
+            raise rep.error
+        msg = rep.value
+        if not msg.get("ok", False):
+            raise ShardWorkerError(
+                f"shard {self.shard_index} op failed:\n{msg.get('error')}")
+        return msg.get("result")
+
+    def call(self, op: str, payload: Any,
+             timeout: Optional[float] = None,
+             kill_on_timeout: bool = True):
+        return self.wait(self.call_async(op, payload), timeout=timeout,
+                         kill_on_timeout=kill_on_timeout)
+
+    # -- failure / shutdown ----------------------------------------------
+    def _mark_dead(self):
+        # dead=True first: an arena producer blocked on ring space polls
+        # the liveness callback and bails out on this flag
+        self.dead = True
+        # wake any sender blocked in a socket send on a full pipe
+        # *before* taking the send lock it holds — shutdown errors the
+        # send out
+        sock = self.sock
+        if sock is not None:
+            try:
+                sock.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+        err = self._died_error("died mid-conversation")
+        with self._send_lock:
+            while self._pending:
+                self._pending.popleft().resolve(error=err)
+
+    def _died_error(self, why: str) -> ShardWorkerDied:
+        code = self.proc.poll() if self.proc is not None else None
+        tail = "" if code is None else f"; exit code {code}"
+        return ShardWorkerDied(
+            f"shard {self.shard_index} worker (pid {self.pid}) {why}"
+            f"{tail}")
+
+    def terminate(self, grace_s: float = 5.0) -> Optional[int]:
+        """Graceful shutdown escalation: ``shutdown`` RPC → SIGTERM →
+        SIGKILL. Always reaps; returns the exit code."""
+        if self.proc is None:
+            return None
+        if self.proc.poll() is None and not self.dead:
+            try:
+                self.call("shutdown", {}, timeout=grace_s)
+            except (ShardWorkerDied, ShardWorkerError):
+                pass
+        try:
+            self.proc.wait(timeout=grace_s)
+        except subprocess.TimeoutExpired:
+            try:
+                self.proc.send_signal(signal.SIGTERM)
+                self.proc.wait(timeout=grace_s)
+            except subprocess.TimeoutExpired:
+                self.proc.kill()
+                self.proc.wait()
+        self.dead = True
+        if self.channel is not None:
+            self.channel.close()
+            self.channel = None
+        return self.proc.returncode

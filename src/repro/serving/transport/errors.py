@@ -1,0 +1,32 @@
+"""Shard-transport error taxonomy.
+
+Two failure classes cross the RPC seam, and the distinction is
+load-bearing for the heal logic in ``ProcessShardGroup``:
+
+* :class:`ShardWorkerDied` — the *transport* failed (EOF, reset,
+  timeout, arena peer gone, nonzero exit). The worker process behind
+  the shard is unusable; the group heals by respawning it on next use.
+* :class:`ShardWorkerError` — a stage op raised *inside* a healthy
+  worker (or a soft deadline expired while it was merely busy). The
+  worker keeps serving; nothing is respawned.
+"""
+
+from __future__ import annotations
+
+
+class ShardWorkerDied(RuntimeError):
+    """The worker process behind a shard is gone (EOF, reset, timeout,
+    or a nonzero exit) — the current batch has no answer for that
+    shard. The group heals by respawning the worker on next use."""
+
+
+class ShardWorkerError(RuntimeError):
+    """A stage op raised *inside* a healthy worker; the worker keeps
+    serving. Carries the remote traceback text."""
+
+
+class ArenaDead(ConnectionError):
+    """A shared-memory arena operation cannot complete because the peer
+    is gone (or the ring stayed full past its deadline). Subclasses
+    ConnectionError so every transport-death path maps to
+    :class:`ShardWorkerDied` in the client."""

@@ -2,6 +2,7 @@
 
     python -m repro.serving.worker --shard-dir <base>/shards/0 \
         [--fd N | --port 0] [--mode mmap] [--shard-index 0] \
+        [--transport socket|shm] [--arena /dev/shm/….arena] \
         [--plaid-json '{...}'] [--ms-json '{...}']
 
 Each worker is a **shared-nothing** serving process: it loads only its
@@ -30,6 +31,8 @@ ones, which is the parity argument):
   approximate scoring (PLAID stages 2–3)
 * ``colbert_exact``              — survivor residual gather + exact
   scoring (PLAID stage 4)
+* ``multi {ops: […]}``           — coalesced sub-ops (one dispatch per
+  worker per stage); one reply with a per-op ok/error slot each
 * ``shutdown``                   — reply, then exit 0
 
 Lifecycle: SIGTERM requests a **graceful drain** — the op in flight
@@ -66,6 +69,7 @@ class _WorkerState:
         self.served = 0
         self.t_start = time.monotonic()
         self.draining = False
+        self.channel = None            # set by serve_connection
 
 
 def _rss_bytes() -> int:
@@ -90,13 +94,19 @@ def _handle(state: _WorkerState, op: str, payload: dict):
                 "ready": True}
 
     if op == "health":
-        return {"pid": os.getpid(), "shard": state.shard,
-                "rss_bytes": _rss_bytes(),
-                "pool_bytes": sr.index.store.total_bytes(),
-                "n_docs": retr.splade.n_docs,
-                "served": state.served,
-                "uptime_s": time.monotonic() - state.t_start,
-                "access": sr.index.store.stats.snapshot()}
+        h = {"pid": os.getpid(), "shard": state.shard,
+             "rss_bytes": _rss_bytes(),
+             "pool_bytes": sr.index.store.total_bytes(),
+             "n_docs": retr.splade.n_docs,
+             "served": state.served,
+             "uptime_s": time.monotonic() - state.t_start,
+             "access": sr.index.store.stats.snapshot()}
+        if state.channel is not None:
+            # worker-side view of the same channel (its bytes_sent is
+            # the coordinator's bytes_recv); keyed distinctly so it
+            # never clobbers the coordinator's transport fields
+            h["worker_transport"] = state.channel.stats()
+        return h
 
     if op == "warm":
         backend = payload.get("backend", "host")
@@ -159,35 +169,49 @@ def _handle(state: _WorkerState, op: str, payload: dict):
     raise ValueError(f"unknown RPC op {op!r}")
 
 
-def serve_connection(sock: socket.socket, state: _WorkerState):
+def _run_op(state: _WorkerState, op: str, payload) -> dict:
+    """One op → one ``{"ok": …}`` reply dict; compute errors are
+    reported, never fatal."""
+    try:
+        result = _handle(state, op, payload or {})
+        state.served += 1
+        return {"ok": True, "result": result}
+    except Exception:                    # compute error ≠ worker death
+        import traceback
+        return {"ok": False, "error": traceback.format_exc()}
+
+
+def serve_connection(channel, state: _WorkerState):
     """Request loop: one op at a time, FIFO replies, per-op errors
-    reported (never fatal), SIGTERM drained between ops."""
-    import select
+    reported (never fatal), SIGTERM drained between ops.
 
-    from repro.serving import rpc
-
-    sock.setblocking(True)
+    A ``multi`` op carries a list of coalesced sub-ops (one coordinator
+    dispatch per worker per stage); each sub-op gets its own ok/error
+    slot in the single reply, so one bad micro-batch never poisons its
+    co-batched neighbours."""
+    state.channel = channel
+    channel.sock.setblocking(True)
     while not state.draining:
-        # select (not a socket timeout) polls the drain flag: a recv
-        # timeout could fire mid-frame and lose bytes, desyncing the
-        # stream; select only gates the *start* of a message
-        readable, _, _ = select.select([sock], [], [], 0.5)
-        if not readable:
-            continue
         try:
-            msg = rpc.recv_msg(sock, timeout=None)
+            # the channel's pump (not a socket timeout) paces the drain
+            # poll: partial frames persist in its buffer across slices,
+            # and frames already buffered decode without touching the
+            # socket — a select-gated loop would strand them
+            msg = channel.pump(0.5)
         except (ConnectionError, OSError):
             return                       # coordinator went away
+        if msg is None:
+            continue
         op = msg.get("op", "")
+        if op == "multi":
+            ops = (msg.get("payload") or {}).get("ops") or []
+            reply = {"ok": True, "result": {
+                "replies": [_run_op(state, sub.get("op", ""),
+                                    sub.get("payload")) for sub in ops]}}
+        else:
+            reply = _run_op(state, op, msg.get("payload"))
         try:
-            result = _handle(state, op, msg.get("payload") or {})
-            reply = {"ok": True, "result": result}
-            state.served += 1
-        except Exception:                # compute error ≠ worker death
-            import traceback
-            reply = {"ok": False, "error": traceback.format_exc()}
-        try:
-            rpc.send_msg(sock, reply)
+            channel.send(reply)
         except (ConnectionError, OSError):
             return
         if op == "shutdown":
@@ -205,11 +229,22 @@ def main(argv=None):
     ap.add_argument("--port", type=int, default=None,
                     help="standalone mode: listen on 127.0.0.1:PORT "
                          "(0 = ephemeral; prints RPC_PORT=<n>)")
+    ap.add_argument("--transport", default="socket",
+                    choices=["socket", "shm"],
+                    help="tensor transport: in-frame socket segments "
+                         "or a shared-memory ring arena")
+    ap.add_argument("--arena", default=None,
+                    help="arena file created by the coordinator "
+                         "(required for --transport shm)")
     ap.add_argument("--plaid-json", default="{}")
     ap.add_argument("--ms-json", default="{}")
     args = ap.parse_args(argv)
     if (args.fd is None) == (args.port is None):
         ap.error("exactly one of --fd / --port is required")
+    if args.transport == "shm" and args.arena is None:
+        ap.error("--transport shm requires --arena")
+    if args.transport == "shm" and args.port is not None:
+        ap.error("--transport shm requires --fd (coordinator-spawned)")
 
     # heavy imports after arg validation; the parent's first ping blocks
     # until this completes
@@ -235,15 +270,37 @@ def main(argv=None):
 
     signal.signal(signal.SIGTERM, on_sigterm)
 
+    from repro.serving.transport import (RING_C2W, RING_W2C, ShmArena,
+                                         ShmChannel, StreamChannel)
+
     if args.fd is not None:
         sock = socket.socket(fileno=args.fd)
+        if args.transport == "shm":
+            arena = ShmArena.open(args.arena)
+
+            def coordinator_gone():
+                # producer-side liveness while blocked on reply-ring
+                # space: a closed socket (EOF visible via MSG_PEEK)
+                # means the coordinator is gone — bail, don't wedge
+                try:
+                    data = sock.recv(1, socket.MSG_PEEK
+                                     | socket.MSG_DONTWAIT)
+                except (BlockingIOError, InterruptedError):
+                    return None
+                except OSError as e:
+                    return f"socket error ({e})"
+                return (None if data
+                        else "coordinator closed the connection")
+
+            channel = ShmChannel(sock, arena, tx_ring=RING_W2C,
+                                 rx_ring=RING_C2W,
+                                 liveness=coordinator_gone)
+        else:
+            channel = StreamChannel(sock)
         try:
-            serve_connection(sock, state)
+            serve_connection(channel, state)
         finally:
-            try:
-                sock.close()
-            except OSError:
-                pass
+            channel.close()
         return 0
 
     srv = socket.create_server(("127.0.0.1", args.port))
@@ -256,7 +313,7 @@ def main(argv=None):
             except socket.timeout:
                 continue
             with conn:
-                serve_connection(conn, state)
+                serve_connection(StreamChannel(conn), state)
     finally:
         srv.close()
     return 0

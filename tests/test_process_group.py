@@ -7,6 +7,7 @@ port-0 TCP bind."""
 
 import os
 import signal
+import threading
 import time
 
 import numpy as np
@@ -20,8 +21,10 @@ from repro.core.sharded import ProcessShardGroup, build_shard_group
 from repro.index.builder import ColBERTIndex, build_colbert_index
 from repro.index.sharding import load_group, split_index_tree
 from repro.index.splade_index import SpladeIndex, build_splade_index
+from repro.launch.mesh import default_shard_transport
 from repro.serving.engine import Request, ServeEngine
-from repro.serving.rpc import ShardWorkerDied, decode, encode
+from repro.serving.rpc import (ShardWorkerDied, ShardWorkerError, decode,
+                               encode)
 from repro.serving.server import RetrievalServer, tcp_query
 
 METHODS = ("splade", "rerank", "hybrid", "colbert")
@@ -192,6 +195,18 @@ def process_group(base_dir, thread_group):
     g.close()
     for cli in g._clients:
         assert cli is None or cli.proc.poll() is not None
+
+
+@pytest.fixture(scope="module")
+def socket_group(base_dir, thread_group):
+    """Same shards, stream transport — the cross-transport parity
+    reference."""
+    dirs, bounds = load_group(base_dir / "shards")
+    g = build_shard_group(dirs, bounds, workers="process", mode="mmap",
+                          plaid_params=PLAID, multistage_params=MS,
+                          transport="socket")
+    yield g
+    g.close()
 
 
 def _batch(corpus, lo, hi):
@@ -366,6 +381,176 @@ def test_close_is_idempotent_and_reaps(base_dir):
             os.kill(pid, 0)
     with pytest.raises(ShardWorkerDied, match="closed"):
         g._call(0, "ping", {})
+
+
+# ---------------------------------------------------------------------------
+# transport: shm == socket parity, zero-copy accounting, coalescing,
+# crash-under-shm promptness + fresh-arena healing
+# ---------------------------------------------------------------------------
+
+def test_parity_across_transports(unsharded, thread_group,
+                                  process_group, socket_group,
+                                  small_corpus):
+    """shm == socket == thread workers == shards=1, bitwise, on a
+    mixed batch with per-query alpha — the transport must be
+    invisible to results."""
+    assert socket_group.transport == "socket"
+    methods = [METHODS[i % 4] for i in range(8)]
+    alphas = [None, 0.2, 0.8, None, 0.5, 0.4, None, 0.6]
+    kw = _batch(small_corpus, 0, 8)
+    ref = unsharded.search_batch(methods, alpha=alphas, k=12, **kw)
+    thr = thread_group.search_batch(methods, alpha=alphas, k=12, **kw)
+    shm = process_group.search_batch(methods, alpha=alphas, k=12, **kw)
+    sock = socket_group.search_batch(methods, alpha=alphas, k=12, **kw)
+    np.testing.assert_array_equal(np.asarray(ref[0]),
+                                  np.asarray(sock[0]))
+    _assert_bitwise(thr, sock)
+    _assert_bitwise(shm, sock)
+    # per-method singles ride the same contract on both channels
+    kw1 = _batch(small_corpus, 8, 11)
+    for method in METHODS:
+        _assert_bitwise(process_group.search_batch(method, k=9, **kw1),
+                        socket_group.search_batch(method, k=9, **kw1))
+
+
+def test_shm_default_engages_zero_copy(process_group, small_corpus):
+    """On a host with writable /dev/shm the default transport is shm:
+    tensors under ARENA_MIN_BYTES inline in the control frame (span
+    bookkeeping costs more than a small memcpy saves), big tensors
+    cross the ring without ever being serialized, and the copy split
+    is visible in transport_stats / worker_health / the pipeline
+    counters."""
+    from repro.serving.transport.shm import ARENA_MIN_BYTES
+
+    if default_shard_transport() != "shm":
+        pytest.skip("no writable /dev/shm on this host")
+    assert process_group.transport == "shm"
+    process_group.search_batch("rerank", k=8,
+                               **_batch(small_corpus, 0, 3))
+    ts = process_group.transport_stats()
+    assert ts["transport"] == "shm"
+    assert all(w["transport"] == "shm" for w in ts["per_worker"])
+    # the small-corpus rerank stays under the inline threshold: no
+    # arena spans, and inlined tensors never count as "copied" either
+    assert ts["total"]["bytes_copied"] == 0
+    # drive one over-threshold round trip through every worker: the
+    # request sel and the reply scores must both cross via the arena
+    q = np.asarray(small_corpus["q_embs"][:4])
+    q_valid = np.ones(q.shape[:2], bool)
+    sel = np.zeros((4, ARENA_MIN_BYTES // 8), np.int64)  # 2x threshold
+    for i in range(len(process_group._disp)):
+        out = process_group._disp[i].call(
+            "score_tokens", {"q": q, "q_valid": q_valid, "sel": sel})
+        assert out["scores"].shape == sel.shape
+    ts = process_group.transport_stats()
+    assert ts["total"]["bytes_zero_copy"] >= sel.nbytes
+    assert ts["total"]["bytes_copied"] == 0
+    for w in process_group.worker_health():
+        # every respawn bumps the arena generation in lockstep with
+        # the restart counter — stale locators can't resolve
+        assert (w["arena_generation"]
+                == process_group.restarts[w["shard"]] + 1)
+        assert w["rpc_bytes_zero_copy"] > 0
+    counters = process_group.pipeline_stats.snapshot()["counters"]
+    assert counters["rpc_dispatches"] > 0
+    assert counters["transport_bytes_zero_copy"] > 0
+
+
+def test_dispatcher_coalesces_on_busy_worker(process_group):
+    """Ops enqueued while the worker is busy ride the next flush as
+    one ``multi`` frame: one dispatch, per-op demux, FIFO stream
+    discipline intact."""
+    g = process_group
+    d = g._disp[0]
+    cli = g._ensure_worker(0)
+    before = g.pipeline_stats.snapshot()["counters"].get(
+        "rpc_coalesced_ops", 0)
+    s1 = d.enqueue("ping", {})          # idle worker → flushed at once
+    s2 = d.enqueue("health", {})        # busy → buffered
+    s3 = d.enqueue("ping", {})          # busy → buffered with s2
+    assert s1.rep is not None and s2.rep is None and s3.rep is None
+    assert d.wait(s2)["pid"] == cli.pid  # flush rides one multi frame
+    assert s2.rep is s3.rep and (s2.index, s3.index) == (0, 1)
+    assert d.wait(s3)["ready"] and d.wait(s1)["ready"]
+    after = g.pipeline_stats.snapshot()["counters"]["rpc_coalesced_ops"]
+    assert after == before + 1          # two ops saved one dispatch
+
+
+def test_multi_op_error_isolation(process_group):
+    """A bad op inside a coalesced multi fails alone — its co-batched
+    neighbours still resolve and the worker stays up."""
+    process_group._ensure_worker(1)
+    d = process_group._disp[1]
+    s1 = d.enqueue("ping", {})
+    s2 = d.enqueue("definitely_not_an_op", {})
+    s3 = d.enqueue("ping", {})
+    with pytest.raises(ShardWorkerError, match="unknown RPC op"):
+        d.wait(s2)
+    assert d.wait(s3)["ready"]          # neighbour unharmed
+    assert d.wait(s1)["ready"]
+    assert all(process_group.heartbeat())
+
+
+def test_shm_crash_surfaces_promptly_and_heals_with_fresh_arena(
+        base_dir, unsharded, small_corpus):
+    """SIGKILL on the shm transport must surface ``ShardWorkerDied``
+    promptly — both while the coordinator is *blocked on a ring slot*
+    (worker stopped, request ring full) and while it is *waiting on a
+    reply* — and each respawn heals with a fresh arena generation."""
+    dirs, bounds = load_group(base_dir / "shards")
+    g = ProcessShardGroup(dirs, bounds, mode="mmap", plaid_params=PLAID,
+                          multistage_params=MS, transport="shm",
+                          arena_bytes=1 << 20)  # 1 MiB ring: fills fast
+    killer = None
+    try:
+        assert g.transport == "shm"
+
+        # -- killed while the producer is blocked on ring space --------
+        cli = g._ensure_worker(0)
+        assert cli.arena_generation == 1
+        os.kill(cli.pid, signal.SIGSTOP)      # worker stops draining
+        big = {"q": np.zeros(100_000, np.float32)}     # 400 KB / call
+        reps = [cli.call_async("score_tokens", big) for _ in range(2)]
+        killer = threading.Timer(0.5, os.kill,
+                                 (cli.pid, signal.SIGKILL))
+        killer.start()
+        t0 = time.monotonic()
+        with pytest.raises(ShardWorkerDied):
+            cli.call_async("score_tokens", big)  # blocks on ring space
+        assert time.monotonic() - t0 < 15, "back-pressure wait hung"
+        assert all(r.event.is_set()
+                   and isinstance(r.error, ShardWorkerDied)
+                   for r in reps)
+
+        # -- killed while the coordinator waits on a reply -------------
+        cli1 = g._ensure_worker(1)
+        os.kill(cli1.pid, signal.SIGSTOP)     # reply can never finish
+        rep = cli1.call_async("splade", {
+            "term_ids": [small_corpus["q_term_ids"][0]],
+            "term_weights": [small_corpus["q_term_weights"][0]],
+            "k": 5})
+        os.kill(cli1.pid, signal.SIGKILL)
+        t0 = time.monotonic()
+        with pytest.raises(ShardWorkerDied):
+            cli1.wait(rep, timeout=60)
+        assert time.monotonic() - t0 < 15, "reply wait hung"
+
+        # -- heal: fresh arena generation per respawn ------------------
+        for i in (0, 1):
+            with pytest.raises(ShardWorkerDied, match="healing"):
+                g._call(i, "ping", {})
+            assert g._call(i, "ping", {})["ready"]
+            assert g.restarts[i] == 1
+            assert g._clients[i].arena_generation == 2
+        kw = _batch(small_corpus, 0, 4)
+        got = g.search_batch("hybrid", k=10, **kw)
+        ref = unsharded.search_batch("hybrid", k=10, **kw)
+        np.testing.assert_array_equal(np.asarray(ref[0]),
+                                      np.asarray(got[0]))
+    finally:
+        if killer is not None:
+            killer.cancel()
+        g.close()
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,412 @@
+"""Layered shard transport: codec locators, fallback-codec roundtrips
+(parametrized + property-based), segment-gather framing, shared-memory
+ring arena mechanics (alloc/wrap/release, back-pressure, liveness,
+generations), and channel-level send/recv on both transports."""
+
+import socket
+import struct
+import threading
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.serving.transport import (
+    ArenaDead,
+    SegmentSink,
+    ShmArena,
+    ShmChannel,
+    StreamChannel,
+    arena_path,
+    decode,
+    encode,
+    frame_buffers,
+    parse_payload,
+    sendmsg_gather,
+)
+from repro.serving.transport import codec as tcodec
+from repro.serving.transport.shm import _ALIGN, _align
+
+# ---------------------------------------------------------------------------
+# fallback codec: explicit edge-case coverage (runs without hypothesis)
+# ---------------------------------------------------------------------------
+
+_EDGE_ARRAYS = [
+    np.array(3.5, dtype=np.float32),                  # 0-d
+    np.zeros((), dtype=np.int64),                     # 0-d int
+    np.arange(24, dtype=np.float32).reshape(4, 6)[::2, ::3],  # strided
+    np.arange(10)[::-1],                              # negative stride
+    np.array([True, False, True]),                    # bool
+    np.arange(6, dtype=np.float16),                   # float16
+    np.arange(-3, 3, dtype=np.int8),                  # int8
+    np.zeros((0,), dtype=np.float64),                 # empty 1-d
+    np.zeros((3, 0, 2), dtype=np.int32),              # empty mid-axis
+]
+
+
+def _roundtrip(val, force):
+    got = decode(encode(val, force_fallback=force))
+    _assert_equal(val, got)
+
+
+def _assert_equal(a, b):
+    if isinstance(a, np.ndarray):
+        assert isinstance(b, np.ndarray)
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(a, b)
+    elif isinstance(a, dict):
+        assert set(a) == set(b)
+        for k in a:
+            _assert_equal(a[k], b[k])
+    elif isinstance(a, (list, tuple)):
+        assert len(a) == len(b)
+        for x, y in zip(a, b):
+            _assert_equal(x, y)
+    else:
+        assert a == b
+
+
+@pytest.mark.parametrize("force", [False, True],
+                         ids=["msgpack", "fallback"])
+@pytest.mark.parametrize("idx", range(len(_EDGE_ARRAYS)))
+def test_codec_edge_arrays(force, idx):
+    arr = _EDGE_ARRAYS[idx]
+    _roundtrip({"a": arr, "nested": [arr, {"x": arr}]}, force)
+
+
+@pytest.mark.parametrize("force", [False, True],
+                         ids=["msgpack", "fallback"])
+def test_codec_deeply_nested(force):
+    val = {"leaf": None}
+    for i in range(40):
+        val = {"level": i, "inner": val, "sib": [i, str(i), float(i)]}
+    _roundtrip(val, force)
+
+
+def test_codec_length_guard_over_4gib():
+    """4-byte count/length fields must refuse values over 4 GiB —
+    a silent struct wrap would desynchronise the stream."""
+    with pytest.raises(ValueError, match="4 GiB"):
+        tcodec._check_u32((4 << 30) + 1, "bytes")
+    assert tcodec._check_u32(4096, "bytes") == 4096
+
+    class _FakeBig(bytes):
+        def __len__(self):
+            return 5 << 30
+
+    with pytest.raises(ValueError, match="4 GiB"):
+        encode({"b": _FakeBig()}, force_fallback=True)
+
+
+def test_codec_locator_roundtrip_via_sink_resolver():
+    """The layering seam: a sink replaces tensor bytes with locators
+    at encode time; a resolver materialises them at decode time."""
+    stash = {}
+
+    class Sink:
+        def put(self, arr):
+            key = len(stash)
+            stash[key] = np.ascontiguousarray(arr)
+            return ("arena", 7, key, 0, arr.nbytes)
+
+    def resolver(kind, dtype_str, shape, fields):
+        assert kind == "arena" and fields[0] == 7
+        return stash[fields[1]].reshape(shape)
+
+    big = np.random.default_rng(0).random((50, 8)).astype(np.float32)
+    msg = {"big": big, "tiny": 3}
+    for force in (False, True):
+        control = tcodec.encode_control(msg, Sink(),
+                                        force_fallback=force)
+        assert len(control) < big.nbytes       # bytes did NOT inline
+        got = tcodec.decode_control(control, resolver)
+        np.testing.assert_array_equal(got["big"], big)
+        # without a resolver, a locator-bearing message must refuse to
+        # half-decode
+        with pytest.raises(ValueError, match="locator"):
+            tcodec.decode_control(control, None)
+
+
+# ---------------------------------------------------------------------------
+# property-based roundtrips (skipped when hypothesis is absent)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.recursive(
+    st.one_of(
+        st.none(), st.booleans(),
+        st.integers(min_value=-2 ** 62, max_value=2 ** 62),
+        st.floats(allow_nan=False, width=64), st.text(max_size=16),
+        st.binary(max_size=24)),
+    lambda leaf: st.one_of(
+        st.lists(leaf, max_size=4),
+        st.dictionaries(st.text(max_size=6), leaf, max_size=4)),
+    max_leaves=16))
+def test_fallback_codec_property_nested(value):
+    _roundtrip(value, True)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.sampled_from(["|b1", "<f2", "|i1", "<f4", "<i8", "<u2"]),
+       st.lists(st.integers(min_value=0, max_value=4), min_size=0,
+                max_size=3),
+       st.integers(min_value=0, max_value=2 ** 31),
+       st.booleans())
+def test_fallback_codec_property_ndarray(dtype_str, shape, seed,
+                                         transpose):
+    rng = np.random.default_rng(seed)
+    arr = rng.integers(-100, 100,
+                       size=shape).astype(np.dtype(dtype_str))
+    if transpose and arr.ndim >= 2:
+        arr = arr.T                             # non-contiguous
+    _roundtrip({"arr": arr}, True)
+
+
+# ---------------------------------------------------------------------------
+# framing: segment gather, multi-part frames
+# ---------------------------------------------------------------------------
+
+def test_segment_sink_declines_tiny_and_copies_strided():
+    sink = SegmentSink(min_bytes=64)
+    assert sink.put(np.arange(3, dtype=np.int8)) is None   # tiny
+    strided = np.arange(64, dtype=np.float64).reshape(8, 8)[:, ::2]
+    loc = sink.put(strided)
+    assert loc == ("seg", 0, strided.nbytes)
+    contig = np.arange(32, dtype=np.float64)
+    assert sink.put(contig) == ("seg", strided.nbytes, contig.nbytes)
+    assert sink.nbytes == strided.nbytes + contig.nbytes
+
+
+def test_frame_gather_roundtrip_over_socketpair():
+    """Multi-part frame: control + segments gathered via sendmsg on one
+    side, parsed back to bitwise-equal arrays on the other."""
+    a, b = socket.socketpair()
+    try:
+        sink = SegmentSink()
+        msg = {"q": np.random.default_rng(1).random(
+                   (37, 16)).astype(np.float32),
+               "sel": np.arange(100, dtype=np.int64).reshape(4, 25)[:, ::5],
+               "small": np.int32(7), "tag": "x"}
+        control = tcodec.encode_control(msg, sink)
+        bufs = frame_buffers(control, sink)
+        n = sendmsg_gather(a, bufs)
+        raw = b""
+        while len(raw) < n:
+            raw += b.recv(n - len(raw))
+        assert len(raw) == n
+        (length,) = struct.unpack(">Q", raw[:8])
+        assert length == len(raw) - 8
+        got = parse_payload(raw[8:])
+        np.testing.assert_array_equal(got["q"], msg["q"])
+        np.testing.assert_array_equal(got["sel"], msg["sel"])
+        assert got["small"] == 7 and got["tag"] == "x"
+    finally:
+        a.close()
+        b.close()
+
+
+def test_legacy_single_part_frames_still_decode():
+    from repro.serving.transport import recv_msg, send_msg
+
+    a, b = socket.socketpair()
+    try:
+        msg = {"op": "ping", "payload": {"x": np.arange(5)}}
+        send_msg(a, msg)
+        got = recv_msg(b, timeout=5)
+        np.testing.assert_array_equal(got["payload"]["x"],
+                                      msg["payload"]["x"])
+    finally:
+        a.close()
+        b.close()
+
+
+# ---------------------------------------------------------------------------
+# shm ring arena
+# ---------------------------------------------------------------------------
+
+def _make_arena(tmp_path, ring_bytes=1 << 20, generation=1):
+    path = str(tmp_path / f"test-g{generation}.arena")
+    return ShmArena.create(path, ring_bytes, generation)
+
+
+def test_ring_put_take_release_and_wrap(tmp_path):
+    ar = _make_arena(tmp_path)
+    ring = ar.ring(0)
+    rng = np.random.default_rng(2)
+    # push far more bytes than the ring holds; immediate release keeps
+    # it flowing and exercises the wrap-with-pad path many times over
+    for i in range(400):
+        arr = rng.random(1 + (i * 37) % 3000).astype(np.float64)
+        kind, gen, start, span, nbytes = ring.put(arr, timeout_s=5)
+        assert kind == "arena" and gen == 1 and nbytes == arr.nbytes
+        assert span % _ALIGN == 0 and span >= _align(max(1, nbytes))
+        view = ring.take(start, span, nbytes, arr.dtype.str,
+                         list(arr.shape))
+        np.testing.assert_array_equal(view, arr)
+        assert not view.flags.writeable
+        del view                       # finalizer releases the span
+    assert ring.used_bytes() == 0
+    ar.close()
+
+
+def test_ring_out_of_order_release(tmp_path):
+    ar = _make_arena(tmp_path)
+    ring = ar.ring(1)
+    locs = [ring.put(np.arange(100, dtype=np.int64), timeout_s=5)
+            for _ in range(4)]
+    views = [ring.take(l[2], l[3], l[4], "<i8", [100]) for l in locs]
+    used = ring.used_bytes()
+    assert used > 0
+    del views[2]                       # hole: tail cannot advance yet
+    assert ring.used_bytes() == used
+    del views[0]                       # frees 0, frontier stops at 1
+    assert ring.used_bytes() < used
+    del views
+    assert ring.used_bytes() == 0
+    ar.close()
+
+
+def test_ring_backpressure_times_out_as_arena_dead(tmp_path):
+    ar = _make_arena(tmp_path, ring_bytes=1 << 20)
+    ring = ar.ring(0)
+    big = np.zeros(200_000, dtype=np.float32)      # 800 KB of 1 MB
+    loc = ring.put(big, timeout_s=5)
+    view = ring.take(loc[2], loc[3], loc[4], "<f4", [200_000])
+    t0 = time.monotonic()
+    with pytest.raises(ArenaDead, match="timed out"):
+        ring.put(big, timeout_s=0.2)
+    assert time.monotonic() - t0 < 2.0             # prompt, not hung
+    del view
+    assert ring.put(big, timeout_s=5)[0] == "arena"   # space again
+    ar.close()
+
+
+def test_ring_backpressure_liveness_aborts_promptly(tmp_path):
+    ar = _make_arena(tmp_path, ring_bytes=1 << 20)
+    ring = ar.ring(0)
+    big = np.zeros(200_000, dtype=np.float32)
+    loc = ring.put(big, timeout_s=5)
+    view = ring.take(loc[2], loc[3], loc[4], "<f4", [200_000])  # noqa: F841
+    flag = {"dead": False}
+
+    def liveness():
+        return "peer exited" if flag["dead"] else None
+
+    def killer():
+        time.sleep(0.1)
+        flag["dead"] = True
+
+    threading.Thread(target=killer, daemon=True).start()
+    t0 = time.monotonic()
+    with pytest.raises(ArenaDead, match="peer exited"):
+        ring.put(big, timeout_s=30, liveness=liveness)
+    # the 30 s deadline was NOT what fired — liveness cut it short
+    assert time.monotonic() - t0 < 5.0
+    ar.close()
+
+
+def test_arena_open_validates_and_carries_generation(tmp_path):
+    ar = _make_arena(tmp_path, generation=3)
+    peer = ShmArena.open(ar.path)
+    assert peer.generation == 3
+    assert peer.ring_bytes == ar.ring_bytes
+    loc = ar.ring(0).put(np.arange(64, dtype=np.int32), timeout_s=5)
+    view = peer.ring(0).take(loc[2], loc[3], loc[4], "<i4", [64])
+    np.testing.assert_array_equal(view, np.arange(64, dtype=np.int32))
+    bad = tmp_path / "junk.arena"
+    bad.write_bytes(b"\x00" * 4096)
+    with pytest.raises(ValueError, match="not a shard arena"):
+        ShmArena.open(str(bad))
+    del view
+    ar.unlink()
+    ar.close()
+    peer.close()
+
+
+def test_oversize_array_falls_back_to_segment(tmp_path):
+    """An array bigger than half the ring must never enter the
+    back-pressure loop (it could starve forever) — it rides the socket
+    frame as a segment instead."""
+    from repro.serving.transport import ArenaSink
+
+    ar = _make_arena(tmp_path, ring_bytes=1 << 20)
+    seg = SegmentSink()
+    sink = ArenaSink(ar.ring(0), seg, timeout_s=1)
+    huge = np.zeros(300_000, dtype=np.float32)       # 1.2 MB > cap/2
+    loc = sink.put(huge)
+    assert loc is not None and loc[0] == "seg"
+    assert sink.put(np.arange(4, dtype=np.int8)) is None   # tiny inline
+    # under ARENA_MIN_BYTES the span bookkeeping costs more than the
+    # memcpy it saves — mid-size arrays inline in the control frame
+    assert sink.put(np.zeros(1000, dtype=np.float32)) is None
+    normal = np.zeros(32768, dtype=np.float32)       # 128 KB < cap/2
+    assert sink.put(normal)[0] == "arena"
+    assert sink.arena_bytes == normal.nbytes
+    ar.close()
+
+
+# ---------------------------------------------------------------------------
+# channels
+# ---------------------------------------------------------------------------
+
+def _shm_pair(tmp_path, ring_bytes=4 << 20):
+    path = arena_path(0, 1, str(tmp_path))
+    ar = ShmArena.create(path, ring_bytes, 1)
+    peer = ShmArena.open(path)
+    ar.unlink()
+    a, b = socket.socketpair()
+    coord = ShmChannel(a, ar)
+    work = ShmChannel(b, peer, tx_ring=1, rx_ring=0)
+    return coord, work
+
+
+@pytest.mark.parametrize("kind", ["socket", "shm"])
+def test_channel_roundtrip_and_copy_accounting(tmp_path, kind):
+    if kind == "socket":
+        a, b = socket.socketpair()
+        tx, rx = StreamChannel(a), StreamChannel(b)
+    else:
+        tx, rx = _shm_pair(tmp_path)
+    try:
+        big = np.random.default_rng(3).random(
+            (2048, 32)).astype(np.float32)           # 256 KB: over the
+        # inline threshold, so the shm channel must take the ring path
+        msg = {"op": "score", "payload": {"q": big,
+                                          "k": 10, "alpha": 0.5}}
+        t = threading.Thread(target=tx.send, args=(msg,))
+        t.start()
+        got = rx.recv(timeout=10)
+        t.join(timeout=10)
+        np.testing.assert_array_equal(got["payload"]["q"], big)
+        assert got["payload"]["k"] == 10
+        ts = tx.stats()
+        if kind == "socket":
+            assert ts["bytes_copied"] >= big.nbytes
+            assert ts["bytes_zero_copy"] == 0
+            assert ts["bytes_sent"] >= big.nbytes
+        else:
+            assert ts["bytes_zero_copy"] >= big.nbytes
+            assert ts["bytes_copied"] == 0
+            # the socket carried only the control frame
+            assert ts["bytes_sent"] < 4096
+    finally:
+        tx.close()
+        rx.close()
+
+
+def test_shm_channel_rejects_stale_generation(tmp_path):
+    coord, work = _shm_pair(tmp_path)
+    try:
+        coord.send({"x": np.arange(32768, dtype=np.float64)})
+        # corrupt the locator's generation by patching the receiver's
+        # arena generation (as after a respawn landed a fresh arena)
+        work.arena.generation = 2
+        for ring in work.arena._rings:
+            ring.generation = 2
+        with pytest.raises(ArenaDead, match="generation"):
+            work.recv(timeout=5)
+    finally:
+        coord.close()
+        work.close()
