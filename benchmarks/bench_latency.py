@@ -522,6 +522,202 @@ def measure_worker_sweep(name: str = "marco", method: str = "hybrid",
     return out
 
 
+def measure_chaos_sweep(name: str = "marco", method: str = "hybrid",
+                        n_queries: int = 120, n_shards: int = 2,
+                        n_replicas: int = 2, quick: bool = False):
+    """Fault tolerance of the replicated fleet under live load: a
+    2-shard × 2-replica topology of **remote** standalone workers
+    (TCP endpoints, each an independently killable process), driven by
+    Poisson load while a :class:`ChaosSchedule` SIGKILLs one replica
+    of every shard mid-run and restarts it at the same port.
+
+    Asserted per config: **zero failed requests** (failover absorbs
+    the kills) and post-heal **bitwise parity** with the healthy
+    baseline. Configs: ``clean`` (kill choreography only) and
+    ``faulty`` (a seeded :class:`FaultSpec` additionally drops/delays/
+    truncates/corrupts frames on every coordinator channel — per-op
+    deadlines turn drops into sibling retries). ``quick`` runs just
+    the faulty config (the CI chaos smoke). The full sweep then kills
+    *every* replica of one shard under an ``allow_degraded``
+    coordinator and asserts flagged partial answers + recovery parity.
+
+    Recorded per config: p50/p99, failover/hedge/heal/degraded
+    counters and the injected-fault census — the availability numbers
+    ``bench_gate`` tracks alongside the latency ones."""
+    import dataclasses as dc
+    from concurrent.futures import ThreadPoolExecutor
+
+    from benchmarks.common import _CACHE, DATASETS, sharded_dataset
+    from repro.core.multistage import MultiStageParams
+    from repro.core.plaid import PlaidParams
+    from repro.core.sharded import ProcessShardGroup
+    from repro.index.sharding import shard_boundaries, split_index_tree
+    from repro.serving.loadgen import (ChaosAction, ChaosSchedule,
+                                       run_poisson_load)
+    from repro.serving.worker import spawn_standalone
+
+    corpus, _ = sharded_dataset(name, max(n_shards, 2))
+    cfg = DATASETS[name]
+    _, base = _CACHE[(name, "mmap", "serve_layout")]
+    group_dir = split_index_tree(base, n_shards,
+                                 group_dir=base / f"shards{n_shards}")
+    shard_dirs = [group_dir / str(i) for i in range(n_shards)]
+    boundaries = shard_boundaries(cfg.n_docs, n_shards)
+    plaid = PlaidParams(nprobe=4, candidate_cap=1024, ndocs=256, k=100)
+    ms = MultiStageParams(first_k=200, k=100, alpha=0.3)
+
+    def spawn(shard: int, port: int = 0):
+        return spawn_standalone(
+            shard_dirs[shard], shard, port=port,
+            plaid_params=dc.asdict(plaid), ms_params=dc.asdict(ms))
+
+    # the fleet: one standalone worker per (shard, replica), spawned
+    # concurrently (each pays its own jax import + index mmap)
+    slots = [(i, r) for i in range(n_shards) for r in range(n_replicas)]
+    with ThreadPoolExecutor(len(slots)) as tp:
+        spawned = list(tp.map(lambda s: spawn(s[0]), slots))
+    workers = {s: {"proc": p, "port": port}
+               for s, (p, port) in zip(slots, spawned)}
+    endpoints = [[f"127.0.0.1:{workers[(i, r)]['port']}"
+                  for r in range(n_replicas)] for i in range(n_shards)]
+
+    def kill(shard: int, rid: int = 0):
+        w = workers[(shard, rid)]
+        w["proc"].kill()
+        w["proc"].wait(timeout=10)
+
+    def restart(shard: int, rid: int = 0):
+        w = workers[(shard, rid)]
+        w["proc"], w["port"] = spawn(shard, w["port"])
+
+    def coordinator(**kw):
+        return ProcessShardGroup(
+            shard_dirs, boundaries, plaid_params=plaid,
+            multistage_params=ms, replicas=0,
+            replica_endpoints=endpoints, op_deadline_ms=2000.0,
+            hedge_factor=4.0, hedge_floor_ms=250.0, **kw)
+
+    def probe_pids(srv, n=8):
+        return [srv.submit(r).result(timeout=300).pids
+                for r in _requests(corpus, method, n)]
+
+    n_q = 40 if quick else n_queries
+    reqs = _requests(corpus, method, n_q)
+    fault_str = "seed=7,drop=0.02,truncate=0.01,corrupt=0.01,delay=5:0.05"
+    configs = ([("faulty", fault_str)] if quick
+               else [("clean", None), ("faulty", fault_str)])
+    out = {}
+    try:
+        for key, spec in configs:
+            retr = coordinator(fault_spec=spec)
+            srv = RetrievalServer(ServeEngine(retr, own_retriever=True),
+                                  n_threads=2)
+            srv.start()
+            try:
+                for r in _requests(corpus, method, 8):     # warm
+                    srv.submit(r).result(timeout=300)
+                baseline = probe_pids(srv)
+                t = [srv.submit(r).result(timeout=300).service_time
+                     for r in _requests(corpus, method, 8)]
+                qps = 0.5 / float(np.mean(t))     # half of capacity
+                dur = n_q / qps
+                chaos = ChaosSchedule(
+                    [ChaosAction(0.25 * dur, lambda i=i: kill(i),
+                                 f"kill:shard{i}")
+                     for i in range(n_shards)]
+                    + [ChaosAction(0.55 * dur, lambda i=i: restart(i),
+                                   f"restart:shard{i}")
+                       for i in range(n_shards)]).start()
+                res = run_poisson_load(srv, reqs, qps, seed=13,
+                                       tolerate_failures=True)
+                chaos.join(timeout=120)
+                assert not chaos.errors, chaos.errors
+                # the whole point: a SIGKILL per shard mid-run costs
+                # zero requests — siblings absorb every failed op
+                assert res.failed == 0, (
+                    key, res.failed, [repr(e) for e in res.errors])
+                time.sleep(1.0)       # let breakers on the restarted
+                probe = probe_pids(srv)           # replicas cool off
+                for a, b in zip(baseline, probe):
+                    np.testing.assert_array_equal(a, b)
+                counters = retr.pipeline_stats.snapshot()["counters"]
+                faults = {}
+                for ts in retr.transport_stats()["per_worker"]:
+                    for fk, v in ts.get("faults_injected", {}).items():
+                        faults[fk] = faults.get(fk, 0) + v
+                out[key] = {
+                    "n": n_q, "failed": int(res.failed),
+                    "offered_qps": qps,
+                    "p50_ms": res.p50 * 1e3, "p99_ms": res.p99 * 1e3,
+                    "chaos_fired": list(chaos.fired),
+                    "failover_retries": counters.get(
+                        "failover_retries", 0),
+                    "hedges": counters.get("hedges", 0),
+                    "replica_heals": counters.get("replica_heals", 0),
+                    "degraded_batches": counters.get(
+                        "degraded_batches", 0),
+                    "faults_injected": faults}
+                print(f"chaos[{key:6s}] failed={res.failed}/{n_q}  "
+                      f"p99={out[key]['p99_ms']:7.1f}ms  "
+                      f"failovers={out[key]['failover_retries']}  "
+                      f"heals={out[key]['replica_heals']}  "
+                      f"faults={faults}")
+            finally:
+                srv.stop()
+                retr.close()
+
+        if not quick:
+            # every replica of shard 1 down → flagged partial answers
+            # over the survivors; restart → bitwise recovery
+            retr = coordinator(allow_degraded=True)
+            srv = RetrievalServer(ServeEngine(retr, own_retriever=True),
+                                  n_threads=1)
+            srv.start()
+            try:
+                baseline = probe_pids(srv)
+                for rid in range(n_replicas):
+                    kill(1, rid)
+                degraded = [srv.submit(r).result(timeout=300)
+                            for r in _requests(corpus, method, 8)]
+                assert all(d.degraded and tuple(d.missing_shards) == (1,)
+                           for d in degraded), degraded
+                for rid in range(n_replicas):
+                    restart(1, rid)
+                deadline = time.monotonic() + 60
+                healed = degraded
+                while (time.monotonic() < deadline
+                       and any(h.degraded for h in healed)):
+                    time.sleep(0.5)
+                    healed = [srv.submit(r).result(timeout=300)
+                              for r in _requests(corpus, method, 8)]
+                assert not any(h.degraded for h in healed), healed
+                for a, h in zip(baseline, healed):
+                    np.testing.assert_array_equal(a, h.pids)
+                counters = retr.pipeline_stats.snapshot()["counters"]
+                out["degraded"] = {
+                    "missing_shards": [1],
+                    "degraded_batches": counters.get(
+                        "degraded_batches", 0),
+                    "degraded_shard_ops": counters.get(
+                        "degraded_shard_ops", 0),
+                    "recovered": True}
+                print(f"chaos[degraded] batches="
+                      f"{out['degraded']['degraded_batches']} "
+                      f"(shard 1 missing) → recovered bitwise")
+            finally:
+                srv.stop()
+                retr.close()
+    finally:
+        for w in workers.values():
+            w["proc"].kill()
+        for w in workers.values():
+            try:
+                w["proc"].wait(timeout=10)
+            except Exception:
+                pass
+    return out
+
+
 def main(quick: bool = False):
     table = {"marco": measure("marco", n_queries=40 if quick else 60)}
     if not quick:
@@ -579,8 +775,20 @@ if __name__ == "__main__":
                          "QPS, p99, per-worker RSS + segment bytes, "
                          "transport copy split, RPC dispatch counts) "
                          "and record it into the bench JSON")
+    ap.add_argument("--chaos-sweep", action="store_true",
+                    help="run only the fault-tolerance sweep: a "
+                         "2-shard x 2-replica remote-worker fleet "
+                         "under Poisson load with SIGKILL + seeded "
+                         "fault-injection choreography (asserts zero "
+                         "failed requests and post-heal parity; "
+                         "--quick = the faulty config only, the CI "
+                         "chaos smoke) and record it into the bench "
+                         "JSON")
     args = ap.parse_args()
-    if args.worker_sweep:
+    if args.chaos_sweep:
+        sweep = measure_chaos_sweep("marco", quick=args.quick)
+        save("latency_chaos_sweep", {"marco": {"chaos_sweep": sweep}})
+    elif args.worker_sweep:
         sweep = measure_worker_sweep("marco")
         save("latency_worker_sweep", {"marco": {"worker_sweep": sweep}})
     elif args.shard_sweep:

@@ -139,6 +139,11 @@ def run_bench() -> dict:
             f"({crc} vs {pids_crc})")
         ts = pg.transport_stats()
         counters = pg.pipeline_stats.snapshot()["counters"]
+        # a healthy single-replica bench must never have needed the
+        # fleet machinery: any failover/hedge/degraded activity here
+        # means workers died (or stalled) during the gate run
+        assert counters.get("degraded_batches", 0) == 0, counters
+        assert counters.get("failover_retries", 0) == 0, counters
         process_workers = {
             "qps": pres.achieved_qps, "p99_ms": pres.p99 * 1e3,
             "transport": ts["transport"],
@@ -146,7 +151,11 @@ def run_bench() -> dict:
             "bytes_copied": int(ts["total"]["bytes_copied"]),
             "rpc_dispatches": int(counters.get("rpc_dispatches", 0)),
             "rpc_coalesced_ops": int(
-                counters.get("rpc_coalesced_ops", 0))}
+                counters.get("rpc_coalesced_ops", 0)),
+            "failover_retries": int(counters.get("failover_retries", 0)),
+            "hedges": int(counters.get("hedges", 0)),
+            "replica_heals": int(counters.get("replica_heals", 0)),
+            "degraded_batches": int(counters.get("degraded_batches", 0))}
     finally:
         srv.stop()
         pg.close()
@@ -243,7 +252,10 @@ def main(argv=None):
               f"({pw['transport']}: zero_copy={pw['bytes_zero_copy']}B "
               f"copied={pw['bytes_copied']}B "
               f"dispatches={pw['rpc_dispatches']} "
-              f"coalesced={pw['rpc_coalesced_ops']})")
+              f"coalesced={pw['rpc_coalesced_ops']}) "
+              f"failovers={pw['failover_retries']} "
+              f"hedges={pw['hedges']} "
+              f"degraded={pw['degraded_batches']}")
 
     if args.update_baseline or not BASELINE_JSON.exists():
         BASELINE_JSON.write_text(json.dumps(metrics, indent=1))

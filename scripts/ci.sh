@@ -7,6 +7,10 @@
 #   ci.sh kernels      Pallas kernel parity in interpret mode
 #   ci.sh smoke        serving-stack smokes: pipelined, sharded, and
 #                      multi-process shard workers, end-to-end
+#   ci.sh chaos        fault-tolerance smoke: 2-shard x 2-replica
+#                      remote-worker fleet under load with seeded fault
+#                      injection + SIGKILL mid-run (zero failed
+#                      requests, post-heal parity)
 #   ci.sh bench-gate   pinned-seed mini benchmark vs committed baseline
 #   ci.sh all          every stage above, in order (tier-1 default)
 #
@@ -99,6 +103,16 @@ stage_smoke() {
         --pipeline-depth 2 --max-batch 8 --qps 100 --n 24
 }
 
+stage_chaos() {
+    # chaos smoke: a 2-shard x 2-replica fleet of standalone workers
+    # on remote TCP endpoints, Poisson load with a seeded FaultyChannel
+    # schedule (drops/delays/truncated/corrupt frames) while a timed
+    # choreography SIGKILLs one replica of every shard mid-run and
+    # restarts it — the sweep asserts zero failed requests and
+    # post-heal bitwise parity with the healthy baseline
+    python -m benchmarks.bench_latency --chaos-sweep --quick
+}
+
 stage_bench_gate() {
     python scripts/bench_gate.py
 }
@@ -111,16 +125,18 @@ case "$cmd" in
     unit)       run_stage unit stage_unit "$@" ;;
     kernels)    run_stage kernels stage_kernels ;;
     smoke)      run_stage smoke stage_smoke ;;
+    chaos)      run_stage chaos stage_chaos ;;
     bench-gate) run_stage bench-gate stage_bench_gate ;;
     all)
         run_stage collect stage_collect
         run_stage unit stage_unit "$@"
         run_stage kernels stage_kernels
         run_stage smoke stage_smoke
+        run_stage chaos stage_chaos
         run_stage bench-gate stage_bench_gate
         ;;
     *)
-        echo "usage: ci.sh [collect|unit|kernels|smoke|bench-gate|all]" >&2
+        echo "usage: ci.sh [collect|unit|kernels|smoke|chaos|bench-gate|all]" >&2
         exit 2
         ;;
 esac

@@ -421,7 +421,39 @@ class MultiStageRetriever:
         cb = self.build_batch(method, q_embs, term_ids, term_weights,
                               alphas, k, n)
         cb = self.compile_plan(method).run(cb, stats=self.pipeline_stats)
+        self._note_degraded(cb.state.get("missing_shards", ()))
         return cb.pids, cb.scores
+
+    # ------------------------------------------------------------------
+    # degraded-answer bookkeeping (sharded process groups only; the
+    # in-process backends never produce a ``missing_shards`` state)
+    # ------------------------------------------------------------------
+    @property
+    def _degraded_tls(self):
+        # lazy: the sharded subclasses build themselves without calling
+        # this __init__
+        return self.__dict__.setdefault("_degraded_tls_obj",
+                                        threading.local())
+
+    def _note_degraded(self, missing):
+        """Record (per serving thread) that the batch just searched was
+        answered without these shards; mixed-method batches union their
+        groups' notes."""
+        if not missing:
+            return
+        tls = self._degraded_tls
+        prior = getattr(tls, "missing", ())
+        if not prior:
+            self.pipeline_stats.counter("degraded_batches")
+        tls.missing = tuple(sorted(set(prior) | set(missing)))
+
+    def last_missing_shards(self) -> tuple:
+        """Missing-shard ids of this thread's last ``search_batch``
+        (empty when it was a full answer); reading clears the note."""
+        tls = self._degraded_tls
+        out = getattr(tls, "missing", ())
+        tls.missing = ()
+        return out
 
     def _alpha_array(self, alpha, n: int) -> np.ndarray:
         if alpha is None:

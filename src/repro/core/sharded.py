@@ -53,6 +53,7 @@ from __future__ import annotations
 import os
 import pathlib
 import threading
+import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Optional, Sequence
 
@@ -147,34 +148,70 @@ def scatter_scores(out: np.ndarray, cols: np.ndarray,
 # coordinator-side merge and fuse, so the two backends cannot drift:
 # given byte-identical per-shard states, the merged ranking is
 # byte-identical by construction.
+#
+# Degraded mode: under ``allow_degraded`` a shard whose every replica
+# is down contributes a ``{"missing": True}`` state *in its slot* (the
+# shard axis stays positional — downstream offsets indexing depends on
+# it). The merges skip missing slots and record the missing shard ids
+# in ``cb.state["missing_shards"]``, so a partial answer is explicit
+# all the way to the server response. A batch with zero surviving
+# shards still fails (there is nothing to merge).
 # ---------------------------------------------------------------------------
+
+def _live_shard_states(shard_states):
+    """Split the shard axis into surviving states (with their shard
+    index) and the missing shard ids; raises when nothing survived."""
+    live = [(i, s) for i, s in enumerate(shard_states)
+            if not s.get("missing")]
+    missing = tuple(i for i, s in enumerate(shard_states)
+                    if s.get("missing"))
+    if not live:
+        from repro.serving.transport import ShardUnavailable
+        raise ShardUnavailable(
+            "every shard of the batch is unavailable — no partial "
+            "answer to degrade to")
+    return live, missing
+
+
+def _note_missing(cb, missing):
+    """Record (union) missing shard ids on the batch state; a no-op on
+    the healthy path so thread-backend state stays byte-identical."""
+    if not missing:
+        return cb
+    prior = cb.state.get("missing_shards", ())
+    return cb.with_state(
+        missing_shards=tuple(sorted(set(prior) | set(missing))))
+
 
 def _concat_shard_topk(shard_states):
     """Concatenate per-shard stage-1 results (already remapped to
-    global pids) along the candidate axis."""
-    pids = np.concatenate([s["pids"] for s in shard_states], axis=1)
-    scores = np.concatenate([s["scores"] for s in shard_states], axis=1)
-    return pids, scores
+    global pids) along the candidate axis, skipping missing shards."""
+    live, missing = _live_shard_states(shard_states)
+    pids = np.concatenate([s["pids"] for _, s in live], axis=1)
+    scores = np.concatenate([s["scores"] for _, s in live], axis=1)
+    return pids, scores, missing
 
 
 def fuse_splade_state(cb, first_k: int):
     """Terminal fuse for the splade-only method: merge the per-shard
     stage-1 lists and truncate to the request's k."""
-    pids, scores = _concat_shard_topk(cb.shard_states)
+    pids, scores, missing = _concat_shard_topk(cb.shard_states)
     pids_b, s_scores = merge_topk(pids, scores, first_k, pad_score=0.0)
-    return cb.evolve(pids=pids_b[:, :cb.k], scores=s_scores[:, :cb.k])
+    cb = cb.evolve(pids=pids_b[:, :cb.k], scores=s_scores[:, :cb.k])
+    return _note_missing(cb, missing)
 
 
 def merge_stage1_state(cb, first_k: int):
     """(B, first_k) global candidates — identical content and order to
     the single index's ``run_splade_batch`` — plus the padded query
     batch the downstream gather/score stages consume."""
-    pids, scores = _concat_shard_topk(cb.shard_states)
+    pids, scores, missing = _concat_shard_topk(cb.shard_states)
     pids_b, s_scores = merge_topk(pids, scores, first_k, pad_score=0.0)
     q, q_valid = pad_query_batch_host(cb.q_embs)
     B, q, q_valid, gp = _pad_batch_rows(q, q_valid, pids_b)
-    return cb.with_state(pids_b=pids_b, s_scores=s_scores,
-                         q=q, q_valid=q_valid, B=B, gp=gp)
+    return _note_missing(
+        cb.with_state(pids_b=pids_b, s_scores=s_scores,
+                      q=q, q_valid=q_valid, B=B, gp=gp), missing)
 
 
 def fuse_scatter_rerank(cb, method: str, normalizer: str):
@@ -185,23 +222,34 @@ def fuse_scatter_rerank(cb, method: str, normalizer: str):
     st = cb.state
     pids_b = st["pids_b"]
     c_scores = np.full(pids_b.shape, -np.inf, np.float32)
-    for s in cb.shard_states:
+    missing = []
+    for i, s in enumerate(cb.shard_states):
+        if s.get("missing"):
+            missing.append(i)
+            continue
         scatter_scores(c_scores, s["cols"][:pids_b.shape[0]],
                        np.asarray(s["c_dev"]))
     if method == "rerank":
         final = np.where(pids_b >= 0, c_scores, -np.inf)
     else:
-        mask = pids_b >= 0
+        # candidates owned by a missing shard never received an exact
+        # score: keep them out of the hybrid normalization. On the
+        # healthy path every valid candidate has a finite score, so
+        # this mask equals the plain ``pids_b >= 0`` mask bit-for-bit.
+        mask = (pids_b >= 0) & (c_scores > -np.inf)
         final = np.asarray(hybrid_mod.hybrid_scores(
             jnp.asarray(st["s_scores"]), jnp.asarray(c_scores),
             jnp.asarray(mask), alpha=jnp.asarray(cb.alphas),
             normalizer=normalizer))
+        if missing:
+            final = np.where(mask, final, -np.inf)
     order = np.argsort(-final, axis=1, kind="stable")[:, :cb.k]
     sorted_final = np.take_along_axis(final, order, axis=1)
     out_pids = np.where(
         sorted_final > -np.inf,
         np.take_along_axis(pids_b, order, axis=1), -1)
-    return cb.evolve(pids=out_pids, scores=sorted_final)
+    return _note_missing(cb.evolve(pids=out_pids, scores=sorted_final),
+                         missing)
 
 
 def merge_approx_state(cb, offsets, ndocs: int):
@@ -209,14 +257,15 @@ def merge_approx_state(cb, offsets, ndocs: int):
     global pids, merge raw approx scores, and apply the ndocs cut
     *globally* (a shard-local cut would diverge from the single-index
     path)."""
+    live, missing = _live_shard_states(cb.shard_states)
     gpids = np.concatenate(
         [np.where(s["cand_np"] >= 0, s["cand_np"] + offsets[i], -1)
-         for i, s in enumerate(cb.shard_states)], axis=1)
-    ascore = np.concatenate(
-        [s["approx_np"] for s in cb.shard_states], axis=1)
+         for i, s in live], axis=1)
+    ascore = np.concatenate([s["approx_np"] for _, s in live], axis=1)
     final_g, _ = merge_topk(gpids, ascore, ndocs)
-    n_real = sum(s["n_real"][:cb.state["B"]] for s in cb.shard_states)
-    return cb.with_state(final_g=final_g, n_real=n_real)
+    n_real = sum(s["n_real"][:cb.state["B"]] for _, s in live)
+    return _note_missing(cb.with_state(final_g=final_g, n_real=n_real),
+                         missing)
 
 
 def fuse_colbert_state(cb):
@@ -226,12 +275,17 @@ def fuse_colbert_state(cb):
     st = cb.state
     B, g = st["B"], st["final_g"]
     ex = np.full(g.shape, -np.inf, np.float32)
-    for s in cb.shard_states:
+    missing = []
+    for i, s in enumerate(cb.shard_states):
+        if s.get("missing"):
+            missing.append(i)
+            continue
         scatter_scores(ex, s["cols"], s["exact_np"])
     out_pids, out_scores = merge_topk(g[:B], ex[:B], cb.k)
     aux = [{"candidates": int(x)} for x in st["n_real"]]
-    return cb.evolve(pids=out_pids,
-                     scores=out_scores).with_state(aux=aux)
+    return _note_missing(
+        cb.evolve(pids=out_pids, scores=out_scores).with_state(aux=aux),
+        missing)
 
 
 class CombinedAccessStats:
@@ -594,9 +648,11 @@ def build_sharded_retriever(shard_dirs, boundaries, *, mode: str = "mmap",
 class _Slot:
     """One logical RPC enqueued on a :class:`_ShardDispatcher`; resolves
     to either its own reply or its slice of a coalesced ``multi``
-    reply."""
+    reply. ``replica`` records which replica the flush landed on so the
+    waiter can attribute success/failure and fail over to a sibling."""
 
-    __slots__ = ("op", "payload", "cli", "rep", "index", "error")
+    __slots__ = ("op", "payload", "cli", "rep", "index", "error",
+                 "replica")
 
     def __init__(self, op: str, payload):
         self.op = op
@@ -605,6 +661,7 @@ class _Slot:
         self.rep = None               # None until flushed to the wire
         self.index = None             # position inside a multi dispatch
         self.error = None
+        self.replica = None
 
 
 class _ShardDispatcher:
@@ -633,33 +690,55 @@ class _ShardDispatcher:
     def enqueue(self, op: str, payload) -> _Slot:
         slot = _Slot(op, payload)
         with self._lock:
-            cli = self.group._ensure_worker(self.i)   # fails fast dead
+            replica, cli = self.group._route(self.i)  # fails fast dead
             self._buf.append(slot)
             if cli.outstanding() == 0:
-                self._flush_locked(cli)
+                self._flush_locked(replica, cli)
         return slot
 
-    def _flush_locked(self, cli):
+    def _flush_locked(self, replica, cli):
+        from repro.serving.transport import ShardWorkerDied
+
         if not self._buf:
             return
         slots, self._buf = self._buf, []
         stats = self.group.pipeline_stats
+        deadline_ms = self.group.op_deadline_ms
         try:
             if len(slots) == 1:
                 s = slots[0]
-                s.cli, s.rep = cli, cli.call_async(s.op, s.payload)
+                s.cli, s.rep = cli, cli.call_async(
+                    s.op, s.payload, timeout_ms=deadline_ms)
+                s.replica = replica
             else:
                 rep = cli.call_async("multi", {"ops": [
-                    {"op": s.op, "payload": s.payload} for s in slots]})
+                    {"op": s.op, "payload": s.payload} for s in slots]},
+                    timeout_ms=deadline_ms)
                 for j, s in enumerate(slots):
                     s.cli, s.rep, s.index = cli, rep, j
+                    s.replica = replica
                 stats.counter("rpc_coalesced_ops", len(slots) - 1)
-        except BaseException as e:
-            # fan the send failure out to every co-batched slot; their
-            # waiters must fail, not re-flush an empty buffer forever
+        except ShardWorkerDied as e:
+            # send failure (dead socket, injected fault): the client is
+            # already marked dead. Park the error on every co-batched
+            # slot instead of raising — waiters surface it inside their
+            # failover handling, so multi-replica sets retry siblings
+            # and single-replica sets raise at wait time as before.
             for s in slots:
                 if s.rep is None:
                     s.error = e
+                    s.replica = replica
+            if replica is not None:
+                self.group._replica_sets[self.i].record_failure(replica)
+            return
+        except BaseException as e:
+            # non-connection failure: fan it out to every co-batched
+            # slot (their waiters must fail, not re-flush an empty
+            # buffer forever) and propagate
+            for s in slots:
+                if s.rep is None:
+                    s.error = e
+                    s.replica = replica
             raise
         stats.counter("rpc_dispatches")
         for s in slots:
@@ -681,25 +760,46 @@ class _ShardDispatcher:
             self._last[key] = ts[key]
 
     def wait(self, slot: _Slot):
+        from repro.serving.replica import _Straggler
+        from repro.serving.transport import (DeadlineExceeded,
+                                             ShardWorkerDied)
+
         if slot.rep is None and slot.error is None:
             with self._lock:
                 if slot.rep is None and slot.error is None:
-                    self._flush_locked(
-                        self.group._ensure_worker(self.i))
-        if slot.error is not None:
-            raise slot.error
-        out = self.group._wait(self.i, slot.cli, slot.rep)
-        with self._lock:
-            self._account(slot.cli)
-        if slot.index is None:
+                    replica, cli = self.group._route(self.i)
+                    self._flush_locked(replica, cli)
+        g = self.group
+        try:
+            if slot.error is not None:
+                raise slot.error
+            out = g._wait_replica(self.i, slot)
+            with self._lock:
+                self._account(slot.cli)
+            if slot.index is None:
+                return out
+            sub = out["replies"][slot.index]
+            if not sub.get("ok", False):
+                from repro.serving.transport import ShardWorkerError
+                raise ShardWorkerError(
+                    f"shard {self.i} op {slot.op!r} failed:\n"
+                    f"{sub.get('error')}")
+            return sub.get("result")
+        except _Straggler:
+            # the replica is merely slow: give up on it past the hedge
+            # budget and re-run the op on a sibling (safe — shard ops
+            # are pure). The straggler's reply stays pending on its own
+            # connection; FIFO discipline consumes it later without
+            # desequencing.
+            g.pipeline_stats.counter("hedges")
+            out = g._resend_slot(self.i, slot)
+            g.pipeline_stats.counter("hedge_wins")
             return out
-        sub = out["replies"][slot.index]
-        if not sub.get("ok", False):
-            from repro.serving.transport import ShardWorkerError
-            raise ShardWorkerError(
-                f"shard {self.i} op {slot.op!r} failed:\n"
-                f"{sub.get('error')}")
-        return sub.get("result")
+        except (ShardWorkerDied, DeadlineExceeded) as e:
+            if g._replica_sets[self.i].total == 1:
+                raise          # legacy single-replica: heal on next use
+            g.pipeline_stats.counter("failover_retries")
+            return g._resend_slot(self.i, slot, last_error=e)
 
     def call(self, op: str, payload):
         return self.wait(self.enqueue(op, payload))
@@ -755,10 +855,20 @@ class ProcessShardGroup(MultiStageRetriever):
                  worker_env: Optional[dict] = None,
                  transport: Optional[str] = None,
                  arena_bytes: Optional[int] = None,
+                 replicas: int = 1,
+                 replica_endpoints=None,
+                 allow_degraded: bool = False,
+                 op_deadline_ms: Optional[float] = None,
+                 hedge_factor: float = 0.0,
+                 hedge_floor_ms: float = 50.0,
+                 failover_backoff_ms: float = 10.0,
+                 fault_spec=None,
                  autostart: bool = True):
         from repro.core.plaid import PlaidParams
         from repro.launch.mesh import (default_shard_transport,
                                        shard_arena_bytes)
+        from repro.serving.replica import ReplicaSet, _Replica
+        from repro.serving.transport import FaultSpec
 
         self.shard_dirs = [str(d) for d in shard_dirs]
         if not self.shard_dirs:
@@ -786,77 +896,76 @@ class ProcessShardGroup(MultiStageRetriever):
             from repro.launch.mesh import shard_worker_env
             worker_env = shard_worker_env(self.n_shards)
         self._worker_env = worker_env
+        self.allow_degraded = bool(allow_degraded)
+        self.op_deadline_ms = op_deadline_ms
+        self.failover_backoff_ms = float(failover_backoff_ms)
+        self.fault_spec = (FaultSpec.parse(fault_spec)
+                           if isinstance(fault_spec, str) else fault_spec)
+        # replica axis: `replicas` local child workers per shard plus
+        # any remote standalone endpoints; replicas[0] is the primary
+        # slot the legacy single-replica semantics bind to
+        n_local = int(replicas)
+        endpoints = self._normalize_endpoints(replica_endpoints)
+        if n_local < 0:
+            raise ValueError(f"replicas {n_local} < 0")
+        self._replica_sets = []
+        for i in range(self.n_shards):
+            reps = [_Replica(i, rid, self._client_factory(i, None))
+                    for rid in range(n_local)]
+            reps += [_Replica(i, n_local + j,
+                              self._client_factory(i, ep), endpoint=ep)
+                     for j, ep in enumerate(endpoints[i])]
+            if not reps:
+                raise ValueError(
+                    f"shard {i} has no replicas (replicas=0 and no "
+                    f"replica_endpoints entry)")
+            self._replica_sets.append(ReplicaSet(
+                i, reps, hedge_factor=hedge_factor,
+                hedge_floor_ms=hedge_floor_ms))
         self._lock = threading.Lock()
         self._plans: dict = {}
         self.pipeline_stats = PipelineStats()
-        self._pool = ThreadPoolExecutor(max_workers=self.n_shards,
-                                        thread_name_prefix="shard-rpc")
-        self._clients: list = [None] * self.n_shards
-        self._spawn_locks = [threading.Lock()
-                             for _ in range(self.n_shards)]
-        self.restarts = [0] * self.n_shards
-        self._consec_restarts = [0] * self.n_shards
+        total_replicas = sum(rs.total for rs in self._replica_sets)
+        self._pool = ThreadPoolExecutor(
+            max_workers=max(self.n_shards, total_replicas),
+            thread_name_prefix="shard-rpc")
         self._disp = [_ShardDispatcher(self, i)
                       for i in range(self.n_shards)]
         self._closed = False
+        self._healer = None
+        self._heal_wake = threading.Event()
         self._centroids_cache = None
         self.set_splade_backend(self.params.splade_backend)
         if autostart:
             self.start()
 
-    # ------------------------------------------------------------------
-    # worker lifecycle
-    # ------------------------------------------------------------------
-    def start(self):
-        """Spawn every worker concurrently; returns after each one's
-        readiness ping (jax imported, shard subtree mapped). A shard
-        that fails to come up tears the whole group down — a partially
-        spawned group would leak the workers that did start."""
-        try:
-            list(self._pool.map(self._ensure_worker,
-                                range(self.n_shards)))
-        except BaseException:
-            self.close(grace_s=1.0)
-            raise
-        return self
+    def _normalize_endpoints(self, replica_endpoints):
+        """Per-shard remote endpoint lists. Accepts None, a compact
+        string (``;`` between shards, ``,`` between a shard's
+        replicas), or an already-parsed sequence of sequences."""
+        if replica_endpoints is None:
+            return [[] for _ in range(self.n_shards)]
+        if isinstance(replica_endpoints, str):
+            parts = [p for p in replica_endpoints.split(";")]
+            out = [[e.strip() for e in p.split(",") if e.strip()]
+                   for p in parts]
+        else:
+            out = [list(p) for p in replica_endpoints]
+        if len(out) != self.n_shards:
+            raise ValueError(
+                f"replica_endpoints covers {len(out)} shards, group "
+                f"has {self.n_shards}")
+        return out
 
-    def _ensure_worker(self, i: int):
-        """Live client for shard ``i``. Spawn-locked per shard so
-        concurrent stages racing into a dead shard act exactly once.
+    def _client_factory(self, i: int, endpoint):
+        """Factory building an unspawned client for shard ``i`` at a
+        given arena generation (a locator minted against a dead
+        worker's arena can never resolve against the new one)."""
+        import dataclasses as _dc
 
-        Crash discipline: a corpse discovered here is reaped and the
-        discovering call **fails fast** with a clear
-        :class:`~repro.serving.rpc.ShardWorkerDied` — a serving batch
-        must not silently absorb a multi-second worker respawn. The
-        *next* call respawns (heal-on-restart). A worker that dies
-        again before serving one successful call is quarantined (no
-        respawn loop); a later successful call resets the budget."""
-        from repro.serving.rpc import ShardWorkerClient, ShardWorkerDied
-
-        with self._spawn_locks[i]:
-            if self._closed:
-                raise ShardWorkerDied(
-                    f"shard group closed; shard {i} unavailable")
-            cli = self._clients[i]
-            if cli is not None and cli.alive():
-                return cli
-            if cli is not None:
-                pid = cli.pid
-                code = cli.terminate(grace_s=0.5)   # reap the corpse
-                self._clients[i] = None
-                self.restarts[i] += 1
-                self._consec_restarts[i] += 1
-                raise ShardWorkerDied(
-                    f"shard {i} worker (pid {pid}) died"
-                    + ("" if code is None else f" (exit code {code})")
-                    + "; healing on next use")
-            if self._consec_restarts[i] > 1:
-                raise ShardWorkerDied(
-                    f"shard {i} worker died again immediately after a "
-                    f"restart — not respawning (investigate the worker, "
-                    f"then rebuild the group)")
-            import dataclasses as _dc
-            cli = ShardWorkerClient(
+        def factory(generation: int):
+            from repro.serving.rpc import ShardWorkerClient
+            return ShardWorkerClient(
                 i, self.shard_dirs[i], mode=self.mode,
                 plaid_params=_dc.asdict(self.plaid_params),
                 ms_params=_dc.asdict(self.params),
@@ -865,28 +974,223 @@ class ProcessShardGroup(MultiStageRetriever):
                 call_timeout_s=self.call_timeout_s,
                 transport=self.transport,
                 arena_bytes=self.arena_bytes,
-                # fresh arena per respawn: a locator minted against a
-                # dead worker's arena can never resolve against the new
-                # one (generation embedded in every locator)
-                generation=self.restarts[i] + 1)
+                generation=generation,
+                endpoint=endpoint,
+                fault_spec=self.fault_spec)
+        return factory
+
+    # -- legacy single-replica views -----------------------------------
+    @property
+    def _clients(self) -> list:
+        """Primary-replica clients, one per shard (the legacy view;
+        sibling replicas live on ``_replica_sets``)."""
+        return [rs.primary.client for rs in self._replica_sets]
+
+    @property
+    def restarts(self) -> list:
+        return [rs.primary.restarts for rs in self._replica_sets]
+
+    # ------------------------------------------------------------------
+    # worker lifecycle
+    # ------------------------------------------------------------------
+    def start(self):
+        """Spawn/connect every replica of every shard concurrently;
+        returns after each one's readiness ping (jax imported, shard
+        subtree mapped / remote worker answered). A replica that fails
+        to come up tears the whole group down — a partially spawned
+        group would leak the workers that did start."""
+        def up(r):
+            if r is self._replica_sets[r.shard_index].primary:
+                return self._ensure_worker(r.shard_index)
+            return r.ensure(fail_fast=False)
+
+        try:
+            list(self._pool.map(
+                up, [r for rs in self._replica_sets
+                     for r in rs.replicas]))
+        except BaseException:
+            self.close(grace_s=1.0)
+            raise
+        self._start_healer()
+        return self
+
+    def _ensure_worker(self, i: int):
+        """Live *primary* client for shard ``i`` — the legacy
+        single-replica contract, spawn-locked per replica so concurrent
+        stages racing into a dead shard act exactly once.
+
+        Crash discipline: a corpse discovered here is reaped and the
+        discovering call **fails fast** with a clear
+        :class:`~repro.serving.rpc.ShardWorkerDied` — a serving batch
+        must not silently absorb a multi-second worker respawn. The
+        *next* call respawns (heal-on-restart). A worker that dies
+        again before serving one successful call — or that fails to
+        spawn twice in a row — is quarantined (no respawn loop); a
+        later successful call resets both budgets."""
+        from repro.serving.rpc import ShardWorkerDied
+
+        primary = self._replica_sets[i].primary
+        with primary.lock:
+            if self._closed:
+                raise ShardWorkerDied(
+                    f"shard group closed; shard {i} unavailable")
+            return primary.ensure(fail_fast=True)
+
+    def _route(self, i: int):
+        """(replica, live client) to dispatch shard ``i``'s next frame
+        on. Single-replica sets keep the legacy fail-fast primary path
+        verbatim; multi-replica sets route fastest-healthy-first."""
+        from repro.serving.rpc import ShardWorkerDied
+
+        rs = self._replica_sets[i]
+        if rs.total == 1:
+            return rs.primary, self._ensure_worker(i)
+        if self._closed:
+            raise ShardWorkerDied(
+                f"shard group closed; shard {i} unavailable")
+        return rs.acquire()
+
+    def _wait_replica(self, i: int, slot):
+        """Wait one dispatched slot with health accounting. Raises
+        ``_Straggler`` when a hedge budget expires with the reply still
+        outstanding (the dispatcher re-sends on a sibling)."""
+        from repro.serving.replica import _Straggler
+        from repro.serving.transport import (DeadlineExceeded,
+                                             ShardWorkerDied,
+                                             ShardWorkerError)
+
+        rs = self._replica_sets[i]
+        r = slot.replica
+        budget_ms = rs.hedge_budget_ms(r)
+        t0 = time.monotonic()
+        try:
+            if budget_ms is not None:
+                try:
+                    out = slot.cli.wait(slot.rep,
+                                        timeout=budget_ms / 1e3,
+                                        kill_on_timeout=False)
+                except ShardWorkerError:
+                    if not slot.rep.event.is_set():
+                        raise _Straggler()  # slow, not failed
+                    raise
+            else:
+                out = slot.cli.wait(slot.rep)
+        except (ShardWorkerDied, DeadlineExceeded):
+            if r is not None:
+                rs.record_failure(r)
+            raise
+        if r is not None:
+            rs.record_success(r, (time.monotonic() - t0) * 1e3)
+        return out
+
+    def _resend_slot(self, i: int, slot, last_error=None):
+        """Re-run one slot's op on sibling replicas (exponential
+        backoff + jitter between attempts). Shard ops are pure
+        functions of the request, so a retry — even after a reply was
+        maybe half-computed elsewhere — cannot change the answer."""
+        import random as _random
+
+        from repro.serving.transport import (DeadlineExceeded,
+                                             ShardUnavailable,
+                                             ShardWorkerDied,
+                                             ShardWorkerError)
+
+        rs = self._replica_sets[i]
+        delay_s = self.failover_backoff_ms / 1e3
+        exclude = slot.replica
+        for _ in range(max(2, 2 * rs.total)):
             try:
-                cli.spawn()      # reaps its own child on failure
-            except BaseException:
-                # a failed/hung startup burns restart budget too, or a
-                # worker that can never come up respawns (and leaks
-                # wall time) on every batch forever
-                self._consec_restarts[i] += 1
+                replica, cli = rs.acquire(exclude=exclude)
+            except ShardUnavailable as e:
+                # every *other* replica is unreachable right now — but
+                # the excluded one (whose connection just faulted) may
+                # merely need a reconnect, and a cooling sibling may
+                # come back within the breaker window. Back off and let
+                # the next iteration consider every replica again
+                # instead of giving up while a live worker exists.
+                exclude = None
+                last_error = e.last_error or e
+                time.sleep(delay_s * (1.0 + 0.5 * _random.random()))
+                delay_s = min(delay_s * 2.0, 1.0)
+                continue
+            exclude = None     # after the first pick all siblings count
+            t0 = time.monotonic()
+            try:
+                out = cli.call(slot.op, slot.payload,
+                               timeout_ms=self.op_deadline_ms)
+            except ShardWorkerError:
+                raise          # deterministic op failure: do not retry
+            except (ShardWorkerDied, DeadlineExceeded) as e:
+                rs.record_failure(replica)
+                last_error = e
+                time.sleep(delay_s * (1.0 + 0.5 * _random.random()))
+                delay_s = min(delay_s * 2.0, 1.0)
+                continue
+            rs.record_success(replica, (time.monotonic() - t0) * 1e3)
+            return out
+        raise ShardUnavailable(
+            f"shard {i}: failover exhausted its retries "
+            f"(last error: {last_error})", shard=i,
+            last_error=last_error)
+
+    def _degradable(self, fn):
+        """Run one shard's stage op; with ``allow_degraded`` a shard
+        whose every replica is gone yields None (its slot becomes a
+        ``missing`` state) instead of failing the whole batch."""
+        from repro.serving.transport import (DeadlineExceeded,
+                                             ShardWorkerDied)
+
+        try:
+            return fn()
+        except (ShardWorkerDied, DeadlineExceeded):
+            if not self.allow_degraded:
                 raise
-            self._clients[i] = cli
-            return cli
+            self.pipeline_stats.counter("degraded_shard_ops")
+            return None
+
+    # -- background healer ---------------------------------------------
+    def _start_healer(self):
+        """Replicated groups get a daemon that restores redundancy in
+        the background (reconnect remote siblings, respawn local ones)
+        instead of waiting for traffic to land on the dead replica.
+        Single-replica groups keep the legacy heal-on-next-use path
+        only — no extra thread, no behavior change."""
+        if all(rs.total == 1 for rs in self._replica_sets):
+            return
+        self._healer = threading.Thread(target=self._healer_loop,
+                                        name="shard-healer", daemon=True)
+        self._healer.start()
+
+    def _healer_loop(self):
+        from repro.serving.transport import ShardWorkerDied
+
+        while not self._closed:
+            self._heal_wake.wait(1.0)
+            if self._closed:
+                return
+            now = time.monotonic()
+            for rs in self._replica_sets:
+                for r in rs.replicas:
+                    if self._closed:
+                        return
+                    if (r.is_alive() or r.quarantined()
+                            or r.breaker_open_until > now):
+                        continue
+                    try:
+                        r.ensure(fail_fast=False)
+                        self.pipeline_stats.counter("replica_heals")
+                    except ShardWorkerDied:
+                        rs.record_failure(r)
 
     def _call_async(self, i: int, op: str, payload):
         cli = self._ensure_worker(i)
-        return cli, cli.call_async(op, payload)
+        return cli, cli.call_async(op, payload,
+                                   timeout_ms=self.op_deadline_ms)
 
     def _wait(self, i: int, cli, rep):
         out = cli.wait(rep)
-        self._consec_restarts[i] = 0          # healed / healthy
+        rs = self._replica_sets[i]
+        rs.record_success(rs.primary)         # healed / healthy
         return out
 
     def _call(self, i: int, op: str, payload):
@@ -917,16 +1221,24 @@ class ProcessShardGroup(MultiStageRetriever):
 
     def worker_health(self) -> list:
         """Per-worker vitals (pid, RSS, mmap segment bytes, served
-        count, restart count) — never raises, never respawns: a dead
-        worker reports ``alive: False`` until traffic heals it."""
+        count, restart count, spawn/serve failure budgets, sibling
+        replica state) — never raises, never respawns: a dead worker
+        reports ``alive: False`` until traffic (or the healer thread)
+        heals it."""
         from repro.serving.rpc import ShardWorkerDied, ShardWorkerError
 
         out = []
         for i, cli in enumerate(self._clients):
+            rs = self._replica_sets[i]
             rec = {"shard": i,
                    "pid": None if cli is None else cli.pid,
                    "alive": bool(cli is not None and cli.alive()),
-                   "restarts": self.restarts[i]}
+                   "restarts": self.restarts[i],
+                   "spawn_failures": rs.primary.spawn_failures,
+                   "serve_failures": rs.primary.serve_failures}
+            if rs.total > 1:
+                rec["replicas"] = [r.health() for r in rs.replicas]
+                rec["alive_replicas"] = rs.alive_count()
             if cli is not None:
                 ts = cli.transport_stats()
                 rec["transport"] = ts["transport"]
@@ -958,32 +1270,44 @@ class ProcessShardGroup(MultiStageRetriever):
         actually bypassed serialization."""
         per, total = [], {"bytes_sent": 0, "bytes_recv": 0,
                           "bytes_copied": 0, "bytes_zero_copy": 0}
-        for i, cli in enumerate(self._clients):
-            if cli is None:
-                continue
-            ts = cli.transport_stats()
-            ts["shard"] = i
-            per.append(ts)
-            for k in total:
-                total[k] += ts[k]
+        for i, rs in enumerate(self._replica_sets):
+            for r in rs.replicas:
+                cli = r.client
+                if cli is None:
+                    continue
+                ts = cli.transport_stats()
+                ts["shard"] = i
+                ts["replica"] = r.rid
+                per.append(ts)
+                for k in total:
+                    total[k] += ts[k]
         return {"transport": self.transport, "per_worker": per,
                 "total": total}
 
+    def degraded_shards(self) -> list:
+        """Shard ids currently served by zero live replicas — the set
+        a degraded answer would be missing right now."""
+        return [rs.i for rs in self._replica_sets
+                if rs.alive_count() == 0]
+
     def close(self, grace_s: float = 5.0):
         """Graceful group shutdown: drain each worker (shutdown RPC,
-        then SIGTERM, then SIGKILL) and reap every child. Idempotent.
-        Takes each shard's spawn lock so a concurrent heal that was
-        already past the closed-check finishes its spawn first and is
-        then terminated here — never leaked."""
+        then SIGTERM, then SIGKILL) and reap every child; remote
+        replicas just drop their connection (their accept loop serves
+        the next coordinator). Idempotent. Takes each replica's spawn
+        lock so a concurrent heal that was already past the
+        closed-check finishes its spawn first and is then terminated
+        here — never leaked."""
         with self._lock:
             if self._closed:
                 return
             self._closed = True
-        for i in range(self.n_shards):
-            with self._spawn_locks[i]:
-                cli = self._clients[i]
-                if cli is not None:
-                    cli.terminate(grace_s=grace_s)
+        self._heal_wake.set()
+        if self._healer is not None:
+            self._healer.join(timeout=2.0)
+        for rs in self._replica_sets:
+            for r in rs.replicas:
+                r.terminate(grace_s=grace_s)
         self._pool.shutdown(wait=False)
 
     # ------------------------------------------------------------------
@@ -1005,22 +1329,30 @@ class ProcessShardGroup(MultiStageRetriever):
         payload = {"term_ids": list(term_ids),
                    "term_weights": list(term_weights), "k": k,
                    "backend": backend or self.splade_backend}
-        slots = [self._disp[i].enqueue("splade", payload)
+        slots = [self._degradable(
+                     lambda i=i: self._disp[i].enqueue("splade", payload))
                  for i in range(self.n_shards)]
-        outs = [self._disp[i].wait(s) for i, s in enumerate(slots)]
+        outs = [None if s is None else
+                self._degradable(lambda i=i, s=s: self._disp[i].wait(s))
+                for i, s in enumerate(slots)]
+        live, _ = _live_shard_states(tuple(
+            {"missing": True} if r is None else r for r in outs))
         pids = np.concatenate(
             [np.where(r["pids"] >= 0, r["pids"] + self.offsets[i], -1)
-             for i, r in enumerate(outs)], axis=1)
-        scores = np.concatenate([r["scores"] for r in outs], axis=1)
+             for i, r in live], axis=1)
+        scores = np.concatenate([r["scores"] for _, r in live], axis=1)
         return merge_topk(pids, scores, k, pad_score=0.0)
 
     def splade_device_cache(self):
         """Warm every worker's padded-postings device cache for the
         current stage-1 backend (no-op per worker on ``host``)."""
-        slots = [self._disp[i].enqueue("warm",
-                                       {"backend": self.splade_backend})
+        slots = [self._degradable(
+                     lambda i=i: self._disp[i].enqueue(
+                         "warm", {"backend": self.splade_backend}))
                  for i in range(self.n_shards)]
-        return [self._disp[i].wait(s) for i, s in enumerate(slots)]
+        return [None if s is None else
+                self._degradable(lambda i=i, s=s: self._disp[i].wait(s))
+                for i, s in enumerate(slots)]
 
     def _centroids(self):
         """Replicated centroid geometry, loaded once from shard 0's
@@ -1070,10 +1402,12 @@ class ProcessShardGroup(MultiStageRetriever):
 
             def candidates_rpc(cb, i):
                 st = cb.state
-                r = self._disp[i].call(
+                r = self._degradable(lambda: self._disp[i].call(
                     "colbert_candidates",
                     {"scores_c": st["scores_c"], "cids": st["cids"],
-                     "q_valid": st["q_valid"]})
+                     "q_valid": st["q_valid"]}))
+                if r is None:
+                    return {"missing": True}
                 return {"cand_np": r["cand"], "approx_np": r["approx"],
                         "n_real": r["n_real"]}
 
@@ -1081,10 +1415,12 @@ class ProcessShardGroup(MultiStageRetriever):
                 st = cb.state
                 cols, sel = compact_owned(st["final_g"],
                                           offs[i], offs[i + 1])
-                r = self._disp[i].call(
+                r = self._degradable(lambda: self._disp[i].call(
                     "colbert_exact",
                     {"q": st["q"], "q_valid": st["q_valid"],
-                     "sel": sel})
+                     "sel": sel}))
+                if r is None:
+                    return {"missing": True}
                 return {"cols": cols, "exact_np": r["scores"]}
 
             stages = (
@@ -1109,10 +1445,16 @@ class ProcessShardGroup(MultiStageRetriever):
             payload = {"term_ids": list(cb.term_ids),
                        "term_weights": list(cb.term_weights),
                        "k": p.first_k, "backend": backend}
-            slots = [self._disp[i].enqueue("splade", payload)
+            slots = [self._degradable(
+                         lambda i=i: self._disp[i].enqueue("splade",
+                                                           payload))
                      for i in range(S)]
-            outs = [self._disp[i].wait(s) for i, s in enumerate(slots)]
+            outs = [None if s is None else
+                    self._degradable(
+                        lambda i=i, s=s: self._disp[i].wait(s))
+                    for i, s in enumerate(slots)]
             return cb.evolve(shard_states=tuple(
+                {"missing": True} if r is None else
                 {"pids": np.where(r["pids"] >= 0,
                                   r["pids"] + offs[i], -1),
                  "scores": r["scores"]}
@@ -1134,14 +1476,21 @@ class ProcessShardGroup(MultiStageRetriever):
         def score_dispatch(cb, i):
             st = cb.state
             cols, sel = compact_owned(st["gp"], offs[i], offs[i + 1])
-            slot = self._disp[i].enqueue(
+            slot = self._degradable(lambda: self._disp[i].enqueue(
                 "score_tokens",
-                {"q": st["q"], "q_valid": st["q_valid"], "sel": sel})
+                {"q": st["q"], "q_valid": st["q_valid"], "sel": sel}))
+            if slot is None:
+                return {"missing": True}
             return {"cols": cols, "_slot": slot}
 
         def score_wait(cb, i):
             s = dict(cb.shard_states[i])
-            r = self._disp[i].wait(s.pop("_slot"))
+            if s.get("missing"):
+                return s
+            slot = s.pop("_slot")
+            r = self._degradable(lambda: self._disp[i].wait(slot))
+            if r is None:
+                return {"missing": True}
             s["c_dev"] = r["scores"][:cb.state["B"]]
             return s
 

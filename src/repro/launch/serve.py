@@ -36,7 +36,13 @@ def build_or_load(index_dir: str | None, mode: str,
                   splade_max_df: int | None = None,
                   n_shards: int = 1, shard_workers: str = "thread",
                   shard_transport: str | None = None,
-                  arena_bytes: int | None = None):
+                  arena_bytes: int | None = None,
+                  replicas: int = 1,
+                  replica_endpoints: str | None = None,
+                  allow_degraded: bool = False,
+                  op_deadline_ms: float | None = None,
+                  hedge_factor: float = 0.0,
+                  hedge_floor_ms: float = 50.0):
     """Build (or load) the serving index and retriever. ``n_shards >= 2``
     splits the single index into a contiguous-range shard group on disk
     (``<dir>/shards/``, reused if already split at this count) and
@@ -48,7 +54,16 @@ def build_or_load(index_dir: str | None, mode: str,
     bitwise-identical across both backends. ``shard_transport`` picks
     the process-worker tensor path (``shm`` zero-copy ring arenas /
     ``socket`` stream; None = platform default) and ``arena_bytes``
-    sizes each worker's per-direction ring."""
+    sizes each worker's per-direction ring.
+
+    The replica knobs (process workers only) configure the fleet
+    fabric: ``replicas`` local workers per shard plus any
+    ``replica_endpoints`` (``"h:p,h:p;h:p"`` — ``;`` between shards,
+    ``,`` between that shard's remote workers), health-aware failover
+    between them, ``op_deadline_ms`` per-op deadlines, hedged requests
+    past ``hedge_factor``× the replica's EWMA latency, and
+    ``allow_degraded`` partial answers when every replica of a shard
+    is down."""
     if index_dir and (pathlib.Path(index_dir) / "colbert").exists():
         base = pathlib.Path(index_dir)
         corpus = None
@@ -70,12 +85,20 @@ def build_or_load(index_dir: str | None, mode: str,
         from repro.index.sharding import load_group
         group = split_index_tree(base, n_shards)
         shard_dirs, boundaries = load_group(group)
+        fleet_kw = {}
+        if shard_workers == "process":
+            fleet_kw = dict(replicas=replicas,
+                            replica_endpoints=replica_endpoints,
+                            allow_degraded=allow_degraded,
+                            op_deadline_ms=op_deadline_ms,
+                            hedge_factor=hedge_factor,
+                            hedge_floor_ms=hedge_floor_ms)
         retr = build_shard_group(
             shard_dirs, boundaries, workers=shard_workers, mode=mode,
             plaid_params=plaid_params, multistage_params=ms_params,
             transport=shard_transport, arena_bytes=arena_bytes,
             devices=(None if shard_workers == "process"
-                     else shard_device_map(n_shards)))
+                     else shard_device_map(n_shards)), **fleet_kw)
         # the unsharded index handle is informational only (pool-size
         # print) — serving reads the per-shard segments, so always open
         # it mmap: a second full-RAM copy of the pool would double
@@ -125,6 +148,34 @@ def main():
                          "shm arena (bounds in-flight tensor bytes; "
                          "default auto-sizes, see launch.mesh."
                          "shard_arena_bytes)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="local worker processes per shard (process "
+                         "workers only; >=2 enables health-aware "
+                         "failover between interchangeable replicas)")
+    ap.add_argument("--replica-endpoints", default=None,
+                    help="remote standalone workers per shard, "
+                         "'host:port,host:port;host:port' — ';' "
+                         "separates shards, ',' that shard's remote "
+                         "replicas (each runs `python -m repro.serving"
+                         ".worker --shard-dir … --port …`)")
+    ap.add_argument("--allow-degraded", action="store_true",
+                    help="when every replica of a shard is down, "
+                         "serve partial results merged over the "
+                         "surviving shards (responses carry degraded="
+                         "true + the missing shard ids) instead of "
+                         "failing the request")
+    ap.add_argument("--op-deadline-ms", type=float, default=None,
+                    help="per-op RPC deadline; an expired op fails "
+                         "over to a sibling replica (or raises "
+                         "DeadlineExceeded with one replica)")
+    ap.add_argument("--hedge-factor", type=float, default=0.0,
+                    help=">0 hedges stragglers: an op still pending "
+                         "past factor×EWMA of its replica's latency "
+                         "is re-sent on a sibling (shard ops are "
+                         "pure, so duplicates are safe)")
+    ap.add_argument("--hedge-floor-ms", type=float, default=50.0,
+                    help="minimum hedge budget, so cold EWMAs don't "
+                         "hedge every op")
     ap.add_argument("--max-batch", type=int, default=1)
     ap.add_argument("--batch-timeout-ms", type=float, default=2.0)
     ap.add_argument("--latency-slo-ms", type=float, default=None,
@@ -161,7 +212,13 @@ def main():
         args.splade_max_df, n_shards=args.shards,
         shard_workers=args.shard_workers,
         shard_transport=args.shard_transport,
-        arena_bytes=args.arena_bytes)
+        arena_bytes=args.arena_bytes,
+        replicas=args.replicas,
+        replica_endpoints=args.replica_endpoints,
+        allow_degraded=args.allow_degraded,
+        op_deadline_ms=args.op_deadline_ms,
+        hedge_factor=args.hedge_factor,
+        hedge_floor_ms=args.hedge_floor_ms)
     # backend already configured (and device cache pre-materialised) via
     # MultiStageParams in build_or_load; the engine owns the retriever so
     # a process shard group's workers are reaped on every exit path

@@ -53,6 +53,10 @@ class Result:
     t_arrival: float
     t_start: float
     t_done: float
+    # degraded answers (allow_degraded shard groups only): the result
+    # merges the surviving shards and names the doc ranges it is missing
+    degraded: bool = False
+    missing_shards: tuple = ()
 
     @property
     def latency(self) -> float:
@@ -178,17 +182,25 @@ class ServeEngine:
                            for m, px in pipes.items()}}
 
     # -- request execution -----------------------------------------------
+    def _missing_shards(self) -> tuple:
+        """Missing-shard note of the search this thread just ran
+        (degraded shard groups only; () everywhere else)."""
+        last = getattr(self.retriever, "last_missing_shards", None)
+        return tuple(last()) if last is not None else ()
+
     def process(self, req: Request) -> Result:
         t_start = time.perf_counter()
         pids, scores = self.retriever.search(
             req.method, q_emb=req.q_emb, term_ids=req.term_ids,
             term_weights=req.term_weights, alpha=req.alpha, k=req.k)
+        missing = self._missing_shards()
         t_done = time.perf_counter()
         with self._lock:
             self.served += 1
         return Result(qid=req.qid, pids=pids, scores=scores,
                       t_arrival=req.t_arrival, t_start=t_start,
-                      t_done=t_done)
+                      t_done=t_done, degraded=bool(missing),
+                      missing_shards=missing)
 
     def process_batch(self, reqs: list[Request]) -> list[Result]:
         """Score a micro-batch in one batched retriever call per method
@@ -211,11 +223,13 @@ class ServeEngine:
             term_weights=[r.term_weights for r in reqs],
             alpha=None if all(a is None for a in alphas) else alphas,
             k=k_max)
+        missing = self._missing_shards()
         t_done = time.perf_counter()
         with self._lock:
             self.served += len(reqs)
         return [Result(qid=r.qid, pids=pids[i][:r.k], scores=scores[i][:r.k],
-                       t_arrival=r.t_arrival, t_start=t_start, t_done=t_done)
+                       t_arrival=r.t_arrival, t_start=t_start, t_done=t_done,
+                       degraded=bool(missing), missing_shards=missing)
                 for i, r in enumerate(reqs)]
 
     def process_batch_async(self, reqs: list[Request]) -> Future:
@@ -291,6 +305,10 @@ class ServeEngine:
         return out
 
     def _assemble(self, reqs, groups, cbs, n, k_max, t_start):
+        missing: set = set()
+        for cb in cbs:
+            missing.update(cb.state.get("missing_shards", ()))
+        missing = tuple(sorted(missing))
         if len(groups) == 1:
             pids, scores = cbs[0].pids, cbs[0].scores
         else:
@@ -304,5 +322,6 @@ class ServeEngine:
             self.served += n
         return [Result(qid=r.qid, pids=pids[i][:r.k],
                        scores=scores[i][:r.k], t_arrival=r.t_arrival,
-                       t_start=t_start, t_done=t_done)
+                       t_start=t_start, t_done=t_done,
+                       degraded=bool(missing), missing_shards=missing)
                 for i, r in enumerate(reqs)]

@@ -15,11 +15,18 @@ Three arrival disciplines:
 * :func:`run_closed_loop` — ``concurrency`` synchronous clients, each
   issuing its next request only after the previous completes
   (throughput self-limits to concurrency/latency).
+
+For availability experiments, :class:`ChaosSchedule` runs a timed
+kill/restart choreography on a side thread while a load generator
+drives requests — the harness behind the chaos smoke in CI and
+``bench_latency.py --chaos-sweep``.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import os
+import signal
 import threading
 import time
 from typing import Callable, Optional
@@ -37,6 +44,9 @@ class LoadResult:
     wall_time: float
     offered_qps: float
     failed: int = 0          # requests that raised (tolerate_failures)
+    # sample of the exceptions behind ``failed`` (first 8) — an
+    # availability assert that trips should say what actually broke
+    errors: list = dataclasses.field(default_factory=list)
 
     def percentile(self, p: float) -> float:
         return float(np.percentile(self.latencies, p)) if len(self.latencies) else float("nan")
@@ -146,13 +156,16 @@ def _run_scheduled(server: RetrievalServer, requests: list[Request],
             futures.append(server.submit(req))
     lat, svc = [], []
     failed = 0
+    errors: list = []
     for fut in futures:
         try:
             res = fut.result(timeout=timeout)
-        except Exception:
+        except Exception as e:
             if not tolerate_failures:
                 raise
             failed += 1
+            if len(errors) < 8:      # a diagnosable sample, not a flood
+                errors.append(e)
             continue
         lat.append(res.latency)
         svc.append(res.service_time)
@@ -162,7 +175,79 @@ def _run_scheduled(server: RetrievalServer, requests: list[Request],
     return LoadResult(latencies=np.asarray(lat),
                       service_times=np.asarray(svc),
                       wall_time=wall, offered_qps=offered_qps,
-                      failed=failed)
+                      failed=failed, errors=errors)
+
+
+@dataclasses.dataclass
+class ChaosAction:
+    """One timed fault: run ``fn`` at ``at_s`` seconds into the
+    schedule. ``label`` names the action in ``ChaosSchedule.fired``."""
+    at_s: float
+    fn: Callable[[], None]
+    label: str = ""
+
+
+class ChaosSchedule:
+    """Run a sorted list of :class:`ChaosAction` on a daemon thread,
+    against an absolute clock started at :meth:`start` — the fault
+    choreography beside a load generator. Action exceptions are
+    collected into ``errors`` instead of killing the thread (an
+    already-dead victim must not abort the experiment); fired labels
+    land in ``fired`` so the test can assert the faults actually
+    happened."""
+
+    def __init__(self, actions: list[ChaosAction]):
+        self.actions = sorted(actions, key=lambda a: a.at_s)
+        self.fired: list[str] = []
+        self.errors: list[BaseException] = []
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def start(self) -> "ChaosSchedule":
+        self._thread = threading.Thread(
+            target=self._run, daemon=True, name="chaos-schedule")
+        self._thread.start()
+        return self
+
+    def _run(self):
+        t0 = time.perf_counter()
+        for a in self.actions:
+            delay = t0 + a.at_s - time.perf_counter()
+            if delay > 0 and self._stop.wait(delay):
+                return
+            try:
+                a.fn()
+                self.fired.append(a.label or getattr(a.fn, "__name__",
+                                                     "action"))
+            except BaseException as e:    # noqa: BLE001 — collected
+                self.errors.append(e)
+
+    def join(self, timeout: Optional[float] = None):
+        if self._thread is not None:
+            self._thread.join(timeout)
+
+    def stop(self, timeout: float = 5.0):
+        """Cancel not-yet-fired actions and join the thread."""
+        self._stop.set()
+        self.join(timeout)
+
+
+def kill_shard_replica(group, shard: int, rid: int = 0,
+                       sig: int = signal.SIGKILL):
+    """SIGKILL the local child process behind one replica of a process
+    shard group — the canonical chaos action. Remote replicas have no
+    child pid here (the harness that spawned the standalone worker
+    kills its own Popen handle); a replica that is already down is a
+    no-op."""
+    rep = group._replica_sets[shard].replicas[rid]
+    cli = rep.client
+    pid = cli.pid if cli is not None else None
+    if pid is None:
+        return
+    try:
+        os.kill(pid, sig)
+    except (ProcessLookupError, PermissionError):
+        pass
 
 
 def run_closed_loop(server: RetrievalServer, requests: list[Request],

@@ -1,0 +1,265 @@
+"""Replica sets: health-aware routing over N workers per shard.
+
+One shard of the index can be served by several interchangeable
+workers — local child processes and/or remote standalone workers
+(``python -m repro.serving.worker --port …``) — because every shard
+stage is a pure function of the request. This module owns the
+*replica axis* of that fabric:
+
+* :class:`_Replica` — one worker slot: lifecycle (spawn / connect /
+  reap), restart and quarantine budgets split by failure kind
+  (spawn-failure vs serve-failure), an EWMA of observed service time,
+  and a circuit breaker with exponential cooldown.
+* :class:`ReplicaSet` — the per-shard collection: routes
+  fastest-healthy-first (closed breakers ordered by EWMA, cooling
+  breakers last as half-open probes), records successes/failures, and
+  computes the hedge budget for straggler detection.
+
+Policy split, deliberately asymmetric:
+
+* **Local replicas** (``endpoint is None``) are our own children. Two
+  consecutive serve deaths — or two consecutive spawn failures —
+  quarantine the replica permanently (``not respawning``): a crash
+  looping child burns CPU and disk on every respawn, and nothing
+  external will fix it.
+* **Remote replicas** never quarantine permanently: the process is
+  managed elsewhere (an operator, an init system) and a reconnect is
+  one cheap TCP dial, so the breaker's exponential cooldown is the
+  only pacing. A successful reconnect proves a live worker and resets
+  the consecutive-failure counters.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, List, Optional
+
+from repro.serving.transport import ShardUnavailable, ShardWorkerDied
+
+__all__ = ["ReplicaSet", "_Replica", "_Straggler"]
+
+
+class _Straggler(Exception):
+    """Internal control flow: a hedged wait expired with the reply
+    still outstanding (the worker is merely slow, not dead). The
+    dispatcher catches this and re-sends the op on a sibling."""
+
+
+class _Replica:
+    """One worker behind a shard — a local child process when
+    ``endpoint`` is None, else a remote standalone worker reached over
+    TCP. Owns the client handle plus all per-replica health state; the
+    factory builds an unspawned ``ShardWorkerClient`` for a given
+    arena generation."""
+
+    def __init__(self, shard_index: int, rid: int,
+                 factory: Callable[[int], object],
+                 endpoint: Optional[str] = None):
+        self.shard_index = shard_index
+        self.rid = rid
+        self.factory = factory
+        self.endpoint = endpoint
+        self.client = None
+        self.lock = threading.RLock()
+        self.restarts = 0
+        # budgets split by failure kind (a worker that dies while
+        # serving and one that cannot even come up are different
+        # pathologies; conflating them hid spawn storms behind the
+        # serve-restart budget)
+        self.consec_serve_failures = 0
+        self.consec_spawn_failures = 0
+        self.serve_failures = 0          # total, surfaced in health
+        self.spawn_failures = 0          # total, surfaced in health
+        self.ewma_ms: Optional[float] = None
+        self.breaker_open_until = 0.0
+        self.breaker_level = 0
+
+    # -- health probes -------------------------------------------------
+
+    def is_alive(self) -> bool:
+        cli = self.client
+        return cli is not None and cli.alive()
+
+    def quarantined(self) -> bool:
+        if self.endpoint is not None:
+            return False                 # remote: breaker paces retries
+        return (self.consec_serve_failures > 1
+                or self.consec_spawn_failures > 1)
+
+    # -- lifecycle -----------------------------------------------------
+
+    def ensure(self, fail_fast: bool):
+        """Return a live client, spawning/connecting as needed.
+
+        ``fail_fast=True`` is the legacy single-replica contract: a
+        corpse is reaped and the call *raises* ("healing on next use")
+        so the serving batch fails promptly instead of absorbing a
+        multi-second respawn; the next call respawns. With
+        ``fail_fast=False`` (siblings, the healer thread, failover) a
+        corpse is reaped and respawned in the same call.
+        """
+        with self.lock:
+            cli = self.client
+            if cli is not None and cli.alive():
+                return cli
+            if cli is not None:
+                pid = cli.pid
+                code = cli.terminate(grace_s=0.5)
+                self.client = None
+                self.restarts += 1
+                self.consec_serve_failures += 1
+                self.serve_failures += 1
+                if fail_fast:
+                    who = (f"endpoint {self.endpoint}"
+                           if self.endpoint is not None else f"pid {pid}")
+                    raise ShardWorkerDied(
+                        f"shard {self.shard_index} worker ({who}) died"
+                        + (f" (exit code {code})" if code is not None
+                           else "")
+                        + "; healing on next use")
+            if self.endpoint is None and self.consec_serve_failures > 1:
+                raise ShardWorkerDied(
+                    f"shard {self.shard_index} worker died again "
+                    "immediately after a restart — not respawning "
+                    "(investigate the worker, then rebuild the group)")
+            if self.endpoint is None and self.consec_spawn_failures > 1:
+                raise ShardWorkerDied(
+                    f"shard {self.shard_index} worker failed to spawn "
+                    "twice in a row — not respawning (investigate the "
+                    "worker, then rebuild the group)")
+            cli = self.factory(self.restarts + 1)
+            try:
+                cli.spawn()
+            except BaseException:
+                self.spawn_failures += 1
+                self.consec_spawn_failures += 1
+                raise
+            self.client = cli
+            if self.endpoint is not None:
+                # the readiness ping inside spawn() proved a live
+                # worker — an externally restarted process wipes the
+                # failure streak
+                self.consec_serve_failures = 0
+                self.consec_spawn_failures = 0
+            return cli
+
+    def terminate(self, grace_s: float = 5.0):
+        with self.lock:
+            cli, self.client = self.client, None
+            if cli is not None:
+                cli.terminate(grace_s=grace_s)
+
+    def health(self) -> dict:
+        cli = self.client
+        return {
+            "rid": self.rid,
+            "endpoint": self.endpoint,
+            "pid": cli.pid if cli is not None else None,
+            "alive": self.is_alive(),
+            "restarts": self.restarts,
+            "spawn_failures": self.spawn_failures,
+            "serve_failures": self.serve_failures,
+            "quarantined": self.quarantined(),
+            "ewma_ms": self.ewma_ms,
+            "breaker_open": self.breaker_open_until > time.monotonic(),
+        }
+
+
+class ReplicaSet:
+    """The replicas serving one shard, plus the routing policy over
+    them. ``replicas[0]`` is the *primary* — the slot legacy
+    single-replica semantics (``_ensure_worker``, ``restarts``,
+    ``_clients``) bind to."""
+
+    def __init__(self, shard_index: int, replicas: List[_Replica], *,
+                 hedge_factor: float = 0.0, hedge_floor_ms: float = 50.0,
+                 breaker_base_ms: float = 200.0,
+                 breaker_max_ms: float = 5000.0):
+        if not replicas:
+            raise ValueError(f"shard {shard_index}: empty replica set")
+        self.i = shard_index
+        self.replicas = list(replicas)
+        self.hedge_factor = float(hedge_factor)
+        self.hedge_floor_ms = float(hedge_floor_ms)
+        self.breaker_base_ms = float(breaker_base_ms)
+        self.breaker_max_ms = float(breaker_max_ms)
+
+    @property
+    def total(self) -> int:
+        return len(self.replicas)
+
+    @property
+    def primary(self) -> _Replica:
+        return self.replicas[0]
+
+    def alive_count(self) -> int:
+        return sum(1 for r in self.replicas if r.is_alive())
+
+    # -- routing -------------------------------------------------------
+
+    def route_order(self, exclude: Optional[_Replica] = None):
+        """Candidates in preference order: live replicas with closed
+        breakers first (fastest EWMA wins), then dead-but-spawnable
+        ones, then cooling breakers as half-open probes (soonest to
+        expire first). Quarantined replicas never route."""
+        now = time.monotonic()
+        ready, cooling = [], []
+        for r in self.replicas:
+            if r is exclude or r.quarantined():
+                continue
+            (ready if r.breaker_open_until <= now else cooling).append(r)
+        ready.sort(key=lambda r: (not r.is_alive(),
+                                  r.ewma_ms if r.ewma_ms is not None
+                                  else 0.0))
+        cooling.sort(key=lambda r: r.breaker_open_until)
+        return ready + cooling
+
+    def acquire(self, exclude: Optional[_Replica] = None):
+        """Return ``(replica, live client)`` for the best available
+        replica, reviving dead ones inline if that is what it takes.
+        Raises :class:`ShardUnavailable` when every replica is out."""
+        last: Optional[BaseException] = None
+        order = self.route_order(exclude)
+        if not order and exclude is not None:
+            order = self.route_order(None)
+        for r in order:
+            try:
+                return r, r.ensure(fail_fast=False)
+            except ShardWorkerDied as e:
+                self.record_failure(r)
+                last = e
+        raise ShardUnavailable(
+            f"shard {self.i}: all {self.total} replica(s) unavailable"
+            + (f" (last error: {last})" if last is not None else ""),
+            shard=self.i, last_error=last)
+
+    # -- health bookkeeping --------------------------------------------
+
+    def record_success(self, r: _Replica,
+                       elapsed_ms: Optional[float] = None):
+        r.consec_serve_failures = 0
+        r.consec_spawn_failures = 0
+        r.breaker_level = 0
+        r.breaker_open_until = 0.0
+        if elapsed_ms is not None:
+            r.ewma_ms = (elapsed_ms if r.ewma_ms is None
+                         else 0.8 * r.ewma_ms + 0.2 * elapsed_ms)
+
+    def record_failure(self, r: _Replica):
+        r.breaker_level = min(r.breaker_level + 1, 16)
+        cool_ms = min(self.breaker_base_ms * (2 ** (r.breaker_level - 1)),
+                      self.breaker_max_ms)
+        r.breaker_open_until = time.monotonic() + cool_ms / 1e3
+
+    def hedge_budget_ms(self, r: _Replica) -> Optional[float]:
+        """Soft wait budget before hedging this replica's in-flight op
+        on a sibling; None disables (no siblings, hedging off, or no
+        latency history yet)."""
+        if self.hedge_factor <= 0.0 or self.total < 2:
+            return None
+        if r is None or r.ewma_ms is None:
+            return None
+        if not any(s.is_alive() for s in self.replicas if s is not r):
+            return None
+        return max(self.hedge_floor_ms, self.hedge_factor * r.ewma_ms)

@@ -18,7 +18,8 @@ code should import from :mod:`repro.serving.transport` directly.
 """
 
 from repro.serving.transport import (  # noqa: F401
-    HAVE_MSGPACK, ArenaDead, SegmentSink, ShardWorkerClient,
+    HAVE_MSGPACK, ArenaDead, DeadlineExceeded, FaultSpec, FaultyChannel,
+    SegmentSink, ShardUnavailable, ShardWorkerClient,
     ShardWorkerDied, ShardWorkerError, ShmArena, ShmChannel,
     StreamChannel, _Reply, _src_pythonpath, decode, decode_control,
     encode, encode_control, recv_msg, send_msg)
@@ -26,7 +27,9 @@ from repro.serving.transport.codec import (  # noqa: F401
     _nd_from_wire, _nd_to_wire)
 
 __all__ = [
-    "ArenaDead", "HAVE_MSGPACK", "SegmentSink", "ShardWorkerClient",
+    "ArenaDead", "DeadlineExceeded", "FaultSpec", "FaultyChannel",
+    "HAVE_MSGPACK", "SegmentSink", "ShardUnavailable",
+    "ShardWorkerClient",
     "ShardWorkerDied", "ShardWorkerError", "ShmArena", "ShmChannel",
     "StreamChannel", "decode", "decode_control", "encode",
     "encode_control", "recv_msg", "send_msg",

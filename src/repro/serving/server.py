@@ -379,8 +379,12 @@ class RetrievalServer:
         retr = getattr(self.engine, "retriever", None)
         if hasattr(retr, "worker_health"):
             # process-group backend: per-shard worker vitals (pid, RSS,
-            # mmap segment bytes, restarts) for external monitors
+            # mmap segment bytes, restarts, replica health) for
+            # external monitors
             h["shard_workers"] = retr.worker_health()
+        if hasattr(retr, "degraded_shards"):
+            h["degraded_shards"] = retr.degraded_shards()
+            h["allow_degraded"] = getattr(retr, "allow_degraded", False)
         stats = getattr(getattr(self.engine, "retriever", None),
                         "pipeline_stats", None)
         if stats is not None:
@@ -420,6 +424,11 @@ class _Handler(socketserver.StreamRequestHandler):
                 out = {"qid": res.qid, "pids": res.pids.tolist(),
                        "scores": [float(s) for s in res.scores],
                        "latency": res.latency}
+                if res.degraded:
+                    # partial answer: surviving shards only — clients
+                    # see exactly which doc ranges are absent
+                    out["degraded"] = True
+                    out["missing_shards"] = list(res.missing_shards)
             except Exception as e:
                 out = {"error": str(e)}
                 if qid is not None:

@@ -22,8 +22,11 @@ from repro.serving.transport.client import (DEFAULT_ARENA_BYTES,
 from repro.serving.transport.codec import (HAVE_MSGPACK, decode,
                                            decode_control, encode,
                                            encode_control)
-from repro.serving.transport.errors import (ArenaDead, ShardWorkerDied,
+from repro.serving.transport.errors import (ArenaDead, DeadlineExceeded,
+                                            ShardUnavailable,
+                                            ShardWorkerDied,
                                             ShardWorkerError)
+from repro.serving.transport.faults import FaultSpec, FaultyChannel
 from repro.serving.transport.framing import (SegmentSink, frame_buffers,
                                              parse_payload, recv_msg,
                                              send_msg, sendmsg_gather)
@@ -32,8 +35,10 @@ from repro.serving.transport.shm import (RING_C2W, RING_W2C, ArenaSink,
                                          default_arena_dir)
 
 __all__ = [
-    "ArenaDead", "ArenaSink", "DEFAULT_ARENA_BYTES", "HAVE_MSGPACK",
-    "RING_C2W", "RING_W2C", "SegmentSink", "ShardWorkerClient",
+    "ArenaDead", "ArenaSink", "DEFAULT_ARENA_BYTES", "DeadlineExceeded",
+    "FaultSpec", "FaultyChannel", "HAVE_MSGPACK",
+    "RING_C2W", "RING_W2C", "SegmentSink", "ShardUnavailable",
+    "ShardWorkerClient",
     "ShardWorkerDied", "ShardWorkerError", "ShmArena", "ShmChannel",
     "StreamChannel", "_FramedChannel", "_Reply", "_src_pythonpath",
     "arena_path", "decode", "decode_control", "default_arena_dir",

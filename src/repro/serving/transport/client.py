@@ -41,8 +41,10 @@ import time
 from typing import Any, Optional
 
 from repro.serving.transport.channel import ShmChannel, StreamChannel
-from repro.serving.transport.errors import (ShardWorkerDied,
+from repro.serving.transport.errors import (DeadlineExceeded,
+                                            ShardWorkerDied,
                                             ShardWorkerError)
+from repro.serving.transport.faults import FaultSpec, FaultyChannel
 from repro.serving.transport.shm import ShmArena, arena_path
 
 DEFAULT_ARENA_BYTES = 64 << 20     # per direction, per worker
@@ -51,12 +53,15 @@ DEFAULT_ARENA_BYTES = 64 << 20     # per direction, per worker
 class _Reply:
     """One outstanding pipelined request's reply slot."""
 
-    __slots__ = ("event", "value", "error")
+    __slots__ = ("event", "value", "error", "deadline")
 
     def __init__(self):
         self.event = threading.Event()
         self.value = None
         self.error: Optional[BaseException] = None
+        # absolute monotonic per-op deadline (None = only the waiter's
+        # own timeout applies)
+        self.deadline: Optional[float] = None
 
     def resolve(self, value=None, error: Optional[BaseException] = None):
         self.value = value
@@ -89,9 +94,17 @@ class ShardWorkerClient:
                  transport: str = "shm",
                  arena_bytes: int = DEFAULT_ARENA_BYTES,
                  arena_dir: Optional[str] = None,
-                 generation: int = 1):
+                 generation: int = 1,
+                 endpoint: Optional[str] = None,
+                 fault_spec: Optional[FaultSpec] = None):
         if transport not in ("shm", "socket"):
             raise ValueError(f"unknown shard transport {transport!r}")
+        if endpoint is not None:
+            # a remote worker is the StreamChannel over TCP — shm rings
+            # only exist between processes sharing /dev/shm
+            transport = "socket"
+        self.endpoint = endpoint
+        self.fault_spec = fault_spec
         self.shard_index = shard_index
         self.shard_dir = str(shard_dir)
         self.mode = mode
@@ -134,8 +147,10 @@ class ShardWorkerClient:
 
     @property
     def arena_generation(self) -> Optional[int]:
-        ch = self.channel
-        return ch.arena.generation if isinstance(ch, ShmChannel) else None
+        # getattr, not isinstance: a FaultyChannel wrapper delegates
+        # ``arena`` to the shm channel it wraps
+        arena = getattr(self.channel, "arena", None)
+        return arena.generation if arena is not None else None
 
     def transport_stats(self) -> dict:
         if self.channel is None:
@@ -158,7 +173,41 @@ class ShardWorkerClient:
         return None
 
     # -- lifecycle -------------------------------------------------------
+    def _wrap_faults(self, channel):
+        return (channel if self.fault_spec is None
+                else FaultyChannel(channel, self.fault_spec))
+
+    def _connect_remote(self):
+        """Attach to a standalone worker at ``host:port`` (the worker's
+        ``--port`` / ``RPC_PORT=`` mode). Connect honours the spawn
+        timeout; read deadlines ride the normal ``wait`` machinery. The
+        first ping is the readiness barrier exactly as for a spawned
+        child."""
+        host, _, port = self.endpoint.rpartition(":")
+        try:
+            sock = socket.create_connection(
+                (host or "127.0.0.1", int(port)),
+                timeout=min(10.0, self.spawn_timeout_s))
+        except OSError as e:
+            self.dead = True
+            raise ShardWorkerDied(
+                f"shard {self.shard_index} worker (endpoint "
+                f"{self.endpoint}) refused the connection ({e})") from e
+        sock.settimeout(None)
+        self.channel = self._wrap_faults(StreamChannel(sock))
+        self.dead = False
+        try:
+            return self.call("ping", {}, timeout=self.spawn_timeout_s)
+        except BaseException:
+            self.dead = True
+            ch, self.channel = self.channel, None
+            if ch is not None:
+                ch.close()
+            raise
+
     def spawn(self):
+        if self.endpoint is not None:
+            return self._connect_remote()
         arena = None
         if self.transport == "shm":
             path = arena_path(self.shard_index, self.generation,
@@ -186,11 +235,11 @@ class ShardWorkerClient:
                                      env=env, stdin=subprocess.DEVNULL)
         child.close()
         if arena is not None:
-            self.channel = ShmChannel(
+            self.channel = self._wrap_faults(ShmChannel(
                 parent, arena, liveness=self._peer_gone,
-                alloc_timeout_s=min(60.0, self.call_timeout_s))
+                alloc_timeout_s=min(60.0, self.call_timeout_s)))
         else:
-            self.channel = StreamChannel(parent)
+            self.channel = self._wrap_faults(StreamChannel(parent))
         self.dead = False
         try:
             # first ping doubles as the readiness barrier: the worker
@@ -220,12 +269,18 @@ class ShardWorkerClient:
         return self.proc.pid if self.proc is not None else None
 
     def alive(self) -> bool:
+        if self.endpoint is not None:
+            # no child to poll — liveness is the connection itself
+            return not self.dead and self.channel is not None
         return (not self.dead and self.proc is not None
                 and self.proc.poll() is None)
 
     # -- request/response ------------------------------------------------
-    def call_async(self, op: str, payload: Any) -> _Reply:
+    def call_async(self, op: str, payload: Any,
+                   timeout_ms: Optional[float] = None) -> _Reply:
         rep = _Reply()
+        if timeout_ms is not None:
+            rep.deadline = time.monotonic() + timeout_ms / 1e3
         with self._send_lock:
             if self.dead or self.channel is None:
                 raise self._died_error("is not running")
@@ -259,7 +314,21 @@ class ShardWorkerClient:
             try:
                 if rep.event.is_set():
                     break
-                remaining = deadline - time.monotonic()
+                now = time.monotonic()
+                if rep.deadline is not None and rep.deadline <= now \
+                        and rep.deadline <= deadline:
+                    # explicit per-op deadline: the worker is hung (or
+                    # the request was lost on the wire). Tear the
+                    # connection down — replies queued behind the
+                    # expired one would desequence the FIFO — and let
+                    # the router fail over to a sibling replica.
+                    self._mark_dead()
+                    raise DeadlineExceeded(
+                        f"shard {self.shard_index} per-op deadline "
+                        f"exceeded")
+                remaining = deadline - now
+                if rep.deadline is not None:
+                    remaining = min(remaining, rep.deadline - now)
                 if remaining <= 0:
                     if not kill_on_timeout:
                         raise ShardWorkerError(
@@ -267,8 +336,16 @@ class ShardWorkerClient:
                             f"deadline expired (worker busy)")
                     self._mark_dead()
                     raise self._died_error("RPC timed out")
+                ch = self.channel
+                if ch is None:
+                    # a concurrent _mark_dead (send failure on another
+                    # thread) dropped the channel between our deadline
+                    # check and this pump; the pending replies are
+                    # already resolved with errors
+                    raise self._died_error(
+                        "died while a reply was pending")
                 try:
-                    msg = self.channel.pump(min(remaining, 1.0))
+                    msg = ch.pump(min(remaining, 1.0))
                 except (OSError, ConnectionError, ValueError,
                         RuntimeError) as e:
                     self._mark_dead()
@@ -297,8 +374,11 @@ class ShardWorkerClient:
 
     def call(self, op: str, payload: Any,
              timeout: Optional[float] = None,
-             kill_on_timeout: bool = True):
-        return self.wait(self.call_async(op, payload), timeout=timeout,
+             kill_on_timeout: bool = True,
+             timeout_ms: Optional[float] = None):
+        return self.wait(self.call_async(op, payload,
+                                         timeout_ms=timeout_ms),
+                         timeout=timeout,
                          kill_on_timeout=kill_on_timeout)
 
     # -- failure / shutdown ----------------------------------------------
@@ -321,6 +401,10 @@ class ShardWorkerClient:
                 self._pending.popleft().resolve(error=err)
 
     def _died_error(self, why: str) -> ShardWorkerDied:
+        if self.endpoint is not None:
+            return ShardWorkerDied(
+                f"shard {self.shard_index} worker (endpoint "
+                f"{self.endpoint}) {why}")
         code = self.proc.poll() if self.proc is not None else None
         tail = "" if code is None else f"; exit code {code}"
         return ShardWorkerDied(
@@ -330,6 +414,16 @@ class ShardWorkerClient:
     def terminate(self, grace_s: float = 5.0) -> Optional[int]:
         """Graceful shutdown escalation: ``shutdown`` RPC → SIGTERM →
         SIGKILL. Always reaps; returns the exit code."""
+        if self.endpoint is not None:
+            # a remote worker outlives its coordinators: detaching just
+            # closes the connection (the worker's accept loop serves
+            # the next one). Killing shared fleet infrastructure from a
+            # client would be a layering violation.
+            self.dead = True
+            if self.channel is not None:
+                self.channel.close()
+                self.channel = None
+            return None
         if self.proc is None:
             return None
         if self.proc.poll() is None and not self.dead:

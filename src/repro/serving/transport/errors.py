@@ -30,3 +30,25 @@ class ArenaDead(ConnectionError):
     is gone (or the ring stayed full past its deadline). Subclasses
     ConnectionError so every transport-death path maps to
     :class:`ShardWorkerDied` in the client."""
+
+
+class DeadlineExceeded(ConnectionError):
+    """A per-op deadline (``timeout_ms``) expired before the worker
+    answered. Subclasses ConnectionError: a worker that blows an
+    explicit deadline is indistinguishable from a hung transport, so
+    the replica router treats it as a failover trigger. The connection
+    is torn down (replies behind the expired one would desequence the
+    FIFO otherwise)."""
+
+
+class ShardUnavailable(ShardWorkerDied):
+    """Every replica of a shard is dead or quarantined — there is no
+    sibling left to fail over to. Subclasses :class:`ShardWorkerDied`
+    so existing broad handlers keep working; carries the shard index
+    and the last per-replica error for diagnostics."""
+
+    def __init__(self, message: str, *, shard: int = -1,
+                 last_error: BaseException | None = None):
+        super().__init__(message)
+        self.shard = shard
+        self.last_error = last_error

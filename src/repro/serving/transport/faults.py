@@ -1,0 +1,172 @@
+"""Fault injection at the channel seam.
+
+:class:`FaultyChannel` wraps any transport channel and perturbs its
+*send* path by a seeded schedule, so the failover machinery above it
+(per-op deadlines, replica retry, degraded merge) is exercised
+deterministically in CI rather than only when real hardware misbehaves:
+
+* **drop** — the frame is silently discarded. The worker never sees the
+  request, so nothing answers: the op's deadline fires and the router
+  retries on a sibling replica.
+* **delay** — the frame is sent after a fixed sleep (straggler
+  simulation; what hedging is for).
+* **truncate** — a partial frame is written and the write side is shut
+  down: the peer desyncs mid-frame and both directions die, the way a
+  worker OOM-killed mid-``sendmsg`` looks from the coordinator.
+* **corrupt** — a well-framed garbage payload replaces the real frame:
+  the peer's codec rejects it and tears the connection down.
+
+The schedule is a :class:`FaultSpec` — a seeded ``random.Random`` plus
+per-fault probabilities — parsed from a compact string
+(``"seed=42,drop=0.05,delay=20:0.1,truncate=0.02,corrupt=0.02"``) so a
+chaos run is reproducible from its CLI flag alone. Receive-side state
+is untouched: a channel that injected nothing behaves bitwise like the
+wrapped channel, which keeps the parity contract intact for prob-0
+specs.
+"""
+
+from __future__ import annotations
+
+import random
+import socket
+import struct
+import time
+from typing import Optional
+
+__all__ = ["FaultSpec", "FaultyChannel"]
+
+
+class FaultSpec:
+    """Seeded fault schedule: independent per-send probabilities for
+    each fault kind, evaluated in a fixed order (drop, truncate,
+    corrupt, delay) so a given seed always yields the same fault
+    sequence for the same send sequence."""
+
+    __slots__ = ("seed", "drop", "delay_ms", "delay_p", "truncate",
+                 "corrupt")
+
+    def __init__(self, seed: int = 0, drop: float = 0.0,
+                 delay_ms: float = 0.0, delay_p: float = 0.0,
+                 truncate: float = 0.0, corrupt: float = 0.0):
+        self.seed = int(seed)
+        self.drop = float(drop)
+        self.delay_ms = float(delay_ms)
+        self.delay_p = float(delay_p)
+        self.truncate = float(truncate)
+        self.corrupt = float(corrupt)
+
+    @classmethod
+    def parse(cls, text: str) -> "FaultSpec":
+        """``"seed=42,drop=0.05,delay=20:0.1,truncate=0.02"`` →
+        :class:`FaultSpec`. ``delay`` takes ``<ms>:<probability>``;
+        every field is optional."""
+        kw: dict = {}
+        for part in text.split(","):
+            part = part.strip()
+            if not part:
+                continue
+            key, _, val = part.partition("=")
+            key = key.strip()
+            val = val.strip()
+            if key == "seed":
+                kw["seed"] = int(val)
+            elif key == "delay":
+                ms, _, p = val.partition(":")
+                kw["delay_ms"] = float(ms)
+                kw["delay_p"] = float(p) if p else 1.0
+            elif key in ("drop", "truncate", "corrupt"):
+                kw[key] = float(val)
+            else:
+                raise ValueError(f"unknown fault field {key!r} in "
+                                 f"{text!r}")
+        return cls(**kw)
+
+    def __repr__(self):  # pragma: no cover - debug aid
+        return (f"FaultSpec(seed={self.seed}, drop={self.drop}, "
+                f"delay={self.delay_ms}:{self.delay_p}, "
+                f"truncate={self.truncate}, corrupt={self.corrupt})")
+
+
+_LEN = struct.Struct(">Q")
+
+
+class FaultyChannel:
+    """Channel proxy injecting :class:`FaultSpec` faults on the send
+    path. Everything else (pump/recv/stats/byte counters) delegates to
+    the wrapped channel, so the client above cannot tell the
+    difference until a fault lands."""
+
+    def __init__(self, inner, spec: FaultSpec):
+        self._inner = inner
+        self._spec = spec
+        self._rng = random.Random(spec.seed)
+        self.faults = {"drop": 0, "delay": 0, "truncate": 0,
+                       "corrupt": 0}
+
+    # -- fault roll ---------------------------------------------------
+
+    def _roll(self) -> Optional[str]:
+        s = self._spec
+        # one draw per fault kind, fixed order: the fault sequence is a
+        # pure function of (seed, send index)
+        draws = [self._rng.random() for _ in range(4)]
+        if draws[0] < s.drop:
+            return "drop"
+        if draws[1] < s.truncate:
+            return "truncate"
+        if draws[2] < s.corrupt:
+            return "corrupt"
+        if draws[3] < s.delay_p and s.delay_ms > 0:
+            return "delay"
+        return None
+
+    # -- channel interface --------------------------------------------
+
+    def send(self, obj) -> int:
+        fault = self._roll()
+        if fault is None:
+            return self._inner.send(obj)
+        self.faults[fault] += 1
+        if fault == "drop":
+            return 0
+        if fault == "delay":
+            time.sleep(self._spec.delay_ms / 1e3)
+            return self._inner.send(obj)
+        sock = self._inner.sock
+        if fault == "truncate":
+            # claim an 8-byte payload, deliver half of it, then close
+            # the write side: the peer blocks mid-frame and then sees
+            # EOF — a worker killed mid-send, as observed on the wire
+            try:
+                sock.sendall(_LEN.pack(8) + b"\xde\xad\xbe\xef")
+                sock.shutdown(socket.SHUT_WR)
+            except OSError:
+                pass
+            raise ConnectionError("injected fault: truncated frame")
+        # corrupt: a complete frame whose payload no codec accepts —
+        # the peer decodes garbage and tears the connection down
+        junk = b"\x7f" + self._rng.randbytes(16)
+        try:
+            sock.sendall(_LEN.pack(len(junk)) + junk)
+        except OSError:
+            pass
+        raise ConnectionError("injected fault: corrupted frame")
+
+    def pump(self, slice_timeout: float = 1.0):
+        return self._inner.pump(slice_timeout)
+
+    def recv(self, timeout: Optional[float] = None):
+        return self._inner.recv(timeout)
+
+    def stats(self) -> dict:
+        st = self._inner.stats()
+        st["faults_injected"] = dict(self.faults)
+        return st
+
+    def close(self):
+        self._inner.close()
+
+    # byte counters, ``sock``, ``transport``, arena handles … all live
+    # on the wrapped channel
+    def __getattr__(self, name):
+        return getattr(self._inner, name)

@@ -200,6 +200,13 @@ def serve_connection(channel, state: _WorkerState):
             msg = channel.pump(0.5)
         except (ConnectionError, OSError):
             return                       # coordinator went away
+        except ValueError:
+            # undecodable frame: the stream is desynced (a corrupted or
+            # torn write on the client side). That is the *connection's*
+            # problem, never the worker's — drop the connection and let
+            # the accept loop serve the next one; a standalone fleet
+            # worker must survive any bytes a client throws at it
+            return
         if msg is None:
             continue
         op = msg.get("op", "")
@@ -216,6 +223,47 @@ def serve_connection(channel, state: _WorkerState):
             return
         if op == "shutdown":
             return
+
+
+def spawn_standalone(shard_dir, shard_index: int = 0, *,
+                     mode: str = "mmap", port: int = 0,
+                     plaid_params=None, ms_params=None,
+                     timeout_s: float = 180.0):
+    """Spawn a standalone worker subprocess (``--port`` mode) and wait
+    for its ``RPC_PORT=<n>`` readiness line; returns ``(proc, port)``.
+
+    The fleet harness behind remote-replica tests, the chaos smoke and
+    ``bench_latency.py --chaos-sweep``: each call stands up one
+    independently killable/restartable worker a coordinator attaches
+    to via ``replica_endpoints=…``. ``port=0`` binds an ephemeral
+    port; pass the old port back in to restart a killed worker at the
+    same endpoint (the listener sets SO_REUSEADDR)."""
+    import subprocess
+
+    from repro.serving.transport.client import _src_pythonpath
+
+    cmd = [sys.executable, "-m", "repro.serving.worker",
+           "--shard-dir", str(shard_dir),
+           "--shard-index", str(shard_index),
+           "--mode", mode, "--port", str(port),
+           "--plaid-json", json.dumps(plaid_params or {}),
+           "--ms-json", json.dumps(ms_params or {})]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = _src_pythonpath()
+    proc = subprocess.Popen(cmd, env=env, stdin=subprocess.DEVNULL,
+                            stdout=subprocess.PIPE, text=True)
+    deadline = time.monotonic() + timeout_s
+    while time.monotonic() < deadline:
+        line = proc.stdout.readline()
+        if not line:
+            break                       # EOF: the worker died
+        if line.startswith("RPC_PORT="):
+            return proc, int(line.strip().split("=", 1)[1])
+    proc.kill()
+    proc.wait(timeout=10)
+    raise RuntimeError(
+        f"standalone worker for shard {shard_index} ({shard_dir}) "
+        f"never reported RPC_PORT= (exit code {proc.returncode})")
 
 
 def main(argv=None):
