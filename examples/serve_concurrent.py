@@ -31,7 +31,8 @@ from repro.serving.server import (RetrievalServer, TCPRetrievalServer,
                                   tcp_query)
 
 
-def build_stack(splade_backend="host", splade_max_df=None):
+def build_stack(splade_backend="host", splade_max_df=None,
+                rerank_backend="fused"):
     cfg = SynthCfg(n_docs=2500, n_queries=200, seed=3)
     corpus = make_corpus(cfg)
     d = tempfile.mkdtemp(prefix="serve_")
@@ -48,7 +49,11 @@ def build_stack(splade_backend="host", splade_max_df=None):
         sidx, searcher,
         MultiStageParams(first_k=200, alpha=0.3,
                          splade_backend=splade_backend,
-                         splade_max_df=splade_max_df))
+                         splade_max_df=splade_max_df,
+                         rerank_backend=rerank_backend))
+    if retr.rerank_backend != rerank_backend:
+        print(f"rerank backend {rerank_backend!r} unavailable — "
+              f"using {retr.rerank_backend!r}")
     return corpus, retr
 
 
@@ -72,6 +77,11 @@ def main():
     ap.add_argument("--splade-max-df", type=int, default=None,
                     help="padded-postings df cap for jax/pallas "
                          "(memory vs exactness; default: exact)")
+    ap.add_argument("--rerank-backend", default="fused",
+                    choices=["fused", "split"],
+                    help="stage-4 tail: fused single-dispatch "
+                         "decompress+MaxSim+top-k vs the legacy split "
+                         "dispatches (bitwise-identical results)")
     ap.add_argument("--pipeline-depth", type=int, default=1,
                     help="stage-graph pipelining: 1 = synchronous, "
                          ">=2 overlaps mmap gathers with device "
@@ -84,7 +94,8 @@ def main():
 
     print("building index + retriever ...")
     corpus, retr = build_stack(splade_backend=args.splade_backend,
-                               splade_max_df=args.splade_max_df)
+                               splade_max_df=args.splade_max_df,
+                               rerank_backend=args.rerank_backend)
     # backend already configured via MultiStageParams in build_stack
     server = RetrievalServer(
         ServeEngine(retr, pipeline_depth=args.pipeline_depth),

@@ -165,9 +165,14 @@ def run_bench() -> dict:
     import jax
 
     return {
+        # rerank_backend records which stage-4 tail produced the perf
+        # numbers (the shards resolve "fused" → "split" when Pallas is
+        # missing); the checksum band stays identical either way — the
+        # fused tail is bitwise the split one
         "config": {"n_docs": cfg.n_docs, "seed": cfg.seed,
                    "n_queries": N_QUERIES, "shards": 2,
-                   "pipeline_depth": 2, "max_batch": 8},
+                   "pipeline_depth": 2, "max_batch": 8,
+                   "rerank_backend": retr.rerank_backend},
         # determinism holds per (jax build, machine) — fp reduction
         # order is an XLA/ISA property, so the exact bands only apply
         # when the environment matches the baseline's
@@ -241,6 +246,7 @@ def main(argv=None):
     RESULTS.mkdir(parents=True, exist_ok=True)
     CI_JSON.write_text(json.dumps(metrics, indent=1))
     print(f"bench-gate: qps={metrics['perf']['qps']:.1f} "
+          f"[rerank={metrics['config']['rerank_backend']}] "
           f"p99={metrics['perf']['p99_ms']:.1f}ms "
           f"gather={metrics['perf']['gather_wall_s'] * 1e3:.1f}ms "
           f"tokens={metrics['determinism']['residual_tokens_read']} "

@@ -77,10 +77,12 @@ stage_unit() {
 
 stage_kernels() {
     # kernel parity in Pallas interpret mode, run explicitly: the kernel
-    # bodies (maxsim, decompress+maxsim, splade single/batched) must
-    # match their jnp oracles even when a filtered unit run skipped them
+    # bodies (maxsim, decompress+maxsim, splade single/batched, and the
+    # fused rerank tail incl. its bitwise split-pipeline equivalence)
+    # must match their jnp oracles even when a filtered unit run
+    # skipped them
     python -m pytest -q tests/test_kernels.py tests/test_splade_stage1.py \
-        -k "interpret"
+        -k "interpret or fused_rerank"
 }
 
 stage_smoke() {

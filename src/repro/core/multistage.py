@@ -27,6 +27,7 @@ from repro.core.plaid import (
 )
 from repro.index.splade_device import SpladeDeviceCache
 from repro.index.splade_index import SpladeIndex
+from repro.kernels.fused_rerank import ops as fused_ops
 from repro.serving.pipeline import (
     DEVICE,
     HOST,
@@ -37,6 +38,7 @@ from repro.serving.pipeline import (
 )
 
 SPLADE_BACKENDS = ("host", "jax", "pallas")
+RERANK_BACKENDS = ("fused", "split")
 METHODS = ("colbert", "splade", "rerank", "hybrid")
 
 
@@ -48,6 +50,7 @@ class MultiStageParams:
     normalizer: str = "znorm"
     splade_backend: str = "host"  # stage-1 scorer: host | jax | pallas
     splade_max_df: Optional[int] = None  # padded-postings df cap (None=exact)
+    rerank_backend: str = "fused"  # stage-4 tail: fused | split
 
 
 class MultiStageRetriever:
@@ -70,6 +73,7 @@ class MultiStageRetriever:
         # pipeline executors can hold a stable reference
         self.pipeline_stats = PipelineStats()
         self.set_splade_backend(params.splade_backend)  # validates
+        self.set_rerank_backend(params.rerank_backend)
         self.reset_stage_stats()
         if params.splade_backend != "host":
             self.splade_device_cache()    # pay the transfer up front
@@ -82,6 +86,20 @@ class MultiStageRetriever:
             raise ValueError(f"splade backend {backend!r} not in "
                              f"{SPLADE_BACKENDS}")
         self.splade_backend = backend
+
+    def set_rerank_backend(self, backend: str):
+        """Stage-4 tail selection: ``fused`` collapses exact scoring,
+        masking, (hybrid) α-fusion and top-k selection into ONE device
+        dispatch (the ``fused_rerank`` kernel / fused-XLA tail);
+        ``split`` keeps the legacy multi-dispatch tail. Results are
+        bitwise-identical — ``fused`` silently degrades to ``split``
+        when the Pallas toolchain is absent."""
+        if backend not in RERANK_BACKENDS:
+            raise ValueError(f"rerank backend {backend!r} not in "
+                             f"{RERANK_BACKENDS}")
+        if backend == "fused" and not fused_ops.HAVE_PALLAS:
+            backend = "split"
+        self.rerank_backend = backend
 
     def splade_device_cache(self) -> SpladeDeviceCache:
         """Padded-postings device arrays, materialised once and reused
@@ -209,15 +227,16 @@ class MultiStageRetriever:
     def compile_plan(self, method: str) -> StagePlan:
         """Compile one of the four systems to its typed stage graph.
 
-        Plans are cached per (method, stage-1 backend); the stage
-        functions close over ``self`` and read dynamic state (backend,
-        device caches) at run time. The synchronous :meth:`search_batch`
-        and the pipelined executor both run the plan returned here, so
-        depth-1 vs depth-N results are method-faithful by construction.
+        Plans are cached per (method, stage-1 backend, rerank backend);
+        the stage functions close over ``self`` and read dynamic state
+        (backend, device caches) at run time. The synchronous
+        :meth:`search_batch` and the pipelined executor both run the
+        plan returned here, so depth-1 vs depth-N results are
+        method-faithful by construction.
         """
         if method not in METHODS:
             raise ValueError(method)
-        key = (method, self.splade_backend)
+        key = (method, self.splade_backend, self.rerank_backend)
         with self._lock:
             # one plan object per key: the engine keys live executors on
             # plan identity, so two racing builders must not each get a
@@ -296,14 +315,37 @@ class MultiStageRetriever:
                 return cb.evolve(pids=s["out_pids"],
                                  scores=s["out_scores"]).with_state(aux=aux)
 
-            stages = (Stage("plaid_probe", DEVICE, probe),
-                      Stage("host_gather:codes", gather_kind, gather_codes),
-                      Stage("device_score:approx", DEVICE, approx),
-                      Stage("host_gather:residuals", gather_kind,
-                            gather_residuals),
-                      Stage("device_score:exact", DEVICE, exact),
-                      Stage("fuse_topk", DEVICE, fuse))
-            return StagePlan(method=method, stages=stages,
+            def exact_fused(cb):
+                # fused stage-4 tail: decompress + MaxSim + top-k in ONE
+                # dispatch (no materialised (B, C) score tensor on the
+                # kernel path), then host-side pid mapping — replaces
+                # device_score:exact (2 dispatches) + fuse_topk's
+                # finalize (top_k + take_along_axis)
+                s = cb.state
+                top_s, top_i = searcher.fused_topk_gathered(
+                    s["q"], s["q_valid"], jnp.asarray(s["f_codes"]),
+                    jnp.asarray(s["f_packed"]), jnp.asarray(s["f_valid"]),
+                    s["final_np"] >= 0, cb.k)
+                pids, scores = searcher.finalize_topk_fused(
+                    top_s, top_i, s["final_np"], s["B"], cb.k)
+                aux = [{"candidates": int(x)} for x in s["n_real"]]
+                return cb.evolve(pids=pids,
+                                 scores=scores).with_state(aux=aux)
+
+            head = (Stage("plaid_probe", DEVICE, probe),
+                    Stage("host_gather:codes", gather_kind, gather_codes),
+                    Stage("device_score:approx", DEVICE, approx),
+                    Stage("host_gather:residuals", gather_kind,
+                          gather_residuals))
+            if self.rerank_backend == "fused":
+                tail = (Stage("fused_rerank", DEVICE, exact_fused,
+                              device_dispatches=1),)
+            else:
+                tail = (Stage("device_score:exact", DEVICE, exact,
+                              device_dispatches=4),
+                        Stage("fuse_topk", DEVICE, fuse,
+                              device_dispatches=0))
+            return StagePlan(method=method, stages=head + tail,
                              access_stats=access)
 
         s1_kind = HOST if self.splade_backend == "host" else DEVICE
@@ -321,7 +363,7 @@ class MultiStageRetriever:
                                  scores=s["s_scores"][:, :cb.k])
 
             stages = (Stage("splade_stage1", s1_kind, splade_stage),
-                      Stage("fuse_topk", HOST, fuse_splade))
+                      Stage("fuse_splade", HOST, fuse_splade))
             return StagePlan(method=method, stages=stages,
                              access_stats=access)
 
@@ -377,18 +419,64 @@ class MultiStageRetriever:
                 np.take_along_axis(pids_b, order, axis=1), -1)
             return cb.evolve(pids=out_pids, scores=sorted_final)
 
+        def score_fused(cb):
+            # the whole stage-4 tail — exact scoring, masking, (hybrid)
+            # α-fusion and top-k selection — as ONE lazy device
+            # dispatch; cand_mask comes from host numpy so nothing else
+            # touches the device here
+            s = cb.state
+            cand_mask = s["pids_p"] >= 0
+            if method == "hybrid":
+                top = searcher.fused_hybrid_topk_gathered(
+                    jnp.asarray(s["q"]), jnp.asarray(s["q_valid"]),
+                    jnp.asarray(s["g_codes"]), jnp.asarray(s["g_packed"]),
+                    jnp.asarray(s["g_valid"]), cand_mask, s["s_scores"],
+                    cb.alphas, cb.k, s["B"], p.normalizer)
+            else:
+                top = searcher.fused_topk_gathered(
+                    jnp.asarray(s["q"]), jnp.asarray(s["q_valid"]),
+                    jnp.asarray(s["g_codes"]), jnp.asarray(s["g_packed"]),
+                    jnp.asarray(s["g_valid"]), cand_mask, cb.k)
+            return cb.with_state(top_s=top[0], top_i=top[1])
+
+        def fuse_fused(cb):
+            # close the async window: sync the (already-selected) top-k
+            # and map candidate-axis indices to pids — no argsort, no
+            # extra dispatches. Width is min(k, first_k), exactly the
+            # split tail's contract.
+            s = cb.state
+            top_s = np.asarray(s["top_s"])[:s["B"]]    # device sync
+            top_i = np.asarray(s["top_i"])[:s["B"]]
+            out_pids = np.where(
+                top_s > -np.inf,
+                np.take_along_axis(np.asarray(s["pids_b"]),
+                                   np.clip(top_i, 0, None).astype(np.int64),
+                                   axis=1), -1)
+            return cb.evolve(pids=out_pids, scores=top_s)
+
         # score opens the async window (its dispatch returns lazy device
         # values); fuse closes it (first host touch blocks). The
         # single-worker scheduler parks a batch between the two while it
         # runs the next batch's host stages — and fuse is DEVICE-kind so
         # that in threaded mode the sync also stays off the gather
-        # worker.
+        # worker. The fused backend keeps the identical two-stage
+        # async shape (so pipeline overlap is preserved) but its dispatch
+        # stage launches ONE device computation instead of 3-4 and its
+        # sync stage launches none.
+        if self.rerank_backend == "fused":
+            tail = (Stage("fused_rerank", DEVICE, score_fused,
+                          opens_async=True, device_dispatches=1),
+                    Stage("fused_rerank:sync", DEVICE, fuse_fused,
+                          closes_async=True, device_dispatches=0))
+        else:
+            tail = (Stage("device_score:maxsim", DEVICE, score,
+                          opens_async=True,
+                          device_dispatches=4 if method == "hybrid" else 3),
+                    Stage("fuse_topk", DEVICE, fuse_rerank,
+                          closes_async=True, device_dispatches=0))
         stages = (Stage("splade_stage1", s1_kind, splade_stage),
-                  Stage("host_gather:residuals", gather_kind, gather),
-                  Stage("device_score:maxsim", DEVICE, score,
-                        opens_async=True),
-                  Stage("fuse_topk", DEVICE, fuse_rerank,
-                        closes_async=True))
+                  Stage("host_gather:residuals", gather_kind,
+                        gather)) + tail
         return StagePlan(method=method, stages=stages, access_stats=access)
 
     # ------------------------------------------------------------------

@@ -25,9 +25,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.common.utils import next_pow2 as _next_pow2
+from repro.core import hybrid as hybrid_mod
 from repro.index.builder import ColBERTIndex
 from repro.index.residual import unpack_codes
 from repro.kernels.decompress_maxsim.ops import decompress_maxsim_scores_batch
+from repro.kernels.fused_rerank.ops import fused_rerank_topk_batch
 from repro.models.colbert import maxsim
 
 
@@ -78,6 +80,33 @@ def stage3_approx_score(scores_c, cand_codes, cand_valid, q_valid=None):
     if q_valid is not None:
         per_q = per_q * q_valid[:, None]
     return jnp.sum(per_q, axis=0)                # (C,)
+
+
+@functools.partial(jax.jit, static_argnames=("nbits", "k", "b",
+                                             "normalizer", "impl"))
+def fused_hybrid_tail(q, packed, cids, valid, cand_mask, centroids,
+                      bucket_weights, q_valid, s_scores, alphas, *,
+                      nbits: int, k: int, b: int, normalizer: str,
+                      impl: str = "auto"):
+    """Fused stage-4 tail for the hybrid method: decompress + MaxSim
+    (the fused scoring kernel on TPU), α-interpolated z-normed fusion
+    with the stage-1 scores, and the per-query top-k — ONE dispatch.
+
+    Hybrid cannot take the top-k-only ``fused_rerank`` kernel end-to-end
+    because the normaliser needs per-query statistics over the *full*
+    candidate list; the (b, C) exact-score tensor is tiny (C = first_k),
+    so the win here is folding masking + fusion + selection into the
+    scoring dispatch — no host argsort, no intermediate syncs. Scoring
+    runs on the padded ``Bp`` rows and slices to the ``b`` real ones
+    exactly like the split path, so results stay bitwise-identical.
+    """
+    c = decompress_maxsim_scores_batch(
+        q, packed, cids, valid, centroids, bucket_weights, nbits=nbits,
+        q_valid=q_valid, impl=impl)
+    c = jnp.where(cand_mask, c, -jnp.inf)[:b]
+    final = hybrid_mod.hybrid_scores(s_scores, c, cand_mask[:b],
+                                     alpha=alphas, normalizer=normalizer)
+    return jax.lax.top_k(final, k)
 
 
 @functools.partial(jax.jit, static_argnames=("nbits",))
@@ -330,6 +359,53 @@ class PLAIDSearcher:
         scores aligned with ``pids_p`` (rows beyond ``B`` dropped)."""
         return np.asarray(self.score_gathered_lazy(
             q, q_valid, codes, packed, valid, pids_p))[:B]
+
+    # -- fused stage-4 tail (rerank_backend="fused") -----------------------
+    def fused_topk_gathered(self, q, q_valid, codes, packed, valid,
+                            cand_mask, k: int):
+        """Fused stage-4 tail: decompress + MaxSim + per-query top-k as
+        ONE device dispatch — the tiled ``fused_rerank`` Pallas kernel
+        on TPU (no materialised (B, C) scores), the same fused XLA
+        computation elsewhere. ``cand_mask``: host (Bp, C) bool
+        (``pids >= 0``). Returns *lazy* (scores (Bp, kk), idx (Bp, kk)
+        into the candidate axis), kk = min(k, C), selection and tie
+        order bitwise-identical to :meth:`exact_score_gathered` +
+        ``lax.top_k``."""
+        return fused_rerank_topk_batch(
+            q, packed, codes.astype(jnp.int32), valid,
+            jnp.asarray(cand_mask), self.centroids, self.bucket_weights,
+            nbits=self.index.nbits, k=min(k, cand_mask.shape[1]),
+            q_valid=q_valid)
+
+    def fused_hybrid_topk_gathered(self, q, q_valid, codes, packed, valid,
+                                   cand_mask, s_scores, alphas, k: int,
+                                   b: int, normalizer: str):
+        """Hybrid fused tail (see :func:`fused_hybrid_tail`): scoring +
+        α-fusion + top-k in one dispatch. Returns lazy (scores (b, kk),
+        idx (b, kk)), kk = min(k, first_k)."""
+        return fused_hybrid_tail(
+            q, packed, codes.astype(jnp.int32), valid,
+            jnp.asarray(cand_mask), self.centroids, self.bucket_weights,
+            q_valid, jnp.asarray(s_scores), jnp.asarray(alphas),
+            nbits=self.index.nbits, k=min(k, cand_mask.shape[1]), b=b,
+            normalizer=normalizer)
+
+    def finalize_topk_fused(self, top_s, top_i, final_np, B: int, k: int):
+        """Terminal formatting for the fused tail: map candidate-axis
+        indices back to pids and pad to the (B, k) (-1, -inf) contract —
+        the fused counterpart of :meth:`finalize_topk`, minus its
+        ``lax.top_k``/``take_along_axis`` dispatches (selection already
+        happened inside the fused kernel)."""
+        kk = top_i.shape[1]
+        out_pids = np.full((B, k), -1, np.int64)
+        out_scores = np.full((B, k), -np.inf, np.float32)
+        s_np = np.asarray(top_s)[:B]
+        i_np = np.asarray(top_i)[:B]
+        out_pids[:, :kk] = np.take_along_axis(
+            final_np[:B], np.clip(i_np, 0, None).astype(np.int64), axis=1)
+        out_pids[:, :kk][i_np < 0] = -1
+        out_scores[:, :kk] = s_np
+        return out_pids, out_scores
 
     # -- batched full PLAID (stages 1-4 over a query micro-batch) ----------
     def search_batch(self, q_embs, k: Optional[int] = None):

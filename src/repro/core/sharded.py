@@ -347,6 +347,7 @@ class ShardedRetriever(MultiStageRetriever):
         self._pool = pool or ThreadPoolExecutor(
             max_workers=workers, thread_name_prefix="shard")
         self.set_splade_backend(self.params.splade_backend)
+        self.set_rerank_backend(self.params.rerank_backend)
 
     # ------------------------------------------------------------------
     # group-wide knobs
@@ -357,6 +358,22 @@ class ShardedRetriever(MultiStageRetriever):
         for sh in self.shards:
             sh.set_splade_backend(backend)
         self.splade_backend = backend
+
+    def set_rerank_backend(self, backend: str):
+        """Switch every shard's stage-4 tail. The *multi-shard* plans
+        below keep the split tail structure regardless: the hybrid
+        normaliser needs per-query statistics over the full cross-shard
+        candidate list and the merge fuses need each shard's narrow
+        score slice, so there is no single-dispatch tail to collapse
+        into. Per-shard retrievers still honour the knob (their own
+        plans are fused), and ``n_shards == 1`` delegates
+        ``compile_plan`` wholesale — the one-shard group inherits the
+        fused tail bitwise."""
+        for sh in self.shards:
+            sh.set_rerank_backend(backend)
+        # group-level plans are split-shaped; record the shards' actual
+        # (possibly Pallas-degraded) resolution for the cache key
+        self.rerank_backend = self.shards[0].rerank_backend
 
     def splade_device_cache(self):
         """Materialise every shard's padded-postings device cache (each
@@ -936,6 +953,10 @@ class ProcessShardGroup(MultiStageRetriever):
         self._heal_wake = threading.Event()
         self._centroids_cache = None
         self.set_splade_backend(self.params.splade_backend)
+        # group plans are split-shaped (cross-process merges need each
+        # worker's narrow score slice); the knob still resolves so the
+        # plan-cache key and health snapshots stay uniform
+        self.set_rerank_backend(self.params.rerank_backend)
         if autostart:
             self.start()
 

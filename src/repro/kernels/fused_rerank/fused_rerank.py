@@ -1,0 +1,178 @@
+"""Pallas TPU kernel: fused decompress + MaxSim + running per-query
+top-k over candidate tiles — the FLASH-MAXSIM-style rerank tail.
+
+The split stage-4 tail runs three dispatches (decompress+MaxSim scores,
+score masking, top-k selection) and materialises the full ``(B, C)``
+score tensor — and, unfused, the ``(B, C, Lq, Ld)`` similarity tensor —
+in HBM between them. This kernel streams packed residual codes through
+VMEM one candidate tile at a time, decompresses against the
+VMEM-resident centroid table in-register (``_decode_tile``), scores the
+tile (``_score_tile``, shared with ``decompress_maxsim`` so the fused
+and split paths compute *identical* per-candidate arithmetic), and
+folds the tile into a running per-query top-k held in the output block
+across grid steps. Nothing wider than one ``(block_c,)`` score slice
+ever exists:
+
+  HBM traffic per query:  packed codes + ids + valid   (the tile stream)
+                          + 2·k·4 B result             (scores + indices)
+  vs. split:              + C·4 B scores write+read + top-k pass
+
+The running top-k merge is *sortless*: each grid step ranks the
+``k_pad + block_c`` merged entries by pairwise comparison counts
+(rank_j = #{m : (s_m, -i_m) ≻ (s_j, -i_j)}) and gathers entry ``j``
+into output slot ``rank_j`` with a masked sum — O(n²) compares on the
+VPU with n ≈ 144, no sort lowering required, and the (score desc,
+index asc) tie order is exactly ``lax.top_k``'s, so the fused result is
+bitwise the split path's. Candidate tiles arrive in ascending index
+order and the running entries always carry lower indices than the
+incoming tile, which is what makes the incremental merge reproduce the
+global stable order.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.decompress_maxsim.decompress_maxsim import _score_tile
+
+
+def _merge_topk(prev_s, prev_i, tile_s, tile_i, kp: int):
+    """Rank-selection merge of the running (kp,) state with a scored
+    tile: top-``kp`` of the concatenation by (score desc, index asc).
+    All indices are distinct, so ranks are a permutation and the masked
+    sums gather exactly one entry per output slot (-inf survives the
+    where-sum; no -inf·0 NaNs)."""
+    ms = jnp.concatenate([prev_s, tile_s])
+    mi = jnp.concatenate([prev_i, tile_i])
+    beats = (ms[None, :] > ms[:, None]) | (
+        (ms[None, :] == ms[:, None]) & (mi[None, :] < mi[:, None]))
+    rank = jnp.sum(beats.astype(jnp.int32), axis=1)          # (n,)
+    sel = rank[None, :] == jnp.arange(kp, dtype=jnp.int32)[:, None]
+    out_s = jnp.sum(jnp.where(sel, ms[None, :], 0.0), axis=1)
+    out_i = jnp.sum(jnp.where(sel, mi[None, :], 0), axis=1)
+    return out_s, out_i
+
+
+def _tile_state(step, s, prev_s, prev_i, cmask, kp: int, block_c: int,
+                total_c: int):
+    """One grid step of the running top-k: mask the tile's scores, give
+    each entry its global candidate index, and merge with the carried
+    state. ``step == 0`` replaces the (uninitialised) carried state with
+    sentinels that lose every comparison: -inf scores with indices past
+    ``total_c``, so real candidates — even masked ones, which tie at
+    -inf but carry lower indices — always displace them."""
+    s = jnp.where(cmask != 0, s, -jnp.inf)
+    tile_i = step * block_c + jnp.arange(block_c, dtype=jnp.int32)
+    first = step == 0
+    prev_s = jnp.where(first, -jnp.inf, prev_s)
+    prev_i = jnp.where(first,
+                       total_c + jnp.arange(kp, dtype=jnp.int32), prev_i)
+    return _merge_topk(prev_s, prev_i, s, tile_i, kp)
+
+
+def _kernel(q_ref, packed_ref, cids_ref, valid_ref, cmask_ref, qvalid_ref,
+            centroids_ref, weights_ref, out_s_ref, out_i_ref, *,
+            nbits, gather, kp, block_c):
+    i = pl.program_id(0)
+    s = _score_tile(q_ref[...], packed_ref[...], cids_ref[...],
+                    valid_ref[...], qvalid_ref[...], centroids_ref[...],
+                    weights_ref[...], nbits, gather)
+    out_s_ref[...], out_i_ref[...] = _tile_state(
+        i, s, out_s_ref[...], out_i_ref[...], cmask_ref[...], kp,
+        block_c, pl.num_programs(0) * block_c)
+
+
+def _batch_kernel(q_ref, packed_ref, cids_ref, valid_ref, cmask_ref,
+                  qvalid_ref, centroids_ref, weights_ref, out_s_ref,
+                  out_i_ref, *, nbits, gather, kp, block_c):
+    # grid (B, C//block_c): for a fixed batch row the candidate tiles
+    # run consecutively, so the (1, kp) output block stays VMEM-resident
+    # as the running top-k state across the whole row
+    i = pl.program_id(1)
+    s = _score_tile(q_ref[0], packed_ref[0], cids_ref[0], valid_ref[0],
+                    qvalid_ref[0], centroids_ref[...], weights_ref[...],
+                    nbits, gather)
+    out_s_ref[0, :], out_i_ref[0, :] = _tile_state(
+        i, s, out_s_ref[0, :], out_i_ref[0, :], cmask_ref[0], kp,
+        block_c, pl.num_programs(1) * block_c)
+
+
+@functools.partial(jax.jit, static_argnames=("nbits", "kp", "block_c",
+                                             "gather", "interpret"))
+def fused_rerank_pallas(q, packed, cids, valid, cmask, q_valid, centroids,
+                        bucket_weights, *, nbits: int, kp: int,
+                        block_c: int = 16, gather: str = "take",
+                        interpret: bool = False):
+    """Single-query fused tail: q (Lq, d); packed (C, Ld, pd) u8;
+    cids/valid (C, Ld); cmask (C,) i8 → (scores (kp,), idx (kp,) i32),
+    the top-``kp`` of the masked MaxSim scores in (desc, index-asc)
+    order. Requires ``C % block_c == 0`` and ``kp <= C``."""
+    C, Ld, pd = packed.shape
+    Lq, d = q.shape
+    K = centroids.shape[0]
+    assert C % block_c == 0 and 0 < kp <= C
+    grid = (C // block_c,)
+    kernel = functools.partial(_kernel, nbits=nbits, gather=gather,
+                               kp=kp, block_c=block_c)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((Lq, d), lambda i: (0, 0)),
+            pl.BlockSpec((block_c, Ld, pd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_c, Ld), lambda i: (i, 0)),
+            pl.BlockSpec((block_c, Ld), lambda i: (i, 0)),
+            pl.BlockSpec((block_c,), lambda i: (i,)),
+            pl.BlockSpec((Lq,), lambda i: (0,)),
+            pl.BlockSpec((K, d), lambda i: (0, 0)),      # whole table
+            pl.BlockSpec((1 << nbits,), lambda i: (0,)),
+        ],
+        out_specs=(pl.BlockSpec((kp,), lambda i: (0,)),
+                   pl.BlockSpec((kp,), lambda i: (0,))),
+        out_shape=(jax.ShapeDtypeStruct((kp,), jnp.float32),
+                   jax.ShapeDtypeStruct((kp,), jnp.int32)),
+        interpret=interpret,
+    )(q, packed, cids, valid, cmask, q_valid, centroids, bucket_weights)
+
+
+@functools.partial(jax.jit, static_argnames=("nbits", "kp", "block_c",
+                                             "gather", "interpret"))
+def fused_rerank_pallas_batch(q, packed, cids, valid, cmask, q_valid,
+                              centroids, bucket_weights, *, nbits: int,
+                              kp: int, block_c: int = 16,
+                              gather: str = "take",
+                              interpret: bool = False):
+    """Batched fused tail: q (B, Lq, d); packed (B, C, Ld, pd);
+    cids/valid (B, C, Ld); cmask (B, C) i8; q_valid (B, Lq) →
+    (scores (B, kp), idx (B, kp)). One kernel launch reranks the whole
+    micro-batch — the single device dispatch of the fused stage."""
+    B, C, Ld, pd = packed.shape
+    Lq, d = q.shape[1:]
+    K = centroids.shape[0]
+    assert C % block_c == 0 and 0 < kp <= C
+    grid = (B, C // block_c)
+    kernel = functools.partial(_batch_kernel, nbits=nbits, gather=gather,
+                               kp=kp, block_c=block_c)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Lq, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, block_c, Ld, pd), lambda b, i: (b, i, 0, 0)),
+            pl.BlockSpec((1, block_c, Ld), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_c, Ld), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_c), lambda b, i: (b, i)),
+            pl.BlockSpec((1, Lq), lambda b, i: (b, 0)),
+            pl.BlockSpec((K, d), lambda b, i: (0, 0)),   # whole table
+            pl.BlockSpec((1 << nbits,), lambda b, i: (0,)),
+        ],
+        out_specs=(pl.BlockSpec((1, kp), lambda b, i: (b, 0)),
+                   pl.BlockSpec((1, kp), lambda b, i: (b, 0))),
+        out_shape=(jax.ShapeDtypeStruct((B, kp), jnp.float32),
+                   jax.ShapeDtypeStruct((B, kp), jnp.int32)),
+        interpret=interpret,
+    )(q, packed, cids, valid, cmask, q_valid, centroids, bucket_weights)

@@ -1,0 +1,72 @@
+"""Oracle for the fused rerank tail: decompress → MaxSim → stable top-k.
+
+The contract every implementation must honour bitwise:
+
+    masked = where(cand_mask, maxsim(decompress(packed)), -inf)
+    top-k by (score desc, candidate index asc)      # lax.top_k ties
+
+i.e. exactly the split path (``decompress_maxsim`` scores, ``-inf`` at
+masked candidates, then ``lax.top_k`` / a stable host argsort — both
+break score ties toward the lower candidate index). When ``k`` exceeds
+the candidate count the tail is padded with ``(-inf, -1)``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decompress_maxsim.ref import (
+    decompress_maxsim_batch_ref,
+    decompress_maxsim_ref,
+)
+
+
+def _pad_topk(vals, idx, k: int):
+    kk = vals.shape[-1]
+    if kk == k:
+        return vals, idx.astype(jnp.int32)
+    pad = [(0, 0)] * (vals.ndim - 1) + [(0, k - kk)]
+    vals = jnp.pad(vals, pad, constant_values=-jnp.inf)
+    idx = jnp.pad(idx.astype(jnp.int32), pad, constant_values=-1)
+    return vals, idx
+
+
+def fused_rerank_ref(q, packed, cids, doc_valid, cand_mask, centroids,
+                     bucket_weights, nbits: int, k: int, q_valid=None):
+    """q (Lq, d); packed (C, Ld, d·nbits/8) u8; cids/doc_valid (C, Ld);
+    cand_mask (C,) bool (False = padded candidate slot) →
+    (scores (k,) f32 desc, idx (k,) i32 into the candidate axis)."""
+    C = cids.shape[0]
+    kk = min(k, C)
+    if kk == 0:
+        return (jnp.full((k,), -jnp.inf, jnp.float32),
+                jnp.full((k,), -1, jnp.int32))
+    scores = decompress_maxsim_ref(q, packed, cids, doc_valid, centroids,
+                                   bucket_weights, nbits, q_valid)
+    masked = jnp.where(cand_mask, scores, -jnp.inf)
+    vals, idx = jax.lax.top_k(masked, kk)
+    return _pad_topk(vals, idx, k)
+
+
+def fused_rerank_batch_ref(q, packed, cids, doc_valid, cand_mask, centroids,
+                           bucket_weights, nbits: int, k: int, q_valid=None):
+    """Leading-batch-dim oracle: q (B, Lq, d); packed (B, C, Ld, pd);
+    cids/doc_valid (B, C, Ld); cand_mask (B, C) →
+    (scores (B, k), idx (B, k)).
+
+    Scores come from the *same* batched reference the split path runs
+    (``decompress_maxsim_batch_ref``), with masking and ``lax.top_k``
+    applied at the batch level — the exact computation graph whose
+    composition is bitwise-stable against the split dispatches."""
+    B, C = cids.shape[:2]
+    kk = min(k, C)
+    if kk == 0:
+        return (jnp.full((B, k), -jnp.inf, jnp.float32),
+                jnp.full((B, k), -1, jnp.int32))
+    scores = decompress_maxsim_batch_ref(q, packed, cids, doc_valid,
+                                         centroids, bucket_weights, nbits,
+                                         q_valid)
+    masked = jnp.where(cand_mask, scores, -jnp.inf)
+    vals, idx = jax.lax.top_k(masked, kk)
+    return _pad_topk(vals, idx, k)

@@ -34,6 +34,7 @@ from repro.serving.server import RetrievalServer
 def build_or_load(index_dir: str | None, mode: str,
                   splade_backend: str = "host",
                   splade_max_df: int | None = None,
+                  rerank_backend: str = "fused",
                   n_shards: int = 1, shard_workers: str = "thread",
                   shard_transport: str | None = None,
                   arena_bytes: int | None = None,
@@ -80,7 +81,8 @@ def build_or_load(index_dir: str | None, mode: str,
     plaid_params = PlaidParams(nprobe=4, candidate_cap=1024, ndocs=256)
     ms_params = MultiStageParams(first_k=200, alpha=0.3,
                                  splade_backend=splade_backend,
-                                 splade_max_df=splade_max_df)
+                                 splade_max_df=splade_max_df,
+                                 rerank_backend=rerank_backend)
     if n_shards > 1 or shard_workers == "process":
         from repro.index.sharding import load_group
         group = split_index_tree(base, n_shards)
@@ -124,6 +126,14 @@ def main():
     ap.add_argument("--splade-max-df", type=int, default=None,
                     help="padded-postings df cap for jax/pallas "
                          "(memory vs exactness; default: exact)")
+    ap.add_argument("--rerank-backend", default="fused",
+                    choices=["fused", "split"],
+                    help="stage-4 tail: fused = decompress + MaxSim + "
+                         "top-k in ONE device dispatch (the tiled "
+                         "fused_rerank kernel on TPU, a fused XLA tail "
+                         "elsewhere), split = the legacy multi-dispatch "
+                         "tail. Results are bitwise-identical; fused "
+                         "degrades to split when Pallas is unavailable")
     ap.add_argument("--shards", type=int, default=1,
                     help=">=2: partition the index into this many "
                          "contiguous doc-range shards (scatter-gather "
@@ -209,7 +219,8 @@ def main():
              else (2 if args.pipeline else 1))
     corpus, index, retr = build_or_load(
         args.index_dir, args.mode, args.splade_backend,
-        args.splade_max_df, n_shards=args.shards,
+        args.splade_max_df, rerank_backend=args.rerank_backend,
+        n_shards=args.shards,
         shard_workers=args.shard_workers,
         shard_transport=args.shard_transport,
         arena_bytes=args.arena_bytes,
@@ -230,8 +241,13 @@ def main():
         batch_timeout_ms=args.batch_timeout_ms,
         latency_slo_ms=args.latency_slo_ms)
     server.start()
+    rb = getattr(retr, "rerank_backend", args.rerank_backend)
+    if rb != args.rerank_backend:
+        print(f"rerank backend {args.rerank_backend!r} unavailable "
+              f"(no Pallas toolchain) — falling back to {rb!r}")
     print(f"serving ({args.mode} index, {args.threads} thread(s), "
-          f"stage1={args.splade_backend}, pipeline_depth={depth}, "
+          f"stage1={args.splade_backend}, rerank={rb}, "
+          f"pipeline_depth={depth}, "
           f"shards={args.shards} [{args.shard_workers} workers]); "
           f"pool={index.store.total_bytes() / 1e6:.1f} MB")
 

@@ -150,11 +150,24 @@ class Stage:
     closes_async: bool = False
     fanout: int = 0                            # >0: per-shard execution
     pooled: bool = False                       # fanout via the plan pool
+    device_dispatches: Optional[int] = None    # declared launches/run
 
     def __post_init__(self):
         if self.kind not in STAGE_KINDS:
             raise ValueError(f"stage kind {self.kind!r} not in "
                              f"{STAGE_KINDS}")
+
+    @property
+    def device_dispatch_count(self) -> int:
+        """Device computations this stage launches per execution —
+        declared at plan-build time (jitted calls plus eager jnp ops,
+        each a separate XLA dispatch), defaulting to 1 for device
+        stages and 0 for host stages. This is what makes the fused
+        rerank tail's dispatch reduction *visible*: the split tail
+        declares 3-4 launches per batch, the fused stage declares 1."""
+        if self.device_dispatches is not None:
+            return self.device_dispatches
+        return 1 if self.kind == DEVICE else 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -207,7 +220,9 @@ class StagePlan:
                 tokens = after["tokens_read"] - before["tokens_read"]
             stats.record(stage.name, stage.kind, wall,
                          queries=cb.n_queries, pages_touched=pages,
-                         tokens_read=tokens, queue_wait_s=queue_wait_s)
+                         tokens_read=tokens, queue_wait_s=queue_wait_s,
+                         device_dispatches=stage.device_dispatch_count
+                         * max(1, stage.fanout))
         return out
 
     def _call_stage(self, stage: Stage, cb: CandidateBatch):
@@ -266,6 +281,7 @@ class StageRecord:
     queue_wait_s: float = 0.0
     pages_touched: int = 0
     tokens_read: int = 0
+    device_dispatches: int = 0           # declared device launches
     ewma_ms: Optional[float] = None      # EWMA of per-dispatch wall time
 
     def as_dict(self) -> dict:
@@ -346,7 +362,7 @@ class PipelineStats:
     def record(self, name: str, kind: str, wall_s: float, *,
                queries: int = 0, dispatches: int = 1,
                pages_touched: int = 0, tokens_read: int = 0,
-               queue_wait_s: float = 0.0):
+               queue_wait_s: float = 0.0, device_dispatches: int = 0):
         with self._lock:
             rec = self._stages.get(name)
             if rec is None:
@@ -358,6 +374,7 @@ class PipelineStats:
             rec.pages_touched += pages_touched
             rec.tokens_read += tokens_read
             rec.queue_wait_s += queue_wait_s
+            rec.device_dispatches += device_dispatches
             ms = wall_s * 1e3
             rec.ewma_ms = (ms if rec.ewma_ms is None
                            else self._ewma_alpha * ms

@@ -392,6 +392,7 @@ class RetrievalServer:
             h["stages"] = {
                 name: {"ewma_ms": r["ewma_ms"], "wall_s": r["wall_s"],
                        "dispatches": r["dispatches"],
+                       "device_dispatches": r["device_dispatches"],
                        "queue_wait_s": r["queue_wait_s"],
                        "pages_touched": r["pages_touched"]}
                 for name, r in snap["stages"].items()}

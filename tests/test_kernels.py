@@ -234,3 +234,159 @@ def test_splade_ref_is_exact_posting_sum(Qt, max_df, seed):
         jnp.asarray(pids), jnp.asarray(imps), jnp.asarray(w),
         n_docs=n_docs, impl="ref"))
     np.testing.assert_allclose(got, expected, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused_rerank (decompress + MaxSim + top-k in one dispatch)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.decompress_maxsim.ops import decompress_maxsim_scores_batch
+from repro.kernels.fused_rerank.ops import (fused_rerank_topk,
+                                            fused_rerank_topk_batch)
+
+
+def _rerank_case(seed, C, Ld, nbits, K=32, d=64, Lq=8, B=None,
+                 mask_p=0.85):
+    """Random compressed candidate set (+ optional leading batch dim)."""
+    k = jax.random.PRNGKey(seed)
+    lead = () if B is None else (B,)
+    q = jax.random.normal(k, lead + (Lq, d), jnp.float32)
+    packed = jax.random.randint(jax.random.fold_in(k, 1),
+                                lead + (C, Ld, d * nbits // 8), 0, 256,
+                                jnp.int32).astype(jnp.uint8)
+    cids = jax.random.randint(jax.random.fold_in(k, 2), lead + (C, Ld),
+                              0, K, jnp.int32)
+    valid = jax.random.bernoulli(jax.random.fold_in(k, 3), 0.8,
+                                 lead + (C, Ld))
+    cmask = jax.random.bernoulli(jax.random.fold_in(k, 4), mask_p,
+                                 lead + (C,))
+    qv = jax.random.bernoulli(jax.random.fold_in(k, 5), 0.9, lead + (Lq,))
+    cent = jax.random.normal(jax.random.fold_in(k, 6), (K, d), jnp.float32)
+    bw = jnp.linspace(-0.3, 0.3, 2 ** nbits, dtype=jnp.float32)
+    return q, packed, cids, valid, cmask, cent, bw, qv
+
+
+@pytest.mark.parametrize("nbits,C,Ld,k_top,block_c", [
+    (4, 32, 12, 10, 16),
+    (4, 33, 12, 10, 8),      # ragged C (pads to block multiple)
+    (2, 16, 1, 16, 8),       # single-token docs, k == C
+    (4, 24, 6, 40, 8),       # k > C (pads tail with (-inf, -1))
+    (2, 8, 5, 1, 8),         # k == 1
+])
+def test_fused_rerank_interpret_bitwise_matches_ref(nbits, C, Ld, k_top,
+                                                    block_c):
+    q, packed, cids, valid, cmask, cent, bw, qv = _rerank_case(
+        nbits * 101 + C, C, Ld, nbits)
+    a = fused_rerank_topk(q, packed, cids, valid, cmask, cent, bw,
+                          nbits=nbits, k=k_top, q_valid=qv,
+                          impl="interpret", block_c=block_c)
+    b = fused_rerank_topk(q, packed, cids, valid, cmask, cent, bw,
+                          nbits=nbits, k=k_top, q_valid=qv, impl="ref")
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+
+@pytest.mark.parametrize("nbits,B,C,Ld,k_top,block_c", [
+    (4, 3, 32, 10, 12, 16),
+    (2, 1, 24, 4, 24, 8),     # B=1 degenerate
+    (4, 5, 40, 8, 64, 8),     # k > C
+])
+def test_fused_rerank_batch_interpret_bitwise_matches_ref(nbits, B, C, Ld,
+                                                          k_top, block_c):
+    q, packed, cids, valid, cmask, cent, bw, qv = _rerank_case(
+        nbits * 7 + B, C, Ld, nbits, B=B)
+    a = fused_rerank_topk_batch(q, packed, cids, valid, cmask, cent, bw,
+                                nbits=nbits, k=k_top, q_valid=qv,
+                                impl="interpret", block_c=block_c)
+    b = fused_rerank_topk_batch(q, packed, cids, valid, cmask, cent, bw,
+                                nbits=nbits, k=k_top, q_valid=qv,
+                                impl="ref")
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+
+@pytest.mark.parametrize("impl", ["ref", "interpret"])
+def test_fused_rerank_bitwise_matches_split_pipeline(impl):
+    """The fused tail == split dispatches + stable host argsort, bitwise
+    — scores AND indices, ties broken toward the lower candidate index."""
+    nbits, B, C, Ld, k_top = 4, 4, 32, 8, 12
+    q, packed, cids, valid, cmask, cent, bw, qv = _rerank_case(
+        17, C, Ld, nbits, B=B)
+    scores = np.asarray(decompress_maxsim_scores_batch(
+        q, packed, cids, valid, cent, bw, nbits=nbits, q_valid=qv,
+        impl="ref"))
+    final = np.where(np.asarray(cmask), scores, -np.inf)
+    order = np.argsort(-final, axis=1, kind="stable")[:, :k_top]
+    vals, idx = fused_rerank_topk_batch(
+        q, packed, cids, valid, cmask, cent, bw, nbits=nbits, k=k_top,
+        q_valid=qv, impl=impl, block_c=8)
+    np.testing.assert_array_equal(np.asarray(idx), order.astype(np.int32))
+    np.testing.assert_array_equal(
+        np.asarray(vals), np.take_along_axis(final, order, axis=1)
+        .astype(np.float32))
+
+
+def test_fused_rerank_duplicate_scores_break_ties_by_index():
+    """Identical candidates produce identical scores — selection must
+    order them by ascending candidate index (lax.top_k semantics)."""
+    nbits, C, Ld, k_top = 4, 16, 6, 8
+    q, packed, cids, valid, cmask, cent, bw, qv = _rerank_case(
+        5, C, Ld, nbits, mask_p=1.0)
+    # every candidate is a copy of candidate 0 → C-way score tie
+    packed = jnp.broadcast_to(packed[:1], packed.shape)
+    cids = jnp.broadcast_to(cids[:1], cids.shape)
+    valid = jnp.broadcast_to(valid[:1], valid.shape)
+    for impl in ("ref", "interpret"):
+        _, idx = fused_rerank_topk(q, packed, cids, valid, cmask, cent,
+                                   bw, nbits=nbits, k=k_top, q_valid=qv,
+                                   impl=impl, block_c=8)
+        np.testing.assert_array_equal(np.asarray(idx),
+                                      np.arange(k_top, dtype=np.int32))
+
+
+def test_fused_rerank_all_masked_and_empty_edges():
+    nbits, C, Ld, k_top = 2, 16, 4, 6
+    q, packed, cids, valid, cmask, cent, bw, qv = _rerank_case(
+        11, C, Ld, nbits)
+    # all-masked candidate row: every score -inf, indices still the
+    # stable prefix (lax.top_k returns ascending indices on full ties)
+    none = jnp.zeros_like(cmask)
+    for impl in ("ref", "interpret"):
+        vals, idx = fused_rerank_topk(q, packed, cids, valid, none, cent,
+                                      bw, nbits=nbits, k=k_top,
+                                      q_valid=qv, impl=impl, block_c=8)
+        assert np.all(np.asarray(vals) == -np.inf)
+        np.testing.assert_array_equal(np.asarray(idx),
+                                      np.arange(k_top, dtype=np.int32))
+    # empty candidate set: fully padded output
+    vals, idx = fused_rerank_topk(q, packed[:0], cids[:0], valid[:0],
+                                  cmask[:0], cent, bw, nbits=nbits,
+                                  k=k_top, impl="ref")
+    assert np.all(np.asarray(vals) == -np.inf)
+    assert np.all(np.asarray(idx) == -1)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 24), st.integers(1, 6), st.integers(1, 30),
+       st.integers(0, 2 ** 31 - 1))
+def test_fused_rerank_topk_roundtrip_property(C, Ld, k_top, seed):
+    """Returned (score, index) pairs must be exactly the k best masked
+    scores in (desc, index-asc) order, and indices must map back to the
+    scores the split pipeline computes for them."""
+    nbits = 4
+    q, packed, cids, valid, cmask, cent, bw, qv = _rerank_case(
+        seed, C, Ld, nbits, mask_p=0.7)
+    vals, idx = fused_rerank_topk(q, packed, cids, valid, cmask, cent,
+                                  bw, nbits=nbits, k=k_top, q_valid=qv,
+                                  impl="ref")
+    vals, idx = np.asarray(vals), np.asarray(idx)
+    scores = np.asarray(decompress_maxsim_scores_batch(
+        q[None], packed[None], cids[None], valid[None], cent, bw,
+        nbits=nbits, q_valid=qv[None], impl="ref"))[0]
+    final = np.where(np.asarray(cmask), scores, -np.inf)
+    kk = min(k_top, C)
+    order = np.argsort(-final, kind="stable")[:kk]
+    np.testing.assert_array_equal(idx[:kk], order.astype(np.int32))
+    np.testing.assert_array_equal(vals[:kk],
+                                  final[order].astype(np.float32))
+    assert np.all(vals[kk:] == -np.inf) and np.all(idx[kk:] == -1)

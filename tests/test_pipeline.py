@@ -60,12 +60,12 @@ def test_plans_use_typed_stage_vocabulary(stack):
     expect = {
         "colbert": ("plaid_probe", "host_gather:codes",
                     "device_score:approx", "host_gather:residuals",
-                    "device_score:exact", "fuse_topk"),
-        "splade": ("splade_stage1", "fuse_topk"),
+                    "fused_rerank"),
+        "splade": ("splade_stage1", "fuse_splade"),
         "rerank": ("splade_stage1", "host_gather:residuals",
-                   "device_score:maxsim", "fuse_topk"),
+                   "fused_rerank", "fused_rerank:sync"),
         "hybrid": ("splade_stage1", "host_gather:residuals",
-                   "device_score:maxsim", "fuse_topk"),
+                   "fused_rerank", "fused_rerank:sync"),
     }
     for method, names in expect.items():
         plan = retr.compile_plan(method)
@@ -75,10 +75,32 @@ def test_plans_use_typed_stage_vocabulary(stack):
         for name in names:
             if name.startswith("host_gather"):
                 assert kinds[name] == HOST
-            if name.startswith(("device_score", "plaid_probe")):
+            if name.startswith(("device_score", "plaid_probe",
+                                "fused_rerank")):
                 assert kinds[name] == DEVICE
     with pytest.raises(ValueError):
         retr.compile_plan("no-such-method")
+
+
+def test_split_backend_keeps_legacy_stage_vocabulary(stack):
+    _, _, retr = stack
+    expect = {
+        "colbert": ("plaid_probe", "host_gather:codes",
+                    "device_score:approx", "host_gather:residuals",
+                    "device_score:exact", "fuse_topk"),
+        "rerank": ("splade_stage1", "host_gather:residuals",
+                   "device_score:maxsim", "fuse_topk"),
+        "hybrid": ("splade_stage1", "host_gather:residuals",
+                   "device_score:maxsim", "fuse_topk"),
+    }
+    retr.set_rerank_backend("split")
+    try:
+        for method, names in expect.items():
+            assert retr.compile_plan(method).stage_names() == names
+        with pytest.raises(ValueError):
+            retr.set_rerank_backend("no-such-backend")
+    finally:
+        retr.set_rerank_backend(retr.params.rerank_backend)
 
 
 def test_plans_cached_per_method_and_backend(stack):
@@ -405,7 +427,8 @@ def test_stage_records_merge_access_stats(stack, small_corpus):
     assert gather["pages_touched"] > 0
     assert gather["tokens_read"] > 0
     assert gather["dispatches"] == 1 and gather["queries"] == B
-    assert snap["stages"]["device_score:maxsim"]["pages_touched"] == 0
+    assert snap["stages"]["fused_rerank"]["pages_touched"] == 0
+    assert snap["stages"]["fused_rerank"]["device_dispatches"] == 1
     assert snap["stages"]["splade_stage1"]["dispatches"] == 1
     # synchronous run: no two stages ever execute concurrently
     assert snap["overlap_fraction"] == 0.0
@@ -451,9 +474,16 @@ def test_health_reports_stage_queues_and_ewma(stack, small_corpus):
     assert h["pipeline"]["depth"] == 2
     q = h["pipeline"]["queues"]["hybrid"]
     assert set(q) == {"splade_stage1", "host_gather:residuals",
-                      "device_score:maxsim", "fuse_topk"}
+                      "fused_rerank", "fused_rerank:sync"}
     assert all(depth >= 0 for depth in q.values())
     assert h["stages"]["splade_stage1"]["ewma_ms"] is not None
+    # fused tail: one declared device launch per dispatch, none in the
+    # sync stage, and no fuse_topk stage anywhere on the fused path
+    st = h["stages"]
+    assert st["fused_rerank"]["device_dispatches"] == \
+        st["fused_rerank"]["dispatches"]
+    assert st["fused_rerank:sync"]["device_dispatches"] == 0
+    assert "fuse_topk" not in st
     assert "overlap_fraction" in h
 
 
