@@ -3,12 +3,17 @@
 trajectory CI refuses to let slide.
 
 Runs a small, fully deterministic workload (synthetic corpus, fixed
-seeds, 2-shard pipelined serving of a mixed closed-loop load), then a
-mini thread-vs-process worker comparison over the same split (process
-rankings must match the thread run exactly; QPS plus the transport's
-zero-copy/copied byte split and RPC dispatch counts are recorded),
-writes the measured metrics to ``results/bench_ci.json``, and compares
-them against the committed baseline in ``results/bench_baseline.json``:
+seeds, 2-shard pipelined serving of a mixed closed-loop load through
+the full front door: coordinator caches + a generously-provisioned
+admission controller — a healthy run must shed zero requests, cache-on
+cold results must keep the pinned CRC/token volume, and a repeat pass
+must serve every request from the exact cache bitwise without touching
+a residual token), then a mini thread-vs-process worker comparison
+over the same split (process rankings must match the thread run
+exactly; QPS plus the transport's zero-copy/copied byte split and RPC
+dispatch counts are recorded), writes the measured metrics to
+``results/bench_ci.json``, and compares them against the committed
+baseline in ``results/bench_baseline.json``:
 
 * **perf metrics** (QPS, gather-stage wall) are gated with a ±tolerance
   band (default 50%, override with ``--tolerance`` or
@@ -59,6 +64,8 @@ def run_bench() -> dict:
     from repro.index.builder import build_colbert_index
     from repro.index.sharding import load_group, split_index_tree
     from repro.index.splade_index import build_splade_index
+    from repro.serving.admission import AdmissionController
+    from repro.serving.context import CacheHierarchy
     from repro.serving.engine import Request, ServeEngine
     from repro.serving.loadgen import run_closed_loop
     from repro.serving.server import RetrievalServer
@@ -86,8 +93,17 @@ def run_bench() -> dict:
                     k=20)
             for i in range(N_QUERIES)]
 
-    srv = RetrievalServer(ServeEngine(retr, pipeline_depth=2),
-                          n_threads=1, max_batch=8, batch_timeout_ms=4.0)
+    # the full front door rides along: coordinator caches + a
+    # generously-provisioned admission controller. A healthy gate run
+    # must never shed, and with every request in the stream distinct
+    # the caches only store during the perf pass — the QPS band
+    # measures the cold path, not hits
+    caches = CacheHierarchy(exact_entries=256, stage1_entries=256)
+    admission = AdmissionController(latency_slo_ms=60_000.0)
+    srv = RetrievalServer(ServeEngine(retr, pipeline_depth=2,
+                                      caches=caches),
+                          n_threads=1, max_batch=8, batch_timeout_ms=4.0,
+                          admission=admission)
     srv.start()
     try:
         for f in [srv.submit(r) for r in reqs[:16]]:      # warm compiles
@@ -100,7 +116,11 @@ def run_bench() -> dict:
         # determinism pass runs request-at-a-time on purpose: token
         # counts and rankings must not depend on which requests the
         # micro-batcher happened to coalesce (dedup'd gathers make the
-        # *batched* token volume timing-dependent)
+        # *batched* token volume timing-dependent). Caches are cleared
+        # first so the pass runs cold — cache-on cold results must keep
+        # the pinned CRC and token volume (caches never perturb the
+        # cold path)
+        caches.clear()
         stores = [sh.searcher.index.store for sh in retr.shards]
         tok0 = sum(s.stats.snapshot()["residual_tokens_read"]
                    for s in stores)
@@ -111,8 +131,31 @@ def run_bench() -> dict:
                 np.ascontiguousarray(out.pids).tobytes(), pids_crc)
         tokens = sum(s.stats.snapshot()["residual_tokens_read"]
                      for s in stores) - tok0
+        # cache-hit repeat pass: the same 32 requests again — every one
+        # must resolve from the exact cache, bitwise the cold answer
+        # (same CRC) without touching a single residual token
+        hit_crc = 0
+        for q in reqs[:32]:
+            out = srv.submit(q).result(timeout=600)
+            assert out.cache_hit, f"qid {q.qid} missed on repeat"
+            hit_crc = zlib.crc32(
+                np.ascontiguousarray(out.pids).tobytes(), hit_crc)
+        assert hit_crc == pids_crc, (
+            f"cache-hit rankings diverged from cold ({hit_crc} vs "
+            f"{pids_crc})")
+        hit_tokens = sum(s.stats.snapshot()["residual_tokens_read"]
+                         for s in stores) - tok0 - tokens
+        assert hit_tokens == 0, (
+            f"cache hits read {hit_tokens} residual tokens")
+        # a healthy, generously-provisioned gate run never sheds
+        adm_stats = admission.stats()
+        assert adm_stats["sheds"] == 0, adm_stats
+        assert adm_stats["degraded_admits"] == 0, adm_stats
+        cache_stats = caches.stats()
+        assert cache_stats["exact"]["hits"] >= 32, cache_stats
     finally:
         srv.stop()
+        retr.attach_caches(None)
 
     # mini thread-vs-process worker comparison: the same shard split and
     # request stream through shared-nothing worker processes over the
@@ -185,6 +228,10 @@ def run_bench() -> dict:
         # recorded (not perf-gated — worker spawn + a 1-core box make
         # it noisy); parity with the thread run is asserted in-run
         "process_workers": process_workers,
+        # recorded front-door trajectory: cache hit/miss/eviction and
+        # admission counters (zero sheds + bitwise/zero-token hit
+        # repeats are hard in-run asserts above, not baseline bands)
+        "front_door": {"caches": cache_stats, "admission": adm_stats},
         "determinism": {"pids_crc32": pids_crc,
                         "residual_tokens_read": int(tokens),
                         "served": int(len(res.latencies)),

@@ -103,6 +103,14 @@ stage_smoke() {
     python -m repro.launch.serve --shards 2 --shard-workers process \
         --shard-transport shm \
         --pipeline-depth 2 --max-batch 8 --qps 100 --n 24
+
+    # front-door smoke: coordinator caches + SLO admission under a
+    # Zipf-skewed trace — repeats resolve from the exact cache, the
+    # stage-1 cache backs the misses, and the generous SLO must not
+    # shed a single request on a healthy run
+    python -m repro.launch.serve --pipeline-depth 2 --max-batch 8 \
+        --cache-exact 512 --cache-stage1 512 \
+        --admission-slo-ms 60000 --skew 1.2 --qps 200 --n 48
 }
 
 stage_chaos() {

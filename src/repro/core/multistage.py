@@ -23,11 +23,13 @@ from repro.core import hybrid as hybrid_mod
 from repro.core.plaid import (
     PLAIDSearcher,
     _pad_batch_rows,
+    pad_query_batch,
     pad_query_batch_host,
 )
 from repro.index.splade_device import SpladeDeviceCache
 from repro.index.splade_index import SpladeIndex
 from repro.kernels.fused_rerank import ops as fused_ops
+from repro.serving.context import BatchOutcome, freeze
 from repro.serving.pipeline import (
     DEVICE,
     HOST,
@@ -54,6 +56,13 @@ class MultiStageParams:
 
 
 class MultiStageRetriever:
+    # coordinator cache hierarchy (attached by the engine) and the index
+    # generation its entries are scoped to. Class-level defaults so the
+    # sharded subclasses — which build themselves without calling this
+    # __init__ — inherit a disabled-cache state for free.
+    _caches = None
+    index_generation: int = 0
+
     def __init__(self, splade_index: SpladeIndex, searcher: PLAIDSearcher,
                  params: MultiStageParams = MultiStageParams(),
                  device=None):
@@ -137,6 +146,95 @@ class MultiStageRetriever:
                               if name != "splade_stage1")}
 
     # ------------------------------------------------------------------
+    # coordinator cache hierarchy + index-generation invalidation
+    # ------------------------------------------------------------------
+    def attach_caches(self, caches):
+        """Attach a :class:`~repro.serving.context.CacheHierarchy`.
+        Plans close over ``self`` and read ``self._caches`` per call, so
+        caches can be attached (or detached with ``None``) after plans
+        are compiled."""
+        self._caches = caches
+
+    def bump_index_generation(self):
+        """Advance the index generation (an index mutation — upsert,
+        delete, reshard — happened) and purge every cache entry computed
+        under an older generation. New cache keys embed the new
+        generation, so stale entries can never be served even before the
+        purge completes."""
+        self.index_generation = self.index_generation + 1
+        caches = self._caches
+        if caches is not None:
+            caches.purge_stale(self.index_generation)
+        return self.index_generation
+
+    def _plaid_salt(self) -> str:
+        sp = self.searcher.params
+        return f"np{sp.nprobe}|cc{sp.candidate_cap}|nd{sp.ndocs}"
+
+    def cache_salts(self, method: str):
+        """(exact_salt, stage1_salt): the retriever-config components of
+        the cache keys. Everything that changes an answer for identical
+        query bytes must appear here — backends, first_k, normalizer,
+        PLAID knobs, and the index generation."""
+        p = self.params
+        gen = self.index_generation
+        if method == "colbert":
+            s1 = f"cand|{self._plaid_salt()}|g{gen}"
+        else:
+            s1 = f"sp|fk{p.first_k}|b{self.splade_backend}|g{gen}"
+        exact = (f"fk{p.first_k}|n{p.normalizer}|sb{self.splade_backend}"
+                 f"|rb{self.rerank_backend}|{self._plaid_salt()}|g{gen}")
+        return exact, s1
+
+    def _stage1_ctx_keys(self, cb: CandidateBatch):
+        """Per-query stage-1 cache keys for a batch, or None when the
+        stage-1 cache is off / the batch carries no contexts."""
+        caches = self._caches
+        if (caches is None or caches.stage1.capacity <= 0
+                or cb.ctxs is None):
+            return None
+        keys = [None if c is None else c.stage1_key for c in cb.ctxs]
+        if all(k is None for k in keys):
+            return None
+        return keys
+
+    def _stage1_group_lookup(self, cb: CandidateBatch):
+        """All-or-nothing batch lookup of merged stage-1 rows (the
+        sharded plans' granularity: a partial hit recomputes the whole
+        batch, since the per-shard fanout runs all queries together).
+        Returns stacked ``(pids_b, s_scores)`` or None."""
+        keys = self._stage1_ctx_keys(cb)
+        if keys is None:
+            return None
+        rows = [None if k is None else self._caches.stage1.get(k)
+                for k in keys]
+        n_hit = sum(r is not None for r in rows)
+        if n_hit < len(rows):
+            self.pipeline_stats.counter("cache_stage1_misses",
+                                        len(rows) - n_hit)
+            return None
+        self.pipeline_stats.counter("cache_stage1_hits", n_hit)
+        return (np.stack([r[0] for r in rows]),
+                np.stack([r[1] for r in rows]))
+
+    def _stage1_group_store(self, cb: CandidateBatch):
+        """Store merged stage-1 rows (full ``first_k`` width) per query.
+        Skipped for degraded batches — a candidate union missing a
+        shard's postings must never be replayed as a full answer."""
+        keys = self._stage1_ctx_keys(cb)
+        if keys is None or cb.state.get("missing_shards"):
+            return
+        pids_b = cb.state.get("pids_b")
+        s_scores = cb.state.get("s_scores")
+        if pids_b is None or s_scores is None:
+            return
+        gen = self.index_generation
+        for i, key in enumerate(keys):
+            if key is not None:
+                self._caches.stage1.put(
+                    key, freeze(pids_b[i], s_scores[i]), gen)
+
+    # ------------------------------------------------------------------
     def run_splade(self, term_ids, term_weights, k: Optional[int] = None,
                    backend: Optional[str] = None):
         pids, scores = self.run_splade_batch(
@@ -212,9 +310,12 @@ class MultiStageRetriever:
     # ------------------------------------------------------------------
     def build_batch(self, method: str, q_embs=None, term_ids=None,
                     term_weights=None, alphas=None, k: Optional[int] = None,
-                    n: Optional[int] = None) -> CandidateBatch:
+                    n: Optional[int] = None,
+                    ctxs=None) -> CandidateBatch:
         """Package per-query inputs into the immutable carrier a
-        :class:`StagePlan` consumes."""
+        :class:`StagePlan` consumes. ``ctxs`` (optional per-query
+        :class:`~repro.serving.context.RequestContext`) rides along so
+        plan stages can consult per-request cache keys."""
         k = self.params.k if k is None else k
         if n is None:
             n = len(q_embs) if q_embs is not None else len(term_ids)
@@ -222,7 +323,7 @@ class MultiStageRetriever:
         return CandidateBatch(method=method, k=k, q_embs=pick(q_embs),
                               term_ids=pick(term_ids),
                               term_weights=pick(term_weights),
-                              alphas=alphas)
+                              alphas=alphas, ctxs=pick(ctxs))
 
     def compile_plan(self, method: str) -> StagePlan:
         """Compile one of the four systems to its typed stage graph.
@@ -263,6 +364,33 @@ class MultiStageRetriever:
 
         if method == "colbert":
             def probe(cb):
+                # candidate-cache probe: when EVERY query's post-approx
+                # survivor set is cached, skip stages 1-3 entirely and
+                # rebuild the padded state the rerank tail consumes.
+                # Batch padding replicates the last real row — exactly
+                # what the cold path's deterministic device stages
+                # produce for pad rows — so downstream gathers see
+                # byte-identical inputs.
+                keys = self._stage1_ctx_keys(cb)
+                if keys is not None:
+                    rows = [None if k_ is None
+                            else self._caches.stage1.get(k_)
+                            for k_ in keys]
+                    if all(r is not None for r in rows):
+                        self.pipeline_stats.counter("cache_stage1_hits",
+                                                    len(rows))
+                        q, q_valid = pad_query_batch(cb.q_embs)
+                        B, q, q_valid, final_np = _pad_batch_rows(
+                            q, q_valid, np.stack([r[0] for r in rows]))
+                        n_real = np.asarray([int(r[1]) for r in rows])
+                        return cb.with_state(
+                            B=B, q=q, q_valid=q_valid,
+                            final_pids=jnp.asarray(final_np),
+                            final_np=final_np, n_real=n_real,
+                            stage1_cached=True)
+                    self.pipeline_stats.counter(
+                        "cache_stage1_misses",
+                        sum(r is None for r in rows))
                 st = searcher.probe_batch(cb.q_embs)
                 # sync candidates to host here, on the device worker —
                 # the host gather must not block on device work
@@ -270,6 +398,8 @@ class MultiStageRetriever:
                 return cb.with_state(**st)
 
             def gather_codes(cb):
+                if cb.state.get("stage1_cached"):
+                    return cb
                 s = cb.state
                 n_real = (s["cand_np"][:s["B"]] >= 0).sum(axis=1)
                 if dr:
@@ -281,12 +411,24 @@ class MultiStageRetriever:
                                      n_real=n_real)
 
             def approx(cb):
+                if cb.state.get("stage1_cached"):
+                    return cb
                 s = cb.state
                 final_pids = searcher.approx_select_batch(
                     s["scores_c"], jnp.asarray(s["codes"]),
                     jnp.asarray(s["cvalid"]), s["q_valid"], s["cand"])
+                final_np = np.asarray(final_pids)
+                keys = self._stage1_ctx_keys(cb)
+                if keys is not None:
+                    gen = self.index_generation
+                    for i, key in enumerate(keys):
+                        if key is not None:
+                            self._caches.stage1.put(
+                                key,
+                                (freeze(final_np[i])[0],
+                                 int(s["n_real"][i])), gen)
                 return cb.with_state(final_pids=final_pids,
-                                     final_np=np.asarray(final_pids))
+                                     final_np=final_np)
 
             def gather_residuals(cb):
                 s = cb.state
@@ -351,9 +493,35 @@ class MultiStageRetriever:
         s1_kind = HOST if self.splade_backend == "host" else DEVICE
 
         def splade_stage(cb):
-            pids_b, s_scores = self.run_splade_batch(
-                list(cb.term_ids), list(cb.term_weights), p.first_k,
-                _record=False)          # both backends return host arrays
+            # stage-1 cache: per-query rows are batch-composition
+            # independent (the PR 2 parity tests pin batched == single
+            # per backend), so hits and misses mix freely — only the
+            # missed rows are dispatched, then scattered back in place.
+            keys = self._stage1_ctx_keys(cb)
+            if keys is None:
+                pids_b, s_scores = self.run_splade_batch(
+                    list(cb.term_ids), list(cb.term_weights), p.first_k,
+                    _record=False)      # both backends return host arrays
+                return cb.with_state(pids_b=pids_b, s_scores=s_scores)
+            rows = [None if k_ is None else self._caches.stage1.get(k_)
+                    for k_ in keys]
+            miss = [i for i, r in enumerate(rows) if r is None]
+            self.pipeline_stats.counter("cache_stage1_hits",
+                                        len(rows) - len(miss))
+            self.pipeline_stats.counter("cache_stage1_misses", len(miss))
+            if miss:
+                pids_m, scores_m = self.run_splade_batch(
+                    [cb.term_ids[i] for i in miss],
+                    [cb.term_weights[i] for i in miss], p.first_k,
+                    _record=False)
+                gen = self.index_generation
+                for j, i in enumerate(miss):
+                    rows[i] = (pids_m[j], scores_m[j])
+                    if keys[i] is not None:
+                        self._caches.stage1.put(
+                            keys[i], freeze(pids_m[j], scores_m[j]), gen)
+            pids_b = np.stack([r[0] for r in rows])
+            s_scores = np.stack([r[1] for r in rows])
             return cb.with_state(pids_b=pids_b, s_scores=s_scores)
 
         if method == "splade":
@@ -481,7 +649,8 @@ class MultiStageRetriever:
 
     # ------------------------------------------------------------------
     def search_batch(self, method, q_embs=None, term_ids=None,
-                     term_weights=None, alpha=None, k: Optional[int] = None):
+                     term_weights=None, alpha=None, k: Optional[int] = None,
+                     ctxs=None):
         """Cross-query batched retrieval over any of the four methods.
 
         ``method``: one method name for the whole batch, or a sequence of
@@ -490,6 +659,29 @@ class MultiStageRetriever:
         sequences (ragged lengths fine). ``alpha``: scalar, per-query
         sequence, or None (per-params default). Returns
         (pids (B, k), scores (B, k)) matching per-query :meth:`search`.
+
+        Legacy wrapper over :meth:`search_batch_ctx`: the typed outcome
+        is folded back into the thread-local degraded note for callers
+        that still read ``last_missing_shards``.
+        """
+        pids, scores, outcome = self.search_batch_ctx(
+            method, q_embs=q_embs, term_ids=term_ids,
+            term_weights=term_weights, alpha=alpha, k=k, ctxs=ctxs)
+        self._note_degraded(outcome.missing_shards)
+        return pids, scores
+
+    def search_batch_ctx(self, method, q_embs=None, term_ids=None,
+                         term_weights=None, alpha=None,
+                         k: Optional[int] = None, ctxs=None):
+        """:meth:`search_batch` with a typed outcome: returns
+        ``(pids, scores, BatchOutcome)``. The outcome carries what the
+        thread-local side channel used to (missing shards under degraded
+        shard groups), returned to the caller instead of stashed.
+
+        ``ctxs``: optional per-query
+        :class:`~repro.serving.context.RequestContext` sequence — when a
+        cache hierarchy is attached, plan stages consult each context's
+        ``stage1_key`` for the candidate-gather cache.
 
         Runs the method's compiled :class:`StagePlan` synchronously —
         the ``pipeline_depth=1`` path of the stage-graph executor.
@@ -502,15 +694,16 @@ class MultiStageRetriever:
             methods = list(method)
             if len(set(methods)) > 1:
                 return self._search_batch_mixed(methods, q_embs, term_ids,
-                                                term_weights, alpha, k)
+                                                term_weights, alpha, k,
+                                                ctxs)
             method = methods[0]
 
         alphas = self._alpha_array(alpha, n)
         cb = self.build_batch(method, q_embs, term_ids, term_weights,
-                              alphas, k, n)
+                              alphas, k, n, ctxs=ctxs)
         cb = self.compile_plan(method).run(cb, stats=self.pipeline_stats)
-        self._note_degraded(cb.state.get("missing_shards", ()))
-        return cb.pids, cb.scores
+        return cb.pids, cb.scores, BatchOutcome(
+            missing_shards=tuple(cb.state.get("missing_shards", ())))
 
     # ------------------------------------------------------------------
     # degraded-answer bookkeeping (sharded process groups only; the
@@ -562,19 +755,23 @@ class MultiStageRetriever:
         out_scores[idx, :w] = scores
 
     def _search_batch_mixed(self, methods, q_embs, term_ids, term_weights,
-                            alpha, k: int):
+                            alpha, k: int, ctxs=None):
         """Group a mixed-method batch by method, run each group batched,
-        and scatter results back into request order."""
+        and scatter results back into request order. Group outcomes are
+        merged (missing-shard union across groups)."""
         n = len(methods)
         alphas = self._alpha_array(alpha, n)
         out_pids = np.full((n, k), -1, np.int64)
         out_scores = np.full((n, k), -np.inf, np.float32)
+        outcome = BatchOutcome()
         for m in dict.fromkeys(methods):
             idx = [i for i, mi in enumerate(methods) if mi == m]
             pick = (lambda seq: None if seq is None
                     else [seq[i] for i in idx])
-            pids, scores = self.search_batch(
+            pids, scores, out = self.search_batch_ctx(
                 m, q_embs=pick(q_embs), term_ids=pick(term_ids),
-                term_weights=pick(term_weights), alpha=alphas[idx], k=k)
+                term_weights=pick(term_weights), alpha=alphas[idx], k=k,
+                ctxs=pick(ctxs))
+            outcome = outcome.merge(out)
             self.scatter_group(out_pids, out_scores, idx, pids, scores)
-        return out_pids, out_scores
+        return out_pids, out_scores, outcome

@@ -194,11 +194,26 @@ def _concat_shard_topk(shard_states):
 
 def fuse_splade_state(cb, first_k: int):
     """Terminal fuse for the splade-only method: merge the per-shard
-    stage-1 lists and truncate to the request's k."""
+    stage-1 lists and truncate to the request's k. The full
+    ``first_k``-wide merged rows are stashed in state so the stage-1
+    cache can store them (a splade answer warms the same entry a later
+    rerank/hybrid request reuses)."""
     pids, scores, missing = _concat_shard_topk(cb.shard_states)
     pids_b, s_scores = merge_topk(pids, scores, first_k, pad_score=0.0)
     cb = cb.evolve(pids=pids_b[:, :cb.k], scores=s_scores[:, :cb.k])
+    cb = cb.with_state(pids_b=pids_b, s_scores=s_scores)
     return _note_missing(cb, missing)
+
+
+def stage1_state_from_rows(cb, pids_b, s_scores):
+    """Rebuild :func:`merge_stage1_state`'s output from cached merged
+    rows — the stage-1 cache-hit path. The padding ops are the same
+    calls the cold merge makes, so downstream gathers see byte-identical
+    inputs."""
+    B, q, q_valid, gp = _pad_batch_rows(
+        *pad_query_batch_host(cb.q_embs), pids_b)
+    return cb.with_state(pids_b=pids_b, s_scores=s_scores,
+                         q=q, q_valid=q_valid, B=B, gp=gp)
 
 
 def merge_stage1_state(cb, first_k: int):
@@ -412,21 +427,42 @@ class ShardedRetriever(MultiStageRetriever):
             term_weights=wrap(term_weights), alpha=alpha, k=k)
         return pids[0], scores[0]
 
-    def search_batch(self, method, q_embs=None, term_ids=None,
-                     term_weights=None, alpha=None, k=None):
+    def search_batch_ctx(self, method, q_embs=None, term_ids=None,
+                         term_weights=None, alpha=None, k=None, ctxs=None):
+        # search_batch is inherited: it routes through here, so the
+        # one-shard delegation (and its ctx threading) lands once
         if self.n_shards == 1:
-            return self.shards[0].search_batch(
+            return self.shards[0].search_batch_ctx(
                 method, q_embs=q_embs, term_ids=term_ids,
-                term_weights=term_weights, alpha=alpha, k=k)
-        return super().search_batch(method, q_embs=q_embs,
-                                    term_ids=term_ids,
-                                    term_weights=term_weights,
-                                    alpha=alpha, k=k)
+                term_weights=term_weights, alpha=alpha, k=k, ctxs=ctxs)
+        return super().search_batch_ctx(method, q_embs=q_embs,
+                                        term_ids=term_ids,
+                                        term_weights=term_weights,
+                                        alpha=alpha, k=k, ctxs=ctxs)
 
     def compile_plan(self, method: str) -> StagePlan:
         if self.n_shards == 1:
             return self.shards[0].compile_plan(method)
         return super().compile_plan(method)
+
+    def attach_caches(self, caches):
+        """Group-level caches only: the *merged* stage-1 rows are what
+        get cached (shard-local rows carry shard-relative pids and must
+        never alias the group's keys). With one shard every plan is
+        delegated wholesale, so the caches follow the delegation."""
+        self._caches = caches
+        if self.n_shards == 1:
+            self.shards[0].attach_caches(caches)
+
+    def bump_index_generation(self):
+        gen = super().bump_index_generation()
+        for sh in self.shards:
+            sh.index_generation = gen
+        return gen
+
+    def _plaid_salt(self) -> str:
+        sp = self.shards[0].searcher.params
+        return f"np{sp.nprobe}|cc{sp.candidate_cap}|nd{sp.ndocs}"
 
     # ------------------------------------------------------------------
     # sharded stage plans
@@ -563,6 +599,11 @@ class ShardedRetriever(MultiStageRetriever):
             per-shard device pinning the accelerators score their
             postings slices concurrently — a per-shard sync loop would
             serialise them behind the first shard's result."""
+            cached = self._stage1_group_lookup(cb)
+            if cached is not None:
+                # merged rows for every query are cached: skip the
+                # per-shard fanout; the merge stage rebuilds state
+                return cb.with_state(stage1_cached=cached)
             tids, tw = list(cb.term_ids), list(cb.term_weights)
             if backend == "host":
                 outs = [sh.run_splade_batch(tids, tw, p.first_k,
@@ -579,17 +620,31 @@ class ShardedRetriever(MultiStageRetriever):
                  "scores": sc}
                 for i, (pd, sc) in enumerate(outs)))
 
+        def fuse_splade(cb):
+            cached = cb.state.get("stage1_cached")
+            if cached is not None:
+                pids_b, s_scores = cached
+                return cb.evolve(pids=pids_b[:, :cb.k],
+                                 scores=s_scores[:, :cb.k])
+            cb = fuse_splade_state(cb, p.first_k)
+            self._stage1_group_store(cb)
+            return cb
+
         if method == "splade":
             stages = (Stage("splade_stage1", s1_kind, splade_stage),
-                      Stage("merge_topk", HOST,
-                            lambda cb: fuse_splade_state(cb, p.first_k)))
+                      Stage("merge_topk", HOST, fuse_splade))
             return StagePlan(method=method, stages=stages,
                              access_stats=access, pool=self._pool)
 
         # rerank / hybrid: merged SPLADE candidates → shard-parallel
         # residual gather → per-shard MaxSim → global fuse (+ α)
         def merge_stage1(cb):
-            return merge_stage1_state(cb, p.first_k)
+            cached = cb.state.get("stage1_cached")
+            if cached is not None:
+                return stage1_state_from_rows(cb, *cached)
+            cb = merge_stage1_state(cb, p.first_k)
+            self._stage1_group_store(cb)
+            return cb
 
         def gather(cb, i):
             st = cb.state
@@ -1385,6 +1440,10 @@ class ProcessShardGroup(MultiStageRetriever):
                 / "centroids.npy"))
         return self._centroids_cache
 
+    def _plaid_salt(self) -> str:
+        sp = self.plaid_params
+        return f"np{sp.nprobe}|cc{sp.candidate_cap}|nd{sp.ndocs}"
+
     # ------------------------------------------------------------------
     # RPC stage plans
     # ------------------------------------------------------------------
@@ -1463,6 +1522,9 @@ class ProcessShardGroup(MultiStageRetriever):
             the process analogue of dispatch-all-then-sync-all. Under
             concurrent micro-batches the dispatcher coalesces the
             stage-1 ops that land on a busy worker into one frame."""
+            cached = self._stage1_group_lookup(cb)
+            if cached is not None:
+                return cb.with_state(stage1_cached=cached)
             payload = {"term_ids": list(cb.term_ids),
                        "term_weights": list(cb.term_weights),
                        "k": p.first_k, "backend": backend}
@@ -1481,10 +1543,27 @@ class ProcessShardGroup(MultiStageRetriever):
                  "scores": r["scores"]}
                 for i, r in enumerate(outs)))
 
+        def fuse_splade(cb):
+            cached = cb.state.get("stage1_cached")
+            if cached is not None:
+                pids_b, s_scores = cached
+                return cb.evolve(pids=pids_b[:, :cb.k],
+                                 scores=s_scores[:, :cb.k])
+            cb = fuse_splade_state(cb, p.first_k)
+            self._stage1_group_store(cb)
+            return cb
+
+        def merge_stage1(cb):
+            cached = cb.state.get("stage1_cached")
+            if cached is not None:
+                return stage1_state_from_rows(cb, *cached)
+            cb = merge_stage1_state(cb, p.first_k)
+            self._stage1_group_store(cb)
+            return cb
+
         if method == "splade":
             stages = (Stage("splade_stage1", DEVICE, splade_stage),
-                      Stage("merge_topk", HOST,
-                            lambda cb: fuse_splade_state(cb, p.first_k)))
+                      Stage("merge_topk", HOST, fuse_splade))
             return StagePlan(method=method, stages=stages,
                              access_stats=None, pool=self._pool)
 
@@ -1517,8 +1596,7 @@ class ProcessShardGroup(MultiStageRetriever):
 
         stages = (
             Stage("splade_stage1", DEVICE, splade_stage),
-            Stage("merge_topk:stage1", HOST,
-                  lambda cb: merge_stage1_state(cb, p.first_k)),
+            Stage("merge_topk:stage1", HOST, merge_stage1),
             Stage("shard_rpc:score", DEVICE, score_dispatch, fanout=S,
                   opens_async=True),
             Stage("shard_rpc:wait", DEVICE, score_wait, fanout=S,

@@ -26,8 +26,15 @@ from repro.index.builder import ColBERTIndex, build_colbert_index
 from repro.index.sharding import split_index_tree
 from repro.index.splade_index import SpladeIndex, build_splade_index
 from repro.launch.mesh import shard_device_map
+from repro.serving.admission import AdmissionController
+from repro.serving.context import CacheHierarchy
 from repro.serving.engine import Request, ServeEngine
-from repro.serving.loadgen import run_open_loop, run_poisson_load
+from repro.serving.loadgen import (
+    load_trace,
+    run_open_loop,
+    run_poisson_load,
+    zipf_trace,
+)
 from repro.serving.server import RetrievalServer
 
 
@@ -207,6 +214,29 @@ def main():
     ap.add_argument("--arrival-rate", type=float, default=None,
                     help="strictly open-loop Poisson arrivals at this "
                          "QPS (instead of the default generator)")
+    ap.add_argument("--cache-exact", type=int, default=0,
+                    help="exact result cache entries (0 = off): a hit "
+                         "returns the bitwise cold answer straight "
+                         "from the front door")
+    ap.add_argument("--cache-stage1", type=int, default=0,
+                    help="stage-1/candidate cache entries (0 = off): "
+                         "cached SPLADE unions / PLAID candidate sets "
+                         "skip the stage-1 dispatch on repeat queries")
+    ap.add_argument("--admission-slo-ms", type=float, default=None,
+                    help="SLO-aware admission: when per-stage EWMAs "
+                         "predict a request blows this budget, degrade "
+                         "it to the splade-only plan or shed it")
+    ap.add_argument("--shed-factor", type=float, default=3.0,
+                    help="shed when even the degraded plan is "
+                         "predicted past factor×SLO")
+    ap.add_argument("--skew", type=float, default=0.0,
+                    help="Zipf skew of the bounded load's query "
+                         "sampling (0 = round-robin; >0 draws queries "
+                         "with popularity ∝ 1/rank^skew — the repeat-"
+                         "heavy traffic caches are for)")
+    ap.add_argument("--replay", default=None,
+                    help="replay a query-index trace file (one index "
+                         "per line) instead of sampling")
     ap.add_argument("--port", type=int, default=None,
                     help="serve forever on this TCP port (0 binds an "
                          "ephemeral port and prints the real one); "
@@ -233,13 +263,21 @@ def main():
     # backend already configured (and device cache pre-materialised) via
     # MultiStageParams in build_or_load; the engine owns the retriever so
     # a process shard group's workers are reaped on every exit path
+    caches = None
+    if args.cache_exact > 0 or args.cache_stage1 > 0:
+        caches = CacheHierarchy(exact_entries=args.cache_exact,
+                                stage1_entries=args.cache_stage1)
+    admission = None
+    if args.admission_slo_ms is not None:
+        admission = AdmissionController(args.admission_slo_ms,
+                                        shed_factor=args.shed_factor)
     engine = ServeEngine(retr, pipeline_depth=depth,
                          pipeline_workers=args.pipeline_workers,
-                         own_retriever=True)
+                         own_retriever=True, caches=caches)
     server = RetrievalServer(
         engine, n_threads=args.threads, max_batch=args.max_batch,
         batch_timeout_ms=args.batch_timeout_ms,
-        latency_slo_ms=args.latency_slo_ms)
+        latency_slo_ms=args.latency_slo_ms, admission=admission)
     server.start()
     rb = getattr(retr, "rerank_backend", args.rerank_backend)
     if rb != args.rerank_backend:
@@ -267,12 +305,21 @@ def main():
 
         assert corpus is not None, \
             "the bounded load test needs a built-in corpus"
+        n_unique = len(corpus["q_embs"])
+        if args.replay is not None:
+            trace = load_trace(args.replay) % n_unique
+            trace = trace[:args.n] if len(trace) >= args.n else \
+                np.resize(trace, args.n)
+        elif args.skew > 0:
+            trace = zipf_trace(args.n, n_unique, skew=args.skew, seed=0)
+        else:
+            trace = np.arange(args.n) % n_unique
         reqs = [Request(qid=i, method=args.method,
-                        q_emb=corpus["q_embs"][i % 300],
-                        term_ids=corpus["q_term_ids"][i % 300],
-                        term_weights=corpus["q_term_weights"][i % 300],
-                        k=20)
-                for i in range(args.n)]
+                        q_emb=corpus["q_embs"][q],
+                        term_ids=corpus["q_term_ids"][q],
+                        term_weights=corpus["q_term_weights"][q],
+                        k=20, trace_id=int(q))
+                for i, q in enumerate(trace)]
         if args.arrival_rate is not None:
             res = run_open_loop(server, reqs,
                                 arrival_rate=args.arrival_rate, seed=0)
@@ -283,6 +330,25 @@ def main():
         print(f"offered {s['offered_qps']:.2f} QPS → achieved "
               f"{s['achieved_qps']:.2f}; p50 {s['p50'] * 1e3:.1f} ms, "
               f"p95 {s['p95'] * 1e3:.1f} ms, p99 {s['p99'] * 1e3:.1f} ms")
+        print(f"trace: {s['unique_queries']} unique / "
+              f"{s['repeat_queries']} repeats; outcomes: "
+              f"{s['cache_hits']} cache hits, {s['degraded']} degraded, "
+              f"{s['shed']} shed, {s['failed']} failed")
+        if caches is not None:
+            cs = caches.stats()
+            print(f"caches: exact {cs['exact']['hits']}h/"
+                  f"{cs['exact']['misses']}m "
+                  f"(size {cs['exact']['size']}/"
+                  f"{cs['exact']['capacity']}), stage1 "
+                  f"{cs['stage1']['hits']}h/{cs['stage1']['misses']}m "
+                  f"(size {cs['stage1']['size']}/"
+                  f"{cs['stage1']['capacity']})")
+        if admission is not None:
+            ast = admission.stats()
+            print(f"admission: {ast['full_admits']} full, "
+                  f"{ast['degraded_admits']} degraded, "
+                  f"{ast['sheds']} shed "
+                  f"(SLO {ast['latency_slo_ms']:.0f} ms)")
         if depth > 1:
             h = server.health()
             print(f"pipeline overlap: "

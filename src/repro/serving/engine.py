@@ -26,6 +26,16 @@ from typing import Optional
 import numpy as np
 
 from repro.core.multistage import MultiStageRetriever
+from repro.serving.context import (
+    ADMIT_DEGRADED,
+    ADMIT_FULL,
+    CacheHierarchy,
+    RequestContext,
+    exact_cache_key,
+    freeze,
+    query_digest,
+    stage1_cache_key,
+)
 from repro.serving.pipeline import (
     PipelineExecutor,
     PipelineStopped,
@@ -43,6 +53,11 @@ class Request:
     k: int = 100
     alpha: Optional[float] = None
     t_arrival: float = 0.0
+    deadline_ms: Optional[float] = None   # per-request latency budget
+    trace_id: Optional[int] = None        # load-trace identity (repeats)
+    # typed lifecycle record (cache keys, admission class); built by
+    # the engine/server on demand, carried with the request after that
+    ctx: Optional[RequestContext] = None
 
 
 @dataclasses.dataclass
@@ -53,10 +68,13 @@ class Result:
     t_arrival: float
     t_start: float
     t_done: float
-    # degraded answers (allow_degraded shard groups only): the result
-    # merges the surviving shards and names the doc ranges it is missing
+    # degraded answers: shard groups missing replicas, or admission
+    # control downgrading the request to the splade-only plan; the
+    # reason code says which
     degraded: bool = False
     missing_shards: tuple = ()
+    degrade_reason: str = ""
+    cache_hit: bool = False
 
     @property
     def latency(self) -> float:
@@ -74,7 +92,8 @@ class ServeEngine:
                  splade_backend: Optional[str] = None,
                  pipeline_depth: int = 1,
                  pipeline_workers: str = "single",
-                 own_retriever: bool = False):
+                 own_retriever: bool = False,
+                 caches: Optional[CacheHierarchy] = None):
         """``splade_backend`` (host | jax | pallas) switches the
         retriever's stage-1 scorer at construction time — a convenience
         for retrievers built elsewhere, NOT a per-engine scope: the
@@ -95,9 +114,17 @@ class ServeEngine:
         this engine: ``close()`` also calls ``retriever.close()`` when
         it has one. Launchers set it so a process-shard group's worker
         processes are reaped on every exit path (no orphans); leave it
-        False when the retriever is shared across engines."""
+        False when the retriever is shared across engines.
+
+        ``caches``: optional :class:`CacheHierarchy`. The exact result
+        cache is consulted/filled by the engine itself; the stage-1
+        cache is attached to the retriever, whose plans consult it via
+        the per-request contexts threaded through ``build_batch``."""
         self.retriever = retriever
         self._own_retriever = own_retriever
+        self.caches = caches
+        if caches is not None and hasattr(retriever, "attach_caches"):
+            retriever.attach_caches(caches)
         if splade_backend is not None:
             retriever.set_splade_backend(splade_backend)
             if splade_backend != "host":
@@ -181,6 +208,109 @@ class ServeEngine:
                 "queues": {m: px.queue_depths()
                            for m, px in pipes.items()}}
 
+    # -- request context & caching ---------------------------------------
+    def context_for(self, req: Request) -> RequestContext:
+        """Resolve a request into its typed lifecycle record.
+
+        Cache keys are built from exact byte digests of the request's
+        tensors plus the retriever's config salt; they stay ``None``
+        when the engine has no caches (or the retriever can't salt
+        them), which disables every cache path for that request."""
+        retr = self.retriever
+        alpha = req.alpha
+        if alpha is None:
+            alpha = getattr(getattr(retr, "params", None), "alpha", None)
+        cache_key = stage1_key = None
+        salts = getattr(retr, "cache_salts", None)
+        if (salts is not None and self.caches is not None
+                and self.caches.enabled):
+            exact_salt, stage1_salt = salts(req.method)
+            digest = query_digest(req.q_emb, req.term_ids,
+                                  req.term_weights)
+            cache_key = exact_cache_key(digest, req.method, req.k,
+                                        alpha, exact_salt)
+            if req.method == "colbert":
+                s1_digest = query_digest(req.q_emb, None, None)
+            else:
+                s1_digest = query_digest(None, req.term_ids,
+                                         req.term_weights)
+            stage1_key = stage1_cache_key(s1_digest, stage1_salt)
+        return RequestContext(
+            qid=req.qid, method=req.method, k=req.k, alpha=alpha,
+            t_arrival=req.t_arrival, deadline_ms=req.deadline_ms,
+            cache_key=cache_key, stage1_key=stage1_key)
+
+    def _ensure_ctxs(self, reqs: list[Request]) -> None:
+        if self.caches is None or not self.caches.enabled:
+            return
+        for r in reqs:
+            if r.ctx is None:
+                r.ctx = self.context_for(r)
+
+    def _counter(self, name: str, delta: int = 1) -> None:
+        ps = getattr(self.retriever, "pipeline_stats", None)
+        if ps is not None and hasattr(ps, "counter"):
+            ps.counter(name, delta)
+
+    def cache_lookup(self, req: Request,
+                     count_miss: bool = True) -> Optional[Result]:
+        """Exact-cache probe; a hit IS the answer (bitwise the cold
+        result) and counts as served. ``count_miss=False`` for
+        advisory probes (the server's submit fast path) so the
+        process-time probe stays the authoritative miss count."""
+        caches = self.caches
+        if caches is None or caches.exact.capacity <= 0:
+            return None
+        if req.ctx is None:
+            req.ctx = self.context_for(req)
+        hit = caches.exact.get(req.ctx.cache_key, count_miss=count_miss)
+        if hit is None:
+            return None
+        pids, scores = hit
+        self._counter("cache_exact_hits")
+        now = time.perf_counter()
+        with self._lock:
+            self.served += 1
+        return Result(qid=req.qid, pids=pids, scores=scores,
+                      t_arrival=req.t_arrival, t_start=now, t_done=now,
+                      cache_hit=True)
+
+    def _cache_store(self, req: Request, res: Result) -> None:
+        """Fill the exact cache from a full-quality answer. Degraded
+        answers (missing shards or admission downgrade) are never
+        stored — a later healthy run of the same query must not be
+        served yesterday's partial result."""
+        caches = self.caches
+        ctx = req.ctx
+        if (caches is None or caches.exact.capacity <= 0
+                or ctx is None or ctx.cache_key is None
+                or res.degraded or res.cache_hit
+                or ctx.admission != ADMIT_FULL):
+            return
+        caches.exact.put(ctx.cache_key, freeze(res.pids, res.scores),
+                         getattr(self.retriever, "index_generation", 0))
+        self._counter("cache_exact_stores")
+
+    @staticmethod
+    def _effective_method(req: Request) -> str:
+        """Admission-degraded hybrid/rerank requests run the cheap
+        splade-only plan; everything else keeps its own method."""
+        ctx = req.ctx
+        if (ctx is not None and ctx.admission == ADMIT_DEGRADED
+                and req.method in ("hybrid", "rerank")
+                and req.term_ids is not None and len(req.term_ids) > 0):
+            return "splade"
+        return req.method
+
+    @staticmethod
+    def _degrade_info(req: Request, missing: tuple) -> tuple:
+        ctx = req.ctx
+        adm = ctx is not None and ctx.admission == ADMIT_DEGRADED
+        degraded = bool(missing) or adm
+        reason = (ctx.admit_reason if adm
+                  else ("missing_shards" if missing else ""))
+        return degraded, reason
+
     # -- request execution -----------------------------------------------
     def _missing_shards(self) -> tuple:
         """Missing-shard note of the search this thread just ran
@@ -189,48 +319,83 @@ class ServeEngine:
         return tuple(last()) if last is not None else ()
 
     def process(self, req: Request) -> Result:
+        hit = self.cache_lookup(req)
+        if hit is not None:
+            return hit
         t_start = time.perf_counter()
+        method = self._effective_method(req)
         pids, scores = self.retriever.search(
-            req.method, q_emb=req.q_emb, term_ids=req.term_ids,
+            method, q_emb=req.q_emb, term_ids=req.term_ids,
             term_weights=req.term_weights, alpha=req.alpha, k=req.k)
         missing = self._missing_shards()
         t_done = time.perf_counter()
         with self._lock:
             self.served += 1
-        return Result(qid=req.qid, pids=pids, scores=scores,
-                      t_arrival=req.t_arrival, t_start=t_start,
-                      t_done=t_done, degraded=bool(missing),
-                      missing_shards=missing)
+        degraded, reason = self._degrade_info(req, missing)
+        res = Result(qid=req.qid, pids=pids, scores=scores,
+                     t_arrival=req.t_arrival, t_start=t_start,
+                     t_done=t_done, degraded=degraded,
+                     missing_shards=missing, degrade_reason=reason)
+        self._cache_store(req, res)
+        return res
 
     def process_batch(self, reqs: list[Request]) -> list[Result]:
         """Score a micro-batch in one batched retriever call per method
         group. Per-request results are identical (within fp tolerance) to
         :meth:`process`; requests keep their own ``k``/``alpha``.
 
-        Falls back to sequential processing when the retriever has no
-        ``search_batch`` (e.g. test doubles)."""
+        Cache hits are peeled off first; only the misses run the
+        retriever. Falls back to sequential processing when the
+        retriever has no ``search_batch`` (e.g. test doubles)."""
         if len(reqs) == 1 or not hasattr(self.retriever, "search_batch"):
             return [self.process(r) for r in reqs]
 
+        self._ensure_ctxs(reqs)
+        results: list = [None] * len(reqs)
+        miss_idx = []
+        for i, r in enumerate(reqs):
+            hit = self.cache_lookup(r)
+            if hit is not None:
+                results[i] = hit
+            else:
+                miss_idx.append(i)
+        if not miss_idx:
+            return results
+        miss = [reqs[i] for i in miss_idx]
+        if len(miss) == 1:
+            results[miss_idx[0]] = self.process(miss[0])
+            return results
+
         t_start = time.perf_counter()
-        methods = [r.method for r in reqs]
-        k_max = max(r.k for r in reqs)
-        alphas = [r.alpha for r in reqs]
-        pids, scores = self.retriever.search_batch(
-            methods,
-            q_embs=[r.q_emb for r in reqs],
-            term_ids=[r.term_ids for r in reqs],
-            term_weights=[r.term_weights for r in reqs],
+        methods = [self._effective_method(r) for r in miss]
+        k_max = max(r.k for r in miss)
+        alphas = [r.alpha for r in miss]
+        kwargs = dict(
+            q_embs=[r.q_emb for r in miss],
+            term_ids=[r.term_ids for r in miss],
+            term_weights=[r.term_weights for r in miss],
             alpha=None if all(a is None for a in alphas) else alphas,
             k=k_max)
-        missing = self._missing_shards()
+        if hasattr(self.retriever, "search_batch_ctx"):
+            pids, scores, outcome = self.retriever.search_batch_ctx(
+                methods, ctxs=[r.ctx for r in miss], **kwargs)
+            missing = outcome.missing_shards
+        else:
+            pids, scores = self.retriever.search_batch(methods, **kwargs)
+            missing = self._missing_shards()
         t_done = time.perf_counter()
         with self._lock:
-            self.served += len(reqs)
-        return [Result(qid=r.qid, pids=pids[i][:r.k], scores=scores[i][:r.k],
-                       t_arrival=r.t_arrival, t_start=t_start, t_done=t_done,
-                       degraded=bool(missing), missing_shards=missing)
-                for i, r in enumerate(reqs)]
+            self.served += len(miss)
+        for j, r in enumerate(miss):
+            degraded, reason = self._degrade_info(r, missing)
+            res = Result(qid=r.qid, pids=pids[j][:r.k],
+                         scores=scores[j][:r.k], t_arrival=r.t_arrival,
+                         t_start=t_start, t_done=t_done,
+                         degraded=degraded, missing_shards=missing,
+                         degrade_reason=reason)
+            self._cache_store(r, res)
+            results[miss_idx[j]] = res
+        return results
 
     def process_batch_async(self, reqs: list[Request]) -> Future:
         """Feed a micro-batch to the stage pipeline; the returned Future
@@ -252,12 +417,28 @@ class ServeEngine:
                 out.set_exception(e)
             return out
 
+        self._ensure_ctxs(reqs)
+        hits: list = [None] * len(reqs)
+        miss_idx = []
+        for i, r in enumerate(reqs):
+            hit = self.cache_lookup(r)
+            if hit is not None:
+                hits[i] = hit
+            else:
+                miss_idx.append(i)
+        if not miss_idx:
+            out = Future()
+            out.set_running_or_notify_cancel()
+            out.set_result(hits)
+            return out
+        miss = [reqs[i] for i in miss_idx]
+
         t_start = time.perf_counter()
-        n = len(reqs)
-        k_max = max(r.k for r in reqs)
+        n = len(miss)
+        k_max = max(r.k for r in miss)
         retr = self.retriever
-        methods = [r.method for r in reqs]
-        raw_alphas = [r.alpha for r in reqs]
+        methods = [self._effective_method(r) for r in miss]
+        raw_alphas = [r.alpha for r in miss]
         alphas = retr._alpha_array(
             None if all(a is None for a in raw_alphas) else raw_alphas, n)
 
@@ -266,10 +447,11 @@ class ServeEngine:
             idx = [i for i, mi in enumerate(methods) if mi == m]
             cb = retr.build_batch(
                 m,
-                q_embs=[reqs[i].q_emb for i in idx],
-                term_ids=[reqs[i].term_ids for i in idx],
-                term_weights=[reqs[i].term_weights for i in idx],
-                alphas=alphas[idx], k=k_max)
+                q_embs=[miss[i].q_emb for i in idx],
+                term_ids=[miss[i].term_ids for i in idx],
+                term_weights=[miss[i].term_weights for i in idx],
+                alphas=alphas[idx], k=k_max,
+                ctxs=[miss[i].ctx for i in idx])
             groups.append((m, idx, cb))
 
         out: Future = Future()
@@ -296,8 +478,12 @@ class ServeEngine:
                 out.set_exception(e)
                 return
             try:
-                out.set_result(self._assemble(reqs, groups, f.result(),
-                                              n, k_max, t_start))
+                assembled = self._assemble(miss, groups, f.result(),
+                                           n, k_max, t_start)
+                full = hits
+                for j, res in enumerate(assembled):
+                    full[miss_idx[j]] = res
+                out.set_result(full)
             except Exception as err:
                 out.set_exception(err)
 
@@ -320,8 +506,14 @@ class ServeEngine:
         t_done = time.perf_counter()
         with self._lock:
             self.served += n
-        return [Result(qid=r.qid, pids=pids[i][:r.k],
-                       scores=scores[i][:r.k], t_arrival=r.t_arrival,
-                       t_start=t_start, t_done=t_done,
-                       degraded=bool(missing), missing_shards=missing)
-                for i, r in enumerate(reqs)]
+        out = []
+        for i, r in enumerate(reqs):
+            degraded, reason = self._degrade_info(r, missing)
+            res = Result(qid=r.qid, pids=pids[i][:r.k],
+                         scores=scores[i][:r.k], t_arrival=r.t_arrival,
+                         t_start=t_start, t_done=t_done,
+                         degraded=degraded, missing_shards=missing,
+                         degrade_reason=reason)
+            self._cache_store(r, res)
+            out.append(res)
+        return out

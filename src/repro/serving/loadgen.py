@@ -33,6 +33,7 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from repro.serving.admission import RequestShed
 from repro.serving.engine import Request
 from repro.serving.server import RetrievalServer
 
@@ -47,6 +48,17 @@ class LoadResult:
     # sample of the exceptions behind ``failed`` (first 8) — an
     # availability assert that trips should say what actually broke
     errors: list = dataclasses.field(default_factory=list)
+    # outcome split: a shed is a measured overload response, never a
+    # failure; degraded and cache-hit answers completed and are in the
+    # latency arrays but are counted separately so a run's quality mix
+    # is visible next to its tail latency
+    shed: int = 0
+    degraded: int = 0
+    cache_hits: int = 0
+    # query-identity mix of the submitted trace (``trace_id``, falling
+    # back to qid): how much repeat traffic the cache could have seen
+    unique_queries: int = 0
+    repeat_queries: int = 0
 
     def percentile(self, p: float) -> float:
         return float(np.percentile(self.latencies, p)) if len(self.latencies) else float("nan")
@@ -74,7 +86,52 @@ class LoadResult:
                 "mean_service": float(np.mean(self.service_times))
                 if len(self.service_times) else float("nan"),
                 "n": int(len(self.latencies)),
-                "failed": int(self.failed)}
+                "failed": int(self.failed),
+                "shed": int(self.shed),
+                "degraded": int(self.degraded),
+                "cache_hits": int(self.cache_hits),
+                "unique_queries": int(self.unique_queries),
+                "repeat_queries": int(self.repeat_queries)}
+
+
+def _trace_counts(requests: list[Request]) -> tuple[int, int]:
+    """(unique, repeat) over the submitted trace's query identities."""
+    ids = [r.trace_id if r.trace_id is not None else r.qid
+           for r in requests]
+    unique = len(set(ids))
+    return unique, len(ids) - unique
+
+
+def zipf_trace(n_requests: int, n_unique: int, skew: float = 1.1,
+               seed: int = 0) -> np.ndarray:
+    """Query indices for a Zipf-skewed trace: request ``i`` asks query
+    ``trace[i]`` in ``[0, n_unique)``, with popularity ∝ 1/rank^skew.
+    ``skew <= 0`` degenerates to uniform sampling. Ranks are mapped to
+    query indices through a seeded permutation so "popular" is not
+    correlated with low query ids."""
+    rng = np.random.default_rng(seed)
+    if skew <= 0:
+        return rng.integers(0, n_unique, size=n_requests)
+    ranks = np.arange(1, n_unique + 1, dtype=np.float64)
+    w = 1.0 / np.power(ranks, skew)
+    w /= w.sum()
+    picks = rng.choice(n_unique, size=n_requests, p=w)
+    perm = rng.permutation(n_unique)
+    return perm[picks]
+
+
+def load_trace(path) -> np.ndarray:
+    """Replay trace: one query index per line (blank lines and ``#``
+    comments skipped)."""
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.split("#", 1)[0].strip()
+            if line:
+                out.append(int(line))
+    if not out:
+        raise ValueError(f"replay trace {path} has no query indices")
+    return np.asarray(out, dtype=np.int64)
 
 
 def run_poisson_load(server: RetrievalServer, requests: list[Request],
@@ -155,11 +212,16 @@ def _run_scheduled(server: RetrievalServer, requests: list[Request],
         for req in requests[i:i + burst]:
             futures.append(server.submit(req))
     lat, svc = [], []
-    failed = 0
+    failed = shed = degraded = cache_hits = 0
     errors: list = []
     for fut in futures:
         try:
             res = fut.result(timeout=timeout)
+        except RequestShed:
+            # admission control rejecting under overload is a measured
+            # outcome of the experiment, not a failure to tolerate
+            shed += 1
+            continue
         except Exception as e:
             if not tolerate_failures:
                 raise
@@ -169,13 +231,20 @@ def _run_scheduled(server: RetrievalServer, requests: list[Request],
             continue
         lat.append(res.latency)
         svc.append(res.service_time)
+        if getattr(res, "degraded", False):
+            degraded += 1
+        if getattr(res, "cache_hit", False):
+            cache_hits += 1
         if on_result is not None:
             on_result(res)
     wall = time.perf_counter() - t0
+    unique, repeat = _trace_counts(requests)
     return LoadResult(latencies=np.asarray(lat),
                       service_times=np.asarray(svc),
                       wall_time=wall, offered_qps=offered_qps,
-                      failed=failed, errors=errors)
+                      failed=failed, errors=errors, shed=shed,
+                      degraded=degraded, cache_hits=cache_hits,
+                      unique_queries=unique, repeat_queries=repeat)
 
 
 @dataclasses.dataclass
@@ -263,6 +332,7 @@ def run_closed_loop(server: RetrievalServer, requests: list[Request],
     lat = [None] * len(requests)
     svc = [None] * len(requests)
     errors: list[BaseException] = []
+    counts = {"shed": 0, "degraded": 0, "cache_hits": 0}
 
     def client():
         while True:
@@ -273,6 +343,10 @@ def run_closed_loop(server: RetrievalServer, requests: list[Request],
                 next_i[0] += 1
             try:
                 res = server.submit(requests[i]).result(timeout=timeout)
+            except RequestShed:
+                with lock:
+                    counts["shed"] += 1
+                continue
             except Exception as e:
                 # record and keep the loop alive: one failed request must
                 # not silently kill the client thread and strand the rest
@@ -281,6 +355,12 @@ def run_closed_loop(server: RetrievalServer, requests: list[Request],
                 continue
             lat[i] = res.latency
             svc[i] = res.service_time
+            if getattr(res, "degraded", False):
+                with lock:
+                    counts["degraded"] += 1
+            if getattr(res, "cache_hit", False):
+                with lock:
+                    counts["cache_hits"] += 1
 
     t0 = time.perf_counter()
     threads = [threading.Thread(target=client, daemon=True)
@@ -294,7 +374,12 @@ def run_closed_loop(server: RetrievalServer, requests: list[Request],
     ok_svc = [x for x in svc if x is not None]
     if errors and not ok_lat:
         raise errors[0]
+    unique, repeat = _trace_counts(requests)
     return LoadResult(latencies=np.asarray(ok_lat, np.float64),
                       service_times=np.asarray(ok_svc, np.float64),
                       wall_time=wall,
-                      offered_qps=len(requests) / max(wall, 1e-9))
+                      offered_qps=len(requests) / max(wall, 1e-9),
+                      failed=len(errors), errors=errors[:8],
+                      shed=counts["shed"], degraded=counts["degraded"],
+                      cache_hits=counts["cache_hits"],
+                      unique_queries=unique, repeat_queries=repeat)

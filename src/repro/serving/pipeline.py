@@ -88,6 +88,7 @@ class CandidateBatch:
     term_ids: Optional[tuple] = None        # per-query (Qt_i,) arrays
     term_weights: Optional[tuple] = None
     alphas: Optional[np.ndarray] = None     # (B,) hybrid interpolation
+    ctxs: Optional[tuple] = None            # per-query RequestContext
     state: Mapping[str, Any] = _EMPTY_STATE
     shard_states: Optional[tuple] = None    # per-shard state mappings
     pids: Optional[np.ndarray] = None       # (B, k) final, -1 padded

@@ -44,6 +44,8 @@ from typing import Optional
 
 import numpy as np
 
+from repro.serving.admission import AdmissionController, RequestShed
+from repro.serving.context import ADMIT_DEGRADED, ADMIT_SHED
 from repro.serving.engine import Request, Result, ServeEngine
 from repro.serving.pipeline import PipelineStopped
 
@@ -53,7 +55,8 @@ class RetrievalServer:
                  max_queue: int = 4096, max_batch: int = 1,
                  batch_timeout_ms: float = 2.0,
                  latency_slo_ms: Optional[float] = None,
-                 slo_ewma_alpha: float = 0.25, grow_patience: int = 3):
+                 slo_ewma_alpha: float = 0.25, grow_patience: int = 3,
+                 admission: Optional[AdmissionController] = None):
         """``latency_slo_ms`` switches on adaptive micro-batch sizing:
         the effective batch cap shrinks (halves, floor 1) when the EWMA
         of batch service time exceeds the SLO and grows back
@@ -63,8 +66,16 @@ class RetrievalServer:
         the current operating point, not cheap small-batch samples, or
         the cap hunts between sizes and periodically blows the SLO.
         ``max_batch`` stays the hard ceiling; ``None`` keeps the cap
-        fixed (PR-1 behaviour)."""
+        fixed (PR-1 behaviour).
+
+        ``admission``: optional :class:`AdmissionController`. Each
+        ``submit`` is classified against the live per-stage EWMAs: full
+        quality, degraded to the splade-only plan, or shed outright
+        (the future fails with :class:`RequestShed` before the request
+        ever enters the queue)."""
         self.engine = engine
+        self.admission = admission
+        self.sheds = 0
         self.n_threads = n_threads
         self.max_batch = max(1, max_batch)
         self.batch_timeout_ms = batch_timeout_ms
@@ -355,8 +366,53 @@ class RetrievalServer:
 
     # -- client API -------------------------------------------------------
     def submit(self, req: Request) -> Future:
+        """Front door: exact-cache fast path → admission → queue.
+
+        A cache hit resolves the future immediately without touching
+        the queue (bitwise the cold answer, near-zero latency). The
+        admission controller then classifies the request against the
+        live per-stage EWMAs: a shed fails the future with
+        :class:`RequestShed`; a degrade stamps the request's context so
+        the engine runs the splade-only plan."""
         req.t_arrival = time.perf_counter()
         fut: Future = Future()
+        engine = self.engine
+        if (req.ctx is None and hasattr(engine, "context_for")
+                and (self.admission is not None
+                     or getattr(engine, "caches", None) is not None)):
+            req.ctx = engine.context_for(req)
+        hit = (engine.cache_lookup(req, count_miss=False)
+               if hasattr(engine, "cache_lookup") else None)
+        if hit is not None:
+            fut.set_running_or_notify_cancel()
+            fut.set_result(hit)
+            return fut
+        if self.admission is not None:
+            retr = getattr(engine, "retriever", None)
+            stats = getattr(retr, "pipeline_stats", None)
+            snap = stats.snapshot()["stages"] if stats is not None else {}
+            degradable = (req.method in ("hybrid", "rerank")
+                          and req.term_ids is not None
+                          and len(req.term_ids) > 0)
+            with self._lock:
+                cap = self.batch_cap
+            d = self.admission.decide(
+                req.method, degradable, snap,
+                queue_depth=self.queue.qsize(), batch_cap=cap,
+                deadline_ms=req.deadline_ms)
+            if d.admission == ADMIT_SHED:
+                with self._lock:
+                    self.sheds += 1
+                if stats is not None and hasattr(stats, "counter"):
+                    stats.counter("admission_sheds")
+                fut.set_running_or_notify_cancel()
+                fut.set_exception(RequestShed(d.reason,
+                                              d.predicted_full_ms))
+                return fut
+            if d.admission == ADMIT_DEGRADED and req.ctx is not None:
+                req.ctx = req.ctx.degraded(d.reason)
+                if stats is not None and hasattr(stats, "counter"):
+                    stats.counter("admission_degraded")
         self.queue.put((req, fut))
         return fut
 
@@ -370,6 +426,7 @@ class RetrievalServer:
         h = {"queue_depth": self.queue.qsize(),
              "served": self.engine.served,
              "failed": self.failed,
+             "sheds": self.sheds,
              "workers": sum(t.is_alive() for t in self.workers),
              "batch_cap": self.batch_cap,
              "ewma_latency_ms": self.ewma_latency_ms,
@@ -397,6 +454,12 @@ class RetrievalServer:
                        "pages_touched": r["pages_touched"]}
                 for name, r in snap["stages"].items()}
             h["overlap_fraction"] = snap["overlap_fraction"]
+            h["counters"] = dict(snap.get("counters", {}))
+        if self.admission is not None:
+            h["admission"] = self.admission.stats()
+        caches = getattr(self.engine, "caches", None)
+        if caches is not None:
+            h["caches"] = caches.stats()
         if getattr(self.engine, "pipelined", False):
             h["pipeline"] = self.engine.pipeline_health()
         return h
@@ -425,11 +488,19 @@ class _Handler(socketserver.StreamRequestHandler):
                 out = {"qid": res.qid, "pids": res.pids.tolist(),
                        "scores": [float(s) for s in res.scores],
                        "latency": res.latency}
+                if res.cache_hit:
+                    out["cache_hit"] = True
                 if res.degraded:
-                    # partial answer: surviving shards only — clients
-                    # see exactly which doc ranges are absent
+                    # partial or downgraded answer: the reason code says
+                    # whether shards were missing or admission control
+                    # ran the cheap plan
                     out["degraded"] = True
+                    out["degrade_reason"] = res.degrade_reason
                     out["missing_shards"] = list(res.missing_shards)
+            except RequestShed as e:
+                out = {"error": str(e), "shed": True, "reason": e.reason}
+                if qid is not None:
+                    out["qid"] = qid
             except Exception as e:
                 out = {"error": str(e)}
                 if qid is not None:
