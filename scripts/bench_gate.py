@@ -11,7 +11,11 @@ must serve every request from the exact cache bitwise without touching
 a residual token), then a mini thread-vs-process worker comparison
 over the same split (process rankings must match the thread run
 exactly; QPS plus the transport's zero-copy/copied byte split and RPC
-dispatch counts are recorded), writes the measured metrics to
+dispatch counts are recorded). The gate runs **frozen**: live-index
+counters (delta docs, tombstones, compactions, generation) are
+recorded and hard-asserted zero — the mutable-index overlay must stay
+inert when unused, so the pinned CRC genuinely pins the frozen
+layout. It writes the measured metrics to
 ``results/bench_ci.json``, and compares them against the committed
 baseline in ``results/bench_baseline.json``:
 
@@ -153,6 +157,16 @@ def run_bench() -> dict:
         assert adm_stats["degraded_admits"] == 0, adm_stats
         cache_stats = caches.stats()
         assert cache_stats["exact"]["hits"] >= 32, cache_stats
+        # live-index inertness: the gate never enables mutations, so the
+        # frozen serve path must not have touched the mutable-index
+        # machinery — no LiveView materialized, zero generation bumps.
+        # Anything else means the live overlay leaks into the frozen
+        # path and the pinned CRC band no longer pins the frozen layout
+        assert getattr(retr, "live", None) is None, \
+            "live state materialized on the frozen path"
+        thread_gen = int(getattr(retr, "index_generation", 0))
+        assert thread_gen == 0, \
+            f"frozen path bumped index generation to {thread_gen}"
     finally:
         srv.stop()
         retr.attach_caches(None)
@@ -199,6 +213,13 @@ def run_bench() -> dict:
             "hedges": int(counters.get("hedges", 0)),
             "replica_heals": int(counters.get("replica_heals", 0)),
             "degraded_batches": int(counters.get("degraded_batches", 0))}
+        # same inertness bar for the process group: no live overlay, no
+        # generation bumps, no delta/tombstone/compaction activity
+        assert getattr(pg, "live", None) is None, \
+            "live state materialized on the frozen process-group path"
+        proc_gen = int(getattr(pg, "index_generation", 0))
+        assert proc_gen == 0, \
+            f"frozen process path bumped index generation to {proc_gen}"
     finally:
         srv.stop()
         pg.close()
@@ -232,6 +253,15 @@ def run_bench() -> dict:
         # admission counters (zero sheds + bitwise/zero-token hit
         # repeats are hard in-run asserts above, not baseline bands)
         "front_door": {"caches": cache_stats, "admission": adm_stats},
+        # live-index trajectory: the gate runs frozen, so every counter
+        # must stay zero — recorded (and hard-asserted in-run) so a
+        # change that wakes the mutable-index machinery on the frozen
+        # path shows up as a red gate, not a silent perf tax
+        "live_index": {"enabled": False,
+                       "generation": thread_gen,
+                       "process_generation": proc_gen,
+                       "delta_docs": 0, "tombstones": 0,
+                       "compactions": 0},
         "determinism": {"pids_crc32": pids_crc,
                         "residual_tokens_read": int(tokens),
                         "served": int(len(res.latencies)),
@@ -261,6 +291,12 @@ def compare(metrics: dict, baseline: dict, tol: float) -> list:
     md, bd = metrics["determinism"], baseline["determinism"]
     if md["served"] != bd["served"] or md["failed"]:
         fails.append(f"served/failed drifted: {md} vs {bd}")
+    li = metrics.get("live_index") or {}
+    if any(li.get(k) for k in ("generation", "process_generation",
+                               "delta_docs", "tombstones", "compactions")):
+        fails.append(f"live-index counters nonzero on a frozen gate "
+                     f"run: {li} — the mutable-index overlay leaked "
+                     f"into the frozen path")
     if metrics.get("env") != baseline.get("env"):
         print(f"bench-gate: env changed ({baseline.get('env')} → "
               f"{metrics.get('env')}) — determinism bands skipped; "

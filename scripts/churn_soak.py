@@ -1,0 +1,307 @@
+#!/usr/bin/env python
+"""Churn soak: a seeded, interleaved upsert/delete/query trace against
+a live 2-shard **process-worker** serving stack, entirely through the
+TCP front.
+
+What it asserts (the live-index correctness bar, end to end):
+
+* **Quiesce parity** — after every mutation phase the traffic stops and
+  each query's TCP answer is compared bitwise (under the monotone
+  surviving-pid map) against an in-process from-scratch rebuild of the
+  surviving corpus with the serve index's geometry pinned.
+* **Zero failed requests across the compaction swap** — background
+  query threads hammer the front while a ``compact`` op merges the
+  delta segment into a new index generation; every reply must be a
+  well-formed, bitwise-correct answer (the swap is atomic under the
+  writer gate).
+* **Post-compaction generation hygiene** — the generation bumped, the
+  delta drained, and parity still holds for fresh mutations layered on
+  the compacted base.
+
+Writes a machine-readable summary to ``results/churn_ci.json`` (CI
+uploads it as an artifact). ``--quick`` is the CI tier; the default
+runs a longer trace.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+from repro.core.multistage import MultiStageParams, MultiStageRetriever  # noqa: E402
+from repro.core.plaid import PLAIDSearcher, PlaidParams  # noqa: E402
+from repro.core.sharded import build_shard_group  # noqa: E402
+from repro.data.synth import SynthCfg, make_corpus  # noqa: E402
+from repro.index.builder import ColBERTIndex, build_colbert_index  # noqa: E402
+from repro.index.live import build_reference_indexes, map_global_to_ref  # noqa: E402
+from repro.index.sharding import shard_boundaries, split_index_tree  # noqa: E402
+from repro.index.splade_index import SpladeIndex, build_splade_index  # noqa: E402
+from repro.serving.engine import ServeEngine  # noqa: E402
+from repro.serving.server import RetrievalServer, tcp_query  # noqa: E402
+
+# candidate_cap must not bind (rebuild parity needs both sides to keep
+# every stage-2 candidate); host splade backend — a dirty live state
+# forces it anyway (device scorers have no tombstone-exclusion path)
+PLAID = PlaidParams(nprobe=4, candidate_cap=4096, ndocs=128, k=10)
+MS = MultiStageParams(first_k=64, k=10, splade_backend="host")
+METHODS = ("splade", "colbert", "rerank", "hybrid")
+
+
+class Soak:
+    def __init__(self, quick: bool, seed: int):
+        self.rng = np.random.default_rng(seed)
+        n_docs = 260 if quick else 420
+        self.hold = 16 if quick else 40          # upsert pool
+        self.cfg = SynthCfg(n_docs=n_docs, n_queries=16 if quick else 24,
+                            vocab=512, dim=32, n_topics=12, doc_maxlen=20,
+                            query_maxlen=6, seed=seed)
+        self.corpus = make_corpus(self.cfg)
+        self.base_n = n_docs - self.hold
+        self.next_upsert = self.base_n
+        self.tombstoned: set[int] = set()
+        self.failures = 0
+        self.ops = {"upsert": 0, "delete": 0, "query": 0, "compact": 0}
+        self.parity_points = 0
+
+    # -- stack -----------------------------------------------------------
+    def build(self, root: pathlib.Path):
+        c = self.corpus
+        base = root / "base"
+        build_colbert_index(base / "colbert", c["doc_embs"][:self.base_n],
+                            c["doc_lens"][:self.base_n], nbits=4,
+                            n_centroids=64, kmeans_iters=4)
+        build_splade_index(c["doc_term_ids"][:self.base_n],
+                           c["doc_term_weights"][:self.base_n],
+                           self.cfg.vocab, self.base_n).save(base / "splade")
+        self.base_index = ColBERTIndex(base / "colbert")
+        self.quantum = SpladeIndex.load(base / "splade").quantum
+        group_dir = split_index_tree(base, 2)
+        retr = build_shard_group(
+            [group_dir / str(i) for i in range(2)],
+            shard_boundaries(self.base_n, 2), workers="process",
+            plaid_params=PLAID, multistage_params=MS)
+        retr.enable_live()
+        self.engine = ServeEngine(retr, own_retriever=True)
+        self.server = RetrievalServer(self.engine, n_threads=2,
+                                      max_batch=4)
+        self.server.start()
+        tcp = self.server.serve_tcp("127.0.0.1", 0)
+        threading.Thread(target=tcp.serve_forever, daemon=True).start()
+        self.port = self.server.tcp_port
+        self.oracle_root = root / "oracles"
+
+    def call(self, payload: dict) -> dict:
+        out = tcp_query("127.0.0.1", self.port, payload)
+        if "error" in out:
+            self.failures += 1
+            raise AssertionError(f"request failed: {out}")
+        return out
+
+    # -- trace ops -------------------------------------------------------
+    def op_upsert(self):
+        j = self.next_upsert
+        assert j < self.cfg.n_docs, "upsert pool exhausted"
+        c = self.corpus
+        L = int(c["doc_lens"][j])
+        out = self.call({"op": "upsert",
+                         "doc_emb": c["doc_embs"][j][:L].tolist(),
+                         "doc_len": L,
+                         "term_ids": c["doc_term_ids"][j].tolist(),
+                         "term_weights": c["doc_term_weights"][j].tolist()})
+        assert out["pid"] == j, (out, j)   # append-only global pids
+        self.next_upsert += 1
+        self.ops["upsert"] += 1
+
+    def op_delete(self):
+        alive = [g for g in range(self.next_upsert)
+                 if g not in self.tombstoned]
+        victim = int(self.rng.choice(alive))
+        out = self.call({"op": "delete", "pid": victim})
+        assert out["ok"] is True
+        self.tombstoned.add(victim)
+        self.ops["delete"] += 1
+
+    def op_query(self, qi: int, method: str = "hybrid") -> dict:
+        c = self.corpus
+        out = self.call({"qid": int(qi), "method": method,
+                         "q_emb": c["q_embs"][qi].tolist(),
+                         "term_ids": c["q_term_ids"][qi].tolist(),
+                         "term_weights": c["q_term_weights"][qi].tolist(),
+                         "k": 10})
+        self.ops["query"] += 1
+        return out
+
+    # -- parity ----------------------------------------------------------
+    def quiesce_check(self, tag: str):
+        """Stop traffic; compare every query/method answer from the TCP
+        front against a from-scratch rebuild of the surviving corpus."""
+        c = self.corpus
+        survivors = np.array([g for g in range(self.next_upsert)
+                              if g not in self.tombstoned], np.int64)
+        rd = self.oracle_root / tag
+        idx = self.base_index
+        build_reference_indexes(
+            rd / "colbert", rd / "splade",
+            c["doc_embs"][survivors], c["doc_lens"][survivors],
+            c["doc_term_ids"][survivors], c["doc_term_weights"][survivors],
+            self.cfg.vocab, centroids=idx.centroids,
+            bucket_cutoffs=idx.bucket_cutoffs,
+            bucket_weights=idx.bucket_weights, nbits=idx.nbits,
+            quantum=self.quantum)
+        ref = MultiStageRetriever(
+            SpladeIndex.load(rd / "splade", mmap=True),
+            PLAIDSearcher(ColBERTIndex(rd / "colbert"), PLAID), MS)
+        q = dict(q_embs=list(c["q_embs"]), term_ids=list(c["q_term_ids"]),
+                 term_weights=list(c["q_term_weights"]))
+        for method in METHODS:
+            rp, rs = ref.search_batch(method, **q, k=10)
+            for qi in range(self.cfg.n_queries):
+                out = self.op_query(qi, method)
+                got_p = map_global_to_ref(np.asarray(out["pids"], np.int64),
+                                          survivors)
+                got_s = np.asarray(out["scores"], np.float32)
+                if not (np.array_equal(got_p, rp[qi])
+                        and np.array_equal(got_s, np.asarray(rs[qi]))):
+                    raise AssertionError(
+                        f"parity broken at {tag} method={method} q={qi}:\n"
+                        f"  served {got_p} {got_s}\n"
+                        f"  oracle {rp[qi]} {np.asarray(rs[qi])}")
+        self.parity_points += 1
+        print(f"  quiesce[{tag}]: parity ok "
+              f"({len(METHODS) * self.cfg.n_queries} answers, "
+              f"{len(survivors)} survivors)")
+
+    # -- phases ----------------------------------------------------------
+    def mixed_phase(self, n_ops: int, p_upsert: float, p_delete: float):
+        for _ in range(n_ops):
+            r = self.rng.random()
+            if r < p_upsert and self.next_upsert < self.cfg.n_docs:
+                self.op_upsert()
+            elif r < p_upsert + p_delete:
+                self.op_delete()
+            else:
+                self.op_query(int(self.rng.integers(self.cfg.n_queries)))
+
+    def compact_under_load(self, n_threads: int = 3):
+        """Background TCP query threads across the compaction swap —
+        every reply must succeed and match the pre-compaction answer
+        (compaction must not change any result)."""
+        expect = {}
+        for qi in range(self.cfg.n_queries):
+            out = self.op_query(qi)
+            expect[qi] = (out["pids"], out["scores"])
+        errors: list = []
+        stop = threading.Event()
+        served = [0] * n_threads
+
+        def reader(t):
+            rng = np.random.default_rng(1000 + t)
+            while not stop.is_set():
+                qi = int(rng.integers(self.cfg.n_queries))
+                try:
+                    out = self.op_query(qi)
+                    if (out["pids"], out["scores"]) != expect[qi]:
+                        raise AssertionError(
+                            f"answer changed across swap q={qi}")
+                    served[t] += 1
+                except Exception as e:
+                    errors.append(e)
+                    return
+
+        threads = [threading.Thread(target=reader, args=(t,))
+                   for t in range(n_threads)]
+        for t in threads:
+            t.start()
+        time.sleep(0.2)                  # readers in flight before swap
+        out = self.call({"op": "compact"})
+        self.ops["compact"] += 1
+        time.sleep(0.2)                  # and after it
+        stop.set()
+        for t in threads:
+            t.join(timeout=60)
+        if errors:
+            raise errors[0]
+        assert sum(served) > 0, "no background queries overlapped the swap"
+        print(f"  compacted {out['compacted']} docs under "
+              f"{sum(served)} concurrent queries, zero failures")
+        return out
+
+    def health(self) -> dict:
+        return self.call({"op": "health"})["health"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI tier: shorter trace, fewer quiesce points")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=str(REPO / "results/churn_ci.json"))
+    args = ap.parse_args()
+
+    t0 = time.time()
+    soak = Soak(args.quick, args.seed)
+    rounds = 1 if args.quick else 2
+    with tempfile.TemporaryDirectory(prefix="churn_") as tmp:
+        soak.build(pathlib.Path(tmp))
+        try:
+            h = soak.health()
+            assert h["live"]["tombstones"] == 0, h["live"]
+            print(f"serving 2-shard process group on :{soak.port} "
+                  f"({soak.base_n} base docs, {soak.hold} upsert pool)")
+
+            per_round = soak.hold // (2 * rounds)
+            for r in range(rounds):
+                # upsert-heavy churn, then quiesce
+                soak.mixed_phase(8 * per_round, p_upsert=0.3, p_delete=0.1)
+                soak.quiesce_check(f"r{r}-churn")
+                # delete-heavy churn (hits base and delta docs)
+                soak.mixed_phase(4 * per_round, p_upsert=0.05,
+                                 p_delete=0.35)
+                soak.quiesce_check(f"r{r}-deletes")
+                # compaction swap under concurrent traffic
+                soak.compact_under_load()
+                soak.quiesce_check(f"r{r}-compacted")
+                h = soak.health()
+                live = h["live"]
+                assert live["delta_docs"] == 0, live
+                assert live["compactions"] == r + 1, live
+                assert h["index_generation"] > 0
+                assert h["failed"] == 0, h
+
+            # post-compaction mutations still hold parity
+            soak.mixed_phase(10, p_upsert=0.4, p_delete=0.2)
+            soak.quiesce_check("post-compact-churn")
+            h = soak.health()
+            assert h["failed"] == 0 and soak.failures == 0
+        finally:
+            soak.server.shutdown_gracefully()
+            soak.engine.close()
+
+    report = {
+        "quick": args.quick, "seed": args.seed,
+        "elapsed_s": round(time.time() - t0, 2),
+        "ops": soak.ops, "parity_points": soak.parity_points,
+        "tombstones": len(soak.tombstoned),
+        "upserted": soak.next_upsert - soak.base_n,
+        "failed_requests": soak.failures,
+        "final_live": h.get("live"),
+        "index_generation": h.get("index_generation"),
+    }
+    out = pathlib.Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(report, indent=2))
+    print(f"churn soak OK: {soak.ops} → {out}")
+
+
+if __name__ == "__main__":
+    main()

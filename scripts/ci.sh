@@ -11,6 +11,10 @@
 #                      remote-worker fleet under load with seeded fault
 #                      injection + SIGKILL mid-run (zero failed
 #                      requests, post-heal parity)
+#   ci.sh churn        live-index soak: seeded interleaved upsert/
+#                      delete/query trace over a 2-shard process-worker
+#                      stack, rebuild parity at every quiesce point and
+#                      zero failed requests across the compaction swap
 #   ci.sh bench-gate   pinned-seed mini benchmark vs committed baseline
 #   ci.sh all          every stage above, in order (tier-1 default)
 #
@@ -123,6 +127,14 @@ stage_chaos() {
     python -m benchmarks.bench_latency --chaos-sweep --quick
 }
 
+stage_churn() {
+    # live-index churn soak, the CI tier: every mutation and query goes
+    # through the TCP front of a 2-shard process-worker group, with
+    # from-scratch rebuild parity asserted at each quiesce point and a
+    # compaction swap under concurrent traffic (results/churn_ci.json)
+    python scripts/churn_soak.py --quick
+}
+
 stage_bench_gate() {
     python scripts/bench_gate.py
 }
@@ -136,6 +148,7 @@ case "$cmd" in
     kernels)    run_stage kernels stage_kernels ;;
     smoke)      run_stage smoke stage_smoke ;;
     chaos)      run_stage chaos stage_chaos ;;
+    churn)      run_stage churn stage_churn ;;
     bench-gate) run_stage bench-gate stage_bench_gate ;;
     all)
         run_stage collect stage_collect
@@ -143,10 +156,11 @@ case "$cmd" in
         run_stage kernels stage_kernels
         run_stage smoke stage_smoke
         run_stage chaos stage_chaos
+        run_stage churn stage_churn
         run_stage bench-gate stage_bench_gate
         ;;
     *)
-        echo "usage: ci.sh [collect|unit|kernels|smoke|chaos|bench-gate|all]" >&2
+        echo "usage: ci.sh [collect|unit|kernels|smoke|chaos|churn|bench-gate|all]" >&2
         exit 2
         ;;
 esac

@@ -62,6 +62,10 @@ class MultiStageRetriever:
     # __init__ — inherit a disabled-cache state for free.
     _caches = None
     index_generation: int = 0
+    # live (mutable) index state: None = frozen serving (default; every
+    # pre-live code path is untouched), a LiveIndexState on the owner
+    # retriever, or a LiveView on shard-level / worker retrievers
+    live = None
 
     def __init__(self, splade_index: SpladeIndex, searcher: PLAIDSearcher,
                  params: MultiStageParams = MultiStageParams(),
@@ -258,7 +262,16 @@ class MultiStageRetriever:
                              f"{SPLADE_BACKENDS}")
         k = self.params.first_k if k is None else k
         t0 = time.perf_counter()
-        if backend == "host":
+        live = self.live
+        if live is not None and live.dirty:
+            # live serving always scores stage 1 on the host CSR: the
+            # tombstone exclusion must happen *pre-top-k* (a masked doc
+            # may not displace a survivor) and the delta segment is
+            # host-resident. Cache keys embed the generation, which a
+            # mutation bumps, so entries never mix backends within one
+            # generation.
+            out = self._run_splade_live(live, term_ids, term_weights, k)
+        elif backend == "host":
             out = self.splade.score_batch_host(term_ids, term_weights, k)
         else:
             cache = self.splade_device_cache()
@@ -270,6 +283,26 @@ class MultiStageRetriever:
                 time.perf_counter() - t0, queries=len(term_ids))
         return out
 
+    def _run_splade_live(self, live, term_ids, term_weights, k: int):
+        """Stage 1 under a dirty live state: base CSR scoring with
+        tombstoned base pids excluded pre-top-k, merged with the delta
+        segment's own top-k (owner retrievers only — shard-level
+        ``LiveView``s carry tombstones but no delta; delta docs merge at
+        the coordinator). The merge of disjoint-partition top-k lists
+        under (score desc, pid asc) equals the top-k of the union — the
+        same invariant the sharded fan-out relies on — so the result is
+        exactly what one index over base∪delta minus tombstones scores."""
+        base = self.splade.score_batch_host(term_ids, term_weights, k,
+                                            exclude=live.base_exclude)
+        delta_fn = getattr(live, "splade_delta_topk", None)
+        if delta_fn is None:
+            return base
+        d_pids, d_scores = delta_fn(term_ids, term_weights, k)
+        from repro.core.sharded import merge_topk
+        return merge_topk(
+            np.concatenate([base[0].astype(np.int64), d_pids], axis=1),
+            np.concatenate([base[1], d_scores], axis=1), k, pad_score=0.0)
+
     # ------------------------------------------------------------------
     def search(self, method: str, q_emb=None, term_ids=None,
                term_weights=None, alpha: Optional[float] = None,
@@ -278,6 +311,18 @@ class MultiStageRetriever:
         p = self.params
         k = p.k if k is None else k
         alpha = p.alpha if alpha is None else alpha
+
+        live = self.live
+        if live is not None and live.dirty:
+            # single queries route through the (gated, overlay-aware)
+            # batch path while the live state is dirty
+            pids, scores, _ = self.search_batch_ctx(
+                method,
+                q_embs=None if q_emb is None else [q_emb],
+                term_ids=None if term_ids is None else [term_ids],
+                term_weights=None if term_weights is None else [term_weights],
+                alpha=alpha, k=k)
+            return pids[0], scores[0]
 
         if method == "colbert":
             pids, scores, _ = self.searcher.search(q_emb, k=k)
@@ -685,7 +730,22 @@ class MultiStageRetriever:
 
         Runs the method's compiled :class:`StagePlan` synchronously —
         the ``pipeline_depth=1`` path of the stage-graph executor.
+
+        With a live index attached the whole batch holds the compaction
+        gate's read side: queries proceed concurrently (and re-entrantly
+        — the mixed-batch path recurses) and only the atomic generation
+        swap excludes them.
         """
+        gate = getattr(self.live, "gate", None)
+        if gate is None:
+            return self._search_batch_ctx_impl(method, q_embs, term_ids,
+                                               term_weights, alpha, k, ctxs)
+        with gate.read():
+            return self._search_batch_ctx_impl(method, q_embs, term_ids,
+                                               term_weights, alpha, k, ctxs)
+
+    def _search_batch_ctx_impl(self, method, q_embs, term_ids,
+                               term_weights, alpha, k, ctxs):
         p = self.params
         k = p.k if k is None else k
         n = len(q_embs) if q_embs is not None else len(term_ids)
@@ -699,11 +759,207 @@ class MultiStageRetriever:
             method = methods[0]
 
         alphas = self._alpha_array(alpha, n)
+        live = self.live
+        if live is not None and live.dirty and self._live_inline:
+            return self._search_batch_live(live, method, q_embs, term_ids,
+                                           term_weights, alphas, k)
         cb = self.build_batch(method, q_embs, term_ids, term_weights,
                               alphas, k, n, ctxs=ctxs)
         cb = self.compile_plan(method).run(cb, stats=self.pipeline_stats)
         return cb.pids, cb.scores, BatchOutcome(
             missing_shards=tuple(cb.state.get("missing_shards", ())))
+
+    # ------------------------------------------------------------------
+    # live (mutable) index: overlay serving, mutations, compaction
+    # ------------------------------------------------------------------
+    # Unsharded retrievers serve a dirty live state through the inline
+    # overlay path below; sharded groups instead inject the live state
+    # into their merge/fuse bodies (set False there) so per-shard plans
+    # stay frozen.
+    _live_inline = True
+
+    def enable_live(self):
+        """Attach a :class:`~repro.index.live.LiveIndexState` and return
+        it. Idempotent. Until the first mutation the state is clean and
+        every serve path is byte-for-byte the frozen one."""
+        if self.live is not None:
+            return self.live
+        if self.searcher.device_resident:
+            raise ValueError("live index requires the host (mmap) tier; "
+                             "device_resident pools are frozen")
+        from repro.index.live import LiveIndexState
+        self.live = LiveIndexState(self.searcher.index, self.splade)
+        return self.live
+
+    def _require_live(self):
+        if self.live is None:
+            raise RuntimeError("live index not enabled (enable_live / "
+                               "--live)")
+        return self.live
+
+    def live_upsert(self, doc_emb, term_ids, term_weights,
+                    doc_len=None) -> int:
+        """Append a document to the delta segment → its global pid.
+        Bumps the index generation so result/stage-1 caches invalidate."""
+        pid = self._require_live().upsert(doc_emb, term_ids, term_weights,
+                                          doc_len)
+        self.bump_index_generation()
+        return pid
+
+    def live_delete(self, gpid: int) -> bool:
+        """Tombstone a global pid; True if it was live before."""
+        ok = self._require_live().delete(gpid)
+        if ok:
+            self.bump_index_generation()
+        return ok
+
+    def live_stats(self) -> dict:
+        live = self.live
+        if live is None:
+            return {}
+        out = live.stats()
+        out["generation"] = self.index_generation
+        return out
+
+    def compact_live(self):
+        """Merge the delta prefix into a new on-disk index generation
+        and atomically swap the serve handles.
+
+        The build runs entirely off-gate (queries keep flowing against
+        base+delta); only the final handle swap takes the write gate,
+        drains in-flight readers, and bumps the generation. Global pids
+        are stable across the swap — delta doc ``j`` simply becomes base
+        doc ``base_n + j`` — so tombstones and cached client-side pids
+        stay valid."""
+        live = self._require_live()
+        n_take = live.snapshot_delta()
+        if n_take == 0:
+            return None
+        from repro.index import live as live_mod
+        idx = self.searcher.index
+        gen = self.index_generation + 1
+        col_dir = idx.path.with_name(f"{idx.path.name}.g{gen}")
+        spl_dir = idx.path.with_name(f"splade.g{gen}")
+        live_mod.compact_colbert_dir(idx, live, n_take, col_dir)
+        live_mod.compact_splade_dir(self.splade, live, n_take, spl_dir)
+        from repro.index.builder import ColBERTIndex
+        new_index = ColBERTIndex(col_dir, mode=idx.store.mode)
+        new_searcher = PLAIDSearcher(new_index, self.searcher.params,
+                                     device_resident=False)
+        new_splade = SpladeIndex.load(spl_dir)
+        with live.gate.write():
+            self.splade = new_splade
+            self.searcher = new_searcher
+            with self._lock:
+                self._plans.clear()
+                self._splade_device = None
+            live.rebase(n_take)
+            self.bump_index_generation()
+        return {"compacted": n_take, "colbert_dir": str(col_dir),
+                "splade_dir": str(spl_dir)}
+
+    def _live_exact(self, live, q, q_valid, pids_p: np.ndarray):
+        """Exact scores (host (Bp, C) f32) for a pid matrix that may mix
+        base and delta pids. Each origin is scored by its own gather +
+        decompress-MaxSim dispatch and scattered positionally — per-
+        candidate scores are independent, so the stitched matrix is
+        bitwise what one dispatch over a unified index would produce."""
+        pids_p = np.asarray(pids_p)
+        delta_mask = pids_p >= live.base_n
+        base_pids = np.where(delta_mask, -1, pids_p)
+        codes, packed, valid = self.searcher._dedup_gather(
+            base_pids, codes_only=False)
+        base_scores = np.asarray(self.searcher.score_gathered_lazy(
+            jnp.asarray(q), jnp.asarray(q_valid), jnp.asarray(codes),
+            jnp.asarray(packed), jnp.asarray(valid), base_pids))
+        if delta_mask.any():
+            delta_pids = np.where(delta_mask, pids_p, -1)
+            d_scores = live.exact_scores(q, q_valid, delta_pids)
+            return np.where(delta_mask, d_scores,
+                            base_scores).astype(np.float32)
+        return base_scores.astype(np.float32)
+
+    def _search_batch_live(self, live, method, q_embs, term_ids,
+                           term_weights, alphas, k: int):
+        """Overlay serving for a dirty live state: compose the same
+        stage primitives the frozen plans run — base index scoring plus
+        the delta segment, tombstones filtered at every merge — without
+        touching the compiled plans (which stay bitwise-frozen for the
+        inert case). Always the split stage-4 tail (bitwise-identical to
+        the fused one per the PR 8 parity contract)."""
+        from repro.core import plaid as plaid_mod
+        from repro.core.sharded import merge_topk
+        p = self.params
+        searcher = self.searcher
+        outcome = BatchOutcome()
+
+        if method in ("splade", "rerank", "hybrid"):
+            pids_b, s_scores = self.run_splade_batch(
+                list(term_ids), list(term_weights), p.first_k)
+            if method == "splade":
+                return pids_b[:, :k], s_scores[:, :k], outcome
+            q, q_valid = pad_query_batch_host(q_embs)
+            B, q, q_valid, pids_p = _pad_batch_rows(
+                q, q_valid, np.asarray(pids_b))
+            c_scores = self._live_exact(live, q, q_valid, pids_p)[:B]
+            if method == "rerank":
+                final = np.where(pids_b >= 0, c_scores, -np.inf)
+            else:
+                mask = pids_b >= 0
+                final = np.asarray(hybrid_mod.hybrid_scores(
+                    jnp.asarray(s_scores), jnp.asarray(c_scores),
+                    jnp.asarray(mask), alpha=jnp.asarray(alphas),
+                    normalizer=p.normalizer))
+            order = np.argsort(-final, axis=1, kind="stable")[:, :k]
+            sorted_final = np.take_along_axis(final, order, axis=1)
+            out_pids = np.where(sorted_final > -np.inf,
+                                np.take_along_axis(pids_b, order, axis=1),
+                                -1)
+            return out_pids, sorted_final, outcome
+
+        if method != "colbert":
+            raise ValueError(method)
+        sp = searcher.params
+        # stages 1-2 on the frozen base, mirroring probe_batch (exposed
+        # here because the overlay needs the probed cids for the delta
+        # IVF, which probe_batch does not return)
+        q, q_valid = plaid_mod.pad_query_batch(q_embs)
+        B, q, q_valid = _pad_batch_rows(q, q_valid)
+        scores_c, cids = plaid_mod.stage1_centroid_probe_batch(
+            q, q_valid, searcher.centroids, sp.nprobe)
+        cand = plaid_mod.stage2_candidates_batch(
+            searcher.ivf_padded, cids, sp.candidate_cap)
+        cand_np = np.asarray(cand)
+        n_real = (cand_np[:B] >= 0).sum(axis=1)
+
+        codes, _, valid = searcher._dedup_gather(cand_np, codes_only=True)
+        approx = plaid_mod.stage3_approx_score_batch(
+            scores_c, jnp.asarray(codes), jnp.asarray(valid), q_valid)
+        approx_np = np.asarray(jnp.where(cand >= 0, approx, -jnp.inf))
+
+        # tombstoned base candidates drop out pre-merge (pid -1 / -inf,
+        # exactly how padded candidate slots already behave)
+        tomb = live.is_tombstoned(np.clip(cand_np, 0, None)) & (cand_np >= 0)
+        base_cand = np.where(tomb, -1, cand_np).astype(np.int64)
+        approx_np = np.where(tomb, -np.inf, approx_np).astype(np.float32)
+
+        # delta candidates from the probed centroids' delta postings
+        d_lists = live.delta_candidates(np.asarray(cids))
+        W = max(1, max((len(x) for x in d_lists), default=0))
+        d_mat = np.full((cand_np.shape[0], W), -1, np.int64)
+        for b, arr in enumerate(d_lists):
+            d_mat[b, :len(arr)] = arr
+        d_approx = live.approx_scores(scores_c, q_valid, d_mat)
+
+        ndocs = min(sp.ndocs, sp.candidate_cap)
+        final_np, _ = merge_topk(
+            np.concatenate([base_cand, d_mat], axis=1),
+            np.concatenate([approx_np, d_approx], axis=1), ndocs)
+
+        exact = self._live_exact(live, q, q_valid, final_np)
+        out_pids, out_scores = searcher.finalize_topk(
+            jnp.asarray(exact), jnp.asarray(final_np), B, k)
+        return out_pids, out_scores, outcome
 
     # ------------------------------------------------------------------
     # degraded-answer bookkeeping (sharded process groups only; the

@@ -192,13 +192,28 @@ def _concat_shard_topk(shard_states):
     return pids, scores, missing
 
 
-def fuse_splade_state(cb, first_k: int):
+def _append_splade_delta(cb, pids, scores, first_k: int, live):
+    """Widen the concatenated per-shard stage-1 rows with the live
+    delta segment's top-k (global pids ≥ ``live.base_n``). Tombstoned
+    *base* docs never reach here — each shard excluded them pre-top-k —
+    and tombstoned delta docs are excluded inside ``splade_delta_topk``,
+    so the merge below sees only surviving documents."""
+    if live is None or not live.n_delta:
+        return pids, scores
+    d_pids, d_scores = live.splade_delta_topk(
+        list(cb.term_ids), list(cb.term_weights), first_k)
+    return (np.concatenate([pids, d_pids], axis=1),
+            np.concatenate([scores, d_scores], axis=1))
+
+
+def fuse_splade_state(cb, first_k: int, live=None):
     """Terminal fuse for the splade-only method: merge the per-shard
     stage-1 lists and truncate to the request's k. The full
     ``first_k``-wide merged rows are stashed in state so the stage-1
     cache can store them (a splade answer warms the same entry a later
     rerank/hybrid request reuses)."""
     pids, scores, missing = _concat_shard_topk(cb.shard_states)
+    pids, scores = _append_splade_delta(cb, pids, scores, first_k, live)
     pids_b, s_scores = merge_topk(pids, scores, first_k, pad_score=0.0)
     cb = cb.evolve(pids=pids_b[:, :cb.k], scores=s_scores[:, :cb.k])
     cb = cb.with_state(pids_b=pids_b, s_scores=s_scores)
@@ -216,11 +231,12 @@ def stage1_state_from_rows(cb, pids_b, s_scores):
                          q=q, q_valid=q_valid, B=B, gp=gp)
 
 
-def merge_stage1_state(cb, first_k: int):
+def merge_stage1_state(cb, first_k: int, live=None):
     """(B, first_k) global candidates — identical content and order to
     the single index's ``run_splade_batch`` — plus the padded query
     batch the downstream gather/score stages consume."""
     pids, scores, missing = _concat_shard_topk(cb.shard_states)
+    pids, scores = _append_splade_delta(cb, pids, scores, first_k, live)
     pids_b, s_scores = merge_topk(pids, scores, first_k, pad_score=0.0)
     q, q_valid = pad_query_batch_host(cb.q_embs)
     B, q, q_valid, gp = _pad_batch_rows(q, q_valid, pids_b)
@@ -229,7 +245,7 @@ def merge_stage1_state(cb, first_k: int):
                       q=q, q_valid=q_valid, B=B, gp=gp), missing)
 
 
-def fuse_scatter_rerank(cb, method: str, normalizer: str):
+def fuse_scatter_rerank(cb, method: str, normalizer: str, live=None):
     """Terminal rerank/hybrid fuse: sync each shard's narrow score
     slice (``c_dev`` — lazy device value or already-synced numpy),
     scatter it back into the global candidate columns, α-fuse for
@@ -244,6 +260,20 @@ def fuse_scatter_rerank(cb, method: str, normalizer: str):
             continue
         scatter_scores(c_scores, s["cols"][:pids_b.shape[0]],
                        np.asarray(s["c_dev"]))
+    if live is not None and live.n_delta:
+        # delta candidates are owned by no shard (their pids lie past
+        # every boundary) — score them at the coordinator with the same
+        # decompress+MaxSim kernel and fill their columns
+        dmask = pids_b >= live.base_n
+        if dmask.any():
+            d_pids = np.where(dmask, pids_b, -1)
+            pad = st["q"].shape[0] - d_pids.shape[0]
+            if pad:
+                d_pids = np.pad(d_pids, ((0, pad), (0, 0)),
+                                constant_values=-1)
+            d_scores = live.exact_scores(st["q"], st["q_valid"], d_pids)
+            c_scores = np.where(dmask, d_scores[:pids_b.shape[0]],
+                                c_scores)
     if method == "rerank":
         final = np.where(pids_b >= 0, c_scores, -np.inf)
     else:
@@ -267,26 +297,47 @@ def fuse_scatter_rerank(cb, method: str, normalizer: str):
                          missing)
 
 
-def merge_approx_state(cb, offsets, ndocs: int):
+def merge_approx_state(cb, offsets, ndocs: int, live=None):
     """Global PLAID survivor selection: remap per-shard candidates to
     global pids, merge raw approx scores, and apply the ndocs cut
     *globally* (a shard-local cut would diverge from the single-index
-    path)."""
-    live, missing = _live_shard_states(cb.shard_states)
+    path). With a live overlay, tombstoned base candidates drop out
+    pre-merge (pid −1 / −inf, exactly how padded candidate slots
+    already behave) and the delta segment contributes its own
+    candidates, approx-scored at the coordinator from the same probed
+    centroid scores the shards used."""
+    alive, missing = _live_shard_states(cb.shard_states)
     gpids = np.concatenate(
         [np.where(s["cand_np"] >= 0, s["cand_np"] + offsets[i], -1)
-         for i, s in live], axis=1)
-    ascore = np.concatenate([s["approx_np"] for _, s in live], axis=1)
+         for i, s in alive], axis=1)
+    ascore = np.concatenate([s["approx_np"] for _, s in alive], axis=1)
+    if live is not None and live.dirty:
+        tomb = live.tombstone_array()
+        if tomb.size:
+            drop = np.isin(gpids, tomb) & (gpids >= 0)
+            ascore = np.where(drop, -np.inf, ascore).astype(np.float32)
+            gpids = np.where(drop, -1, gpids)
+        if live.n_delta:
+            d_lists = live.delta_candidates(np.asarray(cb.state["cids"]))
+            W = max(1, max((len(x) for x in d_lists), default=0))
+            d_mat = np.full((gpids.shape[0], W), -1, np.int64)
+            for b, arr in enumerate(d_lists):
+                d_mat[b, :len(arr)] = arr
+            d_approx = live.approx_scores(
+                cb.state["scores_c"], cb.state["q_valid"], d_mat)
+            gpids = np.concatenate([gpids, d_mat], axis=1)
+            ascore = np.concatenate([ascore, d_approx], axis=1)
     final_g, _ = merge_topk(gpids, ascore, ndocs)
-    n_real = sum(s["n_real"][:cb.state["B"]] for _, s in live)
+    n_real = sum(s["n_real"][:cb.state["B"]] for _, s in alive)
     return _note_missing(cb.with_state(final_g=final_g, n_real=n_real),
                          missing)
 
 
-def fuse_colbert_state(cb):
+def fuse_colbert_state(cb, live=None):
     """Terminal PLAID fuse: every global candidate is owned by exactly
     one shard — scatter each shard's narrow exact-score slice back into
-    the global matrix and merge."""
+    the global matrix and merge. Delta candidates (owned by no shard)
+    are exact-scored at the coordinator."""
     st = cb.state
     B, g = st["B"], st["final_g"]
     ex = np.full(g.shape, -np.inf, np.float32)
@@ -296,6 +347,12 @@ def fuse_colbert_state(cb):
             missing.append(i)
             continue
         scatter_scores(ex, s["cols"], s["exact_np"])
+    if live is not None and live.n_delta:
+        dmask = g >= live.base_n
+        if dmask.any():
+            d_pids = np.where(dmask, g, -1)
+            d_scores = live.exact_scores(st["q"], st["q_valid"], d_pids)
+            ex = np.where(dmask, d_scores, ex)
     out_pids, out_scores = merge_topk(g[:B], ex[:B], cb.k)
     aux = [{"candidates": int(x)} for x in st["n_real"]]
     return _note_missing(
@@ -352,6 +409,7 @@ class ShardedRetriever(MultiStageRetriever):
         self.n_shards = len(self.shards)
         self.n_docs = int(self.offsets[-1])
         self._lock = threading.Lock()
+        self._live_mut = threading.Lock()
         self._plans: dict = {}
         self.pipeline_stats = PipelineStats()
         # gather concurrency capped at the core count: more threads than
@@ -410,6 +468,14 @@ class ShardedRetriever(MultiStageRetriever):
             [np.where(p >= 0, p + self.offsets[i], -1)
              for i, (p, _) in enumerate(outs)], axis=1)
         scores = np.concatenate([s for _, s in outs], axis=1)
+        live = self.live
+        # n_shards == 1 shares the live object with its single shard,
+        # whose own live path already merged the delta — skip it here
+        if self.n_shards > 1 and live is not None and live.n_delta:
+            d_pids, d_scores = live.splade_delta_topk(
+                list(term_ids), list(term_weights), k)
+            pids = np.concatenate([pids, d_pids], axis=1)
+            scores = np.concatenate([scores, d_scores], axis=1)
         return merge_topk(pids, scores, k, pad_score=0.0)
 
     # ------------------------------------------------------------------
@@ -463,6 +529,113 @@ class ShardedRetriever(MultiStageRetriever):
     def _plaid_salt(self) -> str:
         sp = self.shards[0].searcher.params
         return f"np{sp.nprobe}|cc{sp.candidate_cap}|nd{sp.ndocs}"
+
+    # ------------------------------------------------------------------
+    # live (mutable) index over the shard group
+    # ------------------------------------------------------------------
+    # Groups never take the unsharded inline-overlay route — the live
+    # state is injected into the shared merge/fuse bodies at call time,
+    # so per-shard plans stay frozen.
+    _live_inline = False
+
+    def enable_live(self):
+        """Attach group-level live state. The delta segment and the
+        tombstone set live at the coordinator; each shard retriever gets
+        a :class:`~repro.index.live.LiveView` holding its own (local)
+        tombstones so its SPLADE stage excludes them pre-top-k."""
+        if self.live is not None:
+            return self.live
+        if self.n_shards == 1:
+            self.live = self.shards[0].enable_live()
+            return self.live
+        if self.shards[0].searcher.device_resident:
+            raise ValueError("live index requires the host (mmap) tier; "
+                             "device_resident pools are frozen")
+        from repro.index.live import LiveIndexState, LiveView
+        live = LiveIndexState(self.shards[0].searcher.index,
+                              self.shards[0].splade)
+        # geometry is replicated across shards; the pid space is the
+        # group's — new docs append past the last boundary
+        live.base_n = self.n_docs
+        for sh in self.shards:
+            sh.live = LiveView()
+        self.live = live
+        return live
+
+    def _sync_shard_view(self, j: int):
+        lo, hi = int(self.offsets[j]), int(self.offsets[j + 1])
+        self.shards[j].live.update(self.live.local_tombstones(lo, hi),
+                                   generation=self.index_generation)
+
+    def live_delete(self, gpid: int) -> bool:
+        live = self._require_live()
+        with self._live_mut:
+            ok = live.delete(gpid)
+            if not ok:
+                return False
+            gpid = int(gpid)
+            if self.n_shards > 1 and gpid < live.base_n:
+                j = int(np.searchsorted(self.offsets, gpid,
+                                        side="right") - 1)
+                self._sync_shard_view(j)
+            self.bump_index_generation()
+        return True
+
+    def compact_live(self):
+        """Merge the delta prefix into the **last** shard: delta doc j's
+        global pid ``base_n + j`` already equals ``offsets[-1] + j``, so
+        appending to the last shard's layout preserves every pid. The
+        build runs off-gate; the swap (replace ``shards[-1]``, grow the
+        boundary, rebase, bump) drains readers under the write gate."""
+        if self.n_shards == 1:
+            out = self.shards[0].compact_live()
+            self.index_generation = self.shards[0].index_generation
+            if out is not None:
+                # mirror the grown layout (and drop plan closures built
+                # over the pre-swap store's access stats)
+                self.offsets[-1] += out["compacted"]
+                self.n_docs = int(self.offsets[-1])
+                with self._lock:
+                    self._plans.clear()
+            return out
+        live = self._require_live()
+        with self._live_mut:
+            n_take = live.snapshot_delta()
+            if n_take == 0:
+                return None
+            from repro.core.plaid import PLAIDSearcher
+            from repro.index import live as live_mod
+            from repro.index.builder import ColBERTIndex
+            from repro.index.live import LiveView
+            from repro.index.splade_index import SpladeIndex
+            last = self.shards[-1]
+            idx = last.searcher.index
+            gen = self.index_generation + 1
+            col_dir = idx.path.with_name(f"{idx.path.name}.g{gen}")
+            spl_dir = idx.path.with_name(f"splade.g{gen}")
+            live_mod.compact_colbert_dir(idx, live, n_take, col_dir)
+            live_mod.compact_splade_dir(last.splade, live, n_take, spl_dir)
+            new_searcher = PLAIDSearcher(
+                ColBERTIndex(col_dir, mode=idx.store.mode),
+                last.searcher.params, device_resident=False)
+            new_retr = MultiStageRetriever(
+                SpladeIndex.load(spl_dir), new_searcher,
+                device=getattr(last, "device", None), params=self.params)
+            new_retr.set_splade_backend(self.splade_backend)
+            new_retr.set_rerank_backend(last.rerank_backend)
+            with live.gate.write():
+                j = self.n_shards - 1
+                self.shards[j] = new_retr
+                self.offsets[j + 1] += n_take   # plan closures see this
+                self.n_docs = int(self.offsets[-1])
+                with self._lock:
+                    self._plans.clear()
+                live.rebase(n_take)
+                new_retr.live = LiveView()
+                self._sync_shard_view(j)
+                self.bump_index_generation()
+        return {"compacted": n_take, "colbert_dir": str(col_dir),
+                "splade_dir": str(spl_dir)}
 
     # ------------------------------------------------------------------
     # sharded stage plans
@@ -548,7 +721,9 @@ class ShardedRetriever(MultiStageRetriever):
                 return s
 
             def merge_approx(cb):
-                return merge_approx_state(cb, offs, ndocs)
+                # live is read at call time: plans compiled before
+                # enable_live (or before the first mutation) stay valid
+                return merge_approx_state(cb, offs, ndocs, live=self.live)
 
             def gather_residuals(cb, i):
                 s = dict(cb.shard_states[i])
@@ -585,7 +760,8 @@ class ShardedRetriever(MultiStageRetriever):
                 Stage("host_gather:residuals", gather_kind,
                       gather_residuals, fanout=S, pooled=not dr),
                 Stage("device_score:exact", DEVICE, exact, fanout=S),
-                Stage("merge_topk", HOST, fuse_colbert_state))
+                Stage("merge_topk", HOST,
+                      lambda cb: fuse_colbert_state(cb, live=self.live)))
             return StagePlan(method=method, stages=stages,
                              access_stats=access, pool=self._pool)
 
@@ -605,7 +781,12 @@ class ShardedRetriever(MultiStageRetriever):
                 # per-shard fanout; the merge stage rebuilds state
                 return cb.with_state(stage1_cached=cached)
             tids, tw = list(cb.term_ids), list(cb.term_weights)
-            if backend == "host":
+            live = self.live
+            if backend == "host" or (live is not None and live.dirty):
+                # a dirty live state forces the host stage-1: the shard
+                # retrievers' live views apply tombstone exclusion
+                # pre-top-k there (the device scorers have no exclusion
+                # path), matching the unsharded live rule
                 outs = [sh.run_splade_batch(tids, tw, p.first_k,
                                             _record=False)
                         for sh in shards]
@@ -626,7 +807,7 @@ class ShardedRetriever(MultiStageRetriever):
                 pids_b, s_scores = cached
                 return cb.evolve(pids=pids_b[:, :cb.k],
                                  scores=s_scores[:, :cb.k])
-            cb = fuse_splade_state(cb, p.first_k)
+            cb = fuse_splade_state(cb, p.first_k, live=self.live)
             self._stage1_group_store(cb)
             return cb
 
@@ -642,7 +823,7 @@ class ShardedRetriever(MultiStageRetriever):
             cached = cb.state.get("stage1_cached")
             if cached is not None:
                 return stage1_state_from_rows(cb, *cached)
-            cb = merge_stage1_state(cb, p.first_k)
+            cb = merge_stage1_state(cb, p.first_k, live=self.live)
             self._stage1_group_store(cb)
             return cb
 
@@ -670,7 +851,8 @@ class ShardedRetriever(MultiStageRetriever):
         def fuse_rerank(cb):
             # sync each shard's narrow lazy score slice and scatter it
             # back into the global candidate columns
-            return fuse_scatter_rerank(cb, method, p.normalizer)
+            return fuse_scatter_rerank(cb, method, p.normalizer,
+                                       live=self.live)
 
         stages = (Stage("splade_stage1", s1_kind, splade_stage),
                   Stage("merge_topk:stage1", HOST, merge_stage1),
@@ -716,6 +898,14 @@ def build_sharded_retriever(shard_dirs, boundaries, *, mode: str = "mmap",
 # ---------------------------------------------------------------------------
 # process-group backend: shared-nothing shard workers over RPC
 # ---------------------------------------------------------------------------
+
+#: Write ops mutate worker state, so the pure-op recovery machinery is
+#: off-limits for them: hedging would race two applications of the same
+#: write, and sibling failover could double-apply one that half-landed
+#: on the failed replica. The dispatcher surfaces their failures to the
+#: caller instead.
+MUTATION_OPS = frozenset({"live_sync", "live_reload"})
+
 
 class _Slot:
     """One logical RPC enqueued on a :class:`_ShardDispatcher`; resolves
@@ -860,16 +1050,20 @@ class _ShardDispatcher:
         except _Straggler:
             # the replica is merely slow: give up on it past the hedge
             # budget and re-run the op on a sibling (safe — shard ops
-            # are pure). The straggler's reply stays pending on its own
-            # connection; FIFO discipline consumes it later without
-            # desequencing.
+            # are pure; mutation ops never arm the budget, see
+            # ``_wait_replica``). The straggler's reply stays pending on
+            # its own connection; FIFO discipline consumes it later
+            # without desequencing.
             g.pipeline_stats.counter("hedges")
             out = g._resend_slot(self.i, slot)
             g.pipeline_stats.counter("hedge_wins")
             return out
         except (ShardWorkerDied, DeadlineExceeded) as e:
-            if g._replica_sets[self.i].total == 1:
-                raise          # legacy single-replica: heal on next use
+            if (slot.op in MUTATION_OPS
+                    or g._replica_sets[self.i].total == 1):
+                # mutations must not fail over (retry could double-
+                # apply); single-replica keeps legacy heal-on-next-use
+                raise
             g.pipeline_stats.counter("failover_retries")
             return g._resend_slot(self.i, slot, last_error=e)
 
@@ -995,6 +1189,7 @@ class ProcessShardGroup(MultiStageRetriever):
                 i, reps, hedge_factor=hedge_factor,
                 hedge_floor_ms=hedge_floor_ms))
         self._lock = threading.Lock()
+        self._live_mut = threading.Lock()
         self._plans: dict = {}
         self.pipeline_stats = PipelineStats()
         total_replicas = sum(rs.total for rs in self._replica_sets)
@@ -1137,7 +1332,10 @@ class ProcessShardGroup(MultiStageRetriever):
 
         rs = self._replica_sets[i]
         r = slot.replica
-        budget_ms = rs.hedge_budget_ms(r)
+        # mutation ops never arm the hedge budget: a straggling write
+        # must be waited out, not re-sent to a sibling
+        budget_ms = (None if slot.op in MUTATION_OPS
+                     else rs.hedge_budget_ms(r))
         t0 = time.monotonic()
         try:
             if budget_ms is not None:
@@ -1171,6 +1369,14 @@ class ProcessShardGroup(MultiStageRetriever):
                                              ShardWorkerDied,
                                              ShardWorkerError)
 
+        if slot.op in MUTATION_OPS:
+            # defense in depth behind the wait()-side guard: a write
+            # may have half-applied on the failed replica, so re-running
+            # it on a sibling could double-apply
+            if last_error is not None:
+                raise last_error
+            raise ShardWorkerDied(
+                f"shard {i}: mutation op {slot.op!r} is not retryable")
         rs = self._replica_sets[i]
         delay_s = self.failover_backoff_ms / 1e3
         exclude = slot.replica
@@ -1445,6 +1651,117 @@ class ProcessShardGroup(MultiStageRetriever):
         return f"np{sp.nprobe}|cc{sp.candidate_cap}|nd{sp.ndocs}"
 
     # ------------------------------------------------------------------
+    # live (mutable) index over process workers
+    # ------------------------------------------------------------------
+    # The delta segment and the tombstone set live at the coordinator
+    # (delta docs are scored coordinator-side via the merge bodies' live
+    # injection); workers only need their local tombstones for SPLADE
+    # pre-top-k exclusion, replicated by the ``live_sync`` write RPC.
+    _live_inline = False
+
+    def enable_live(self):
+        """Attach coordinator-side live state; geometry is loaded from
+        shard 0's subtree (replicated, metadata-sized). Remote replica
+        endpoints are unsupported — delta replication is local-only."""
+        if self.live is not None:
+            return self.live
+        for rs in self._replica_sets:
+            for r in rs.replicas:
+                if r.endpoint is not None:
+                    raise ValueError(
+                        "live index over remote replica endpoints is "
+                        "unsupported (mutation replication is "
+                        "local-only)")
+        from repro.index.builder import ColBERTIndex
+        from repro.index.live import LiveIndexState
+        from repro.index.splade_index import SpladeIndex
+        d = pathlib.Path(self.shard_dirs[0])
+        live = LiveIndexState(ColBERTIndex(d / "colbert", mode="mmap"),
+                              SpladeIndex.load(d / "splade", mmap=True))
+        live.base_n = self.n_docs
+        self.live = live
+        return live
+
+    def _broadcast_live_sync(self, j: int):
+        """Full-state tombstone sync to every live replica of shard
+        ``j`` — direct synchronous calls, never hedged or retried on
+        siblings (``MUTATION_OPS``). A replica that is down right now
+        is skipped; it re-syncs on the next mutation's broadcast
+        (eventual consistency — quiesce-point parity only requires the
+        replicas serving traffic to be current)."""
+        payload = {"tombstones": self.live.local_tombstones(
+                       int(self.offsets[j]), int(self.offsets[j + 1])),
+                   "generation": self.index_generation}
+        for r in self._replica_sets[j].replicas:
+            cli = r.client
+            if cli is None or not cli.alive():
+                continue
+            cli.call("live_sync", payload,
+                     timeout_ms=self.op_deadline_ms)
+
+    def live_delete(self, gpid: int) -> bool:
+        live = self._require_live()
+        with self._live_mut:
+            ok = live.delete(gpid)
+            if not ok:
+                return False
+            self.bump_index_generation()
+            gpid = int(gpid)
+            if gpid < live.base_n:
+                j = int(np.searchsorted(self.offsets, gpid,
+                                        side="right") - 1)
+                self._broadcast_live_sync(j)
+        return True
+
+    def compact_live(self):
+        """Merge the delta prefix into the last shard (pid-preserving —
+        see :meth:`ShardedRetriever.compact_live`): build the new
+        generation's subtree off-gate, then under the write gate grow
+        the boundary, rebase, repoint ``shard_dirs[-1]`` (so respawns
+        load the compacted layout) and ``live_reload`` every replica."""
+        live = self._require_live()
+        with self._live_mut:
+            n_take = live.snapshot_delta()
+            if n_take == 0:
+                return None
+            from repro.index import live as live_mod
+            from repro.index.builder import ColBERTIndex
+            from repro.index.splade_index import SpladeIndex
+            last_dir = pathlib.Path(self.shard_dirs[-1])
+            gen = self.index_generation + 1
+            tree = last_dir.with_name(f"{last_dir.name}.g{gen}")
+            col_dir, spl_dir = tree / "colbert", tree / "splade"
+            live_mod.compact_colbert_dir(
+                ColBERTIndex(last_dir / "colbert", mode="mmap"),
+                live, n_take, col_dir)
+            live_mod.compact_splade_dir(
+                SpladeIndex.load(last_dir / "splade", mmap=True),
+                live, n_take, spl_dir)
+            j = self.n_shards - 1
+            with live.gate.write():
+                self.shard_dirs[j] = str(tree)
+                self.offsets[j + 1] += n_take   # plan closures see this
+                self.n_docs = int(self.offsets[-1])
+                live.rebase(n_take)
+                self.bump_index_generation()
+                payload = {
+                    "colbert_dir": str(col_dir),
+                    "splade_dir": str(spl_dir),
+                    "tombstones": live.local_tombstones(
+                        int(self.offsets[j]), int(self.offsets[j + 1])),
+                    "generation": self.index_generation}
+                for r in self._replica_sets[j].replicas:
+                    cli = r.client
+                    if cli is None or not cli.alive():
+                        continue
+                    cli.call("live_reload", payload,
+                             timeout_ms=self.op_deadline_ms)
+                with self._lock:
+                    self._plans.clear()
+        return {"compacted": n_take, "colbert_dir": str(col_dir),
+                "splade_dir": str(spl_dir)}
+
+    # ------------------------------------------------------------------
     # RPC stage plans
     # ------------------------------------------------------------------
     def _build_plan(self, method: str) -> StagePlan:
@@ -1508,10 +1825,12 @@ class ProcessShardGroup(MultiStageRetriever):
                 Stage("shard_rpc:candidates", DEVICE, candidates_rpc,
                       fanout=S, pooled=True),
                 Stage("merge_topk:approx", HOST,
-                      lambda cb: merge_approx_state(cb, offs, ndocs)),
+                      lambda cb: merge_approx_state(cb, offs, ndocs,
+                                                    live=self.live)),
                 Stage("shard_rpc:exact", DEVICE, exact_rpc,
                       fanout=S, pooled=True),
-                Stage("merge_topk", HOST, fuse_colbert_state))
+                Stage("merge_topk", HOST,
+                      lambda cb: fuse_colbert_state(cb, live=self.live)))
             return StagePlan(method=method, stages=stages,
                              access_stats=None, pool=self._pool)
 
@@ -1549,7 +1868,7 @@ class ProcessShardGroup(MultiStageRetriever):
                 pids_b, s_scores = cached
                 return cb.evolve(pids=pids_b[:, :cb.k],
                                  scores=s_scores[:, :cb.k])
-            cb = fuse_splade_state(cb, p.first_k)
+            cb = fuse_splade_state(cb, p.first_k, live=self.live)
             self._stage1_group_store(cb)
             return cb
 
@@ -1557,7 +1876,7 @@ class ProcessShardGroup(MultiStageRetriever):
             cached = cb.state.get("stage1_cached")
             if cached is not None:
                 return stage1_state_from_rows(cb, *cached)
-            cb = merge_stage1_state(cb, p.first_k)
+            cb = merge_stage1_state(cb, p.first_k, live=self.live)
             self._stage1_group_store(cb)
             return cb
 
@@ -1602,8 +1921,8 @@ class ProcessShardGroup(MultiStageRetriever):
             Stage("shard_rpc:wait", DEVICE, score_wait, fanout=S,
                   closes_async=True),
             Stage("fuse_topk", HOST,
-                  lambda cb: fuse_scatter_rerank(cb, method,
-                                                 p.normalizer)))
+                  lambda cb: fuse_scatter_rerank(cb, method, p.normalizer,
+                                                 live=self.live)))
         return StagePlan(method=method, stages=stages,
                          access_stats=None, pool=self._pool)
 

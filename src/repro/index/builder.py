@@ -22,8 +22,17 @@ from repro.index import kmeans, residual
 def build_colbert_index(out_dir, doc_embs: np.ndarray, doc_lens: np.ndarray,
                         *, nbits: int = 4, n_centroids: int | None = None,
                         kmeans_iters: int = 8, sample_cap: int = 65536,
-                        seed: int = 0):
-    """doc_embs: (n_docs, doc_maxlen, dim) unit-norm; doc_lens: (n_docs,)."""
+                        seed: int = 0, centroids: np.ndarray | None = None,
+                        bucket_cutoffs: np.ndarray | None = None,
+                        bucket_weights: np.ndarray | None = None):
+    """doc_embs: (n_docs, doc_maxlen, dim) unit-norm; doc_lens: (n_docs,).
+
+    Passing ``centroids`` + ``bucket_cutoffs`` + ``bucket_weights`` pins
+    the geometry: k-means training and codec fitting are skipped and the
+    corpus is encoded against the given codec. The live-index rebuild
+    oracle uses this so a from-scratch rebuild of a mutated corpus is
+    bitwise comparable to serving the base index + delta segment (both
+    sides then quantise residuals identically)."""
     out = pathlib.Path(out_dir)
     out.mkdir(parents=True, exist_ok=True)
     n_docs, doc_maxlen, dim = doc_embs.shape
@@ -34,25 +43,39 @@ def build_colbert_index(out_dir, doc_embs: np.ndarray, doc_lens: np.ndarray,
     token_pids = np.repeat(np.arange(n_docs), doc_lens)
     n_tokens = flat.shape[0]
 
-    if n_centroids is None:
-        n_centroids = max(16, min(kmeans.pick_n_centroids(n_tokens),
-                                  n_tokens // 4))
+    if centroids is not None:
+        if bucket_cutoffs is None or bucket_weights is None:
+            raise ValueError("pinned geometry needs centroids, "
+                             "bucket_cutoffs and bucket_weights together")
+        centroids = np.asarray(centroids, np.float32)
+        n_centroids = int(centroids.shape[0])
+        codec = residual.ResidualCodec(
+            centroids=jnp.asarray(centroids),
+            bucket_cutoffs=jnp.asarray(bucket_cutoffs, jnp.float32),
+            bucket_weights=jnp.asarray(bucket_weights, jnp.float32),
+            nbits=nbits)
+        cids = np.asarray(kmeans.assign(jnp.asarray(flat),
+                                        jnp.asarray(centroids))[0])
+    else:
+        if n_centroids is None:
+            n_centroids = max(16, min(kmeans.pick_n_centroids(n_tokens),
+                                      n_tokens // 4))
 
-    rng = np.random.default_rng(seed)
-    sample = flat[rng.choice(n_tokens, min(sample_cap, n_tokens),
-                             replace=False)]
-    centroids = kmeans.train_kmeans(jax.random.PRNGKey(seed),
-                                    jnp.asarray(sample), n_centroids,
-                                    kmeans_iters)
-    centroids = np.asarray(centroids, np.float32)
+        rng = np.random.default_rng(seed)
+        sample = flat[rng.choice(n_tokens, min(sample_cap, n_tokens),
+                                 replace=False)]
+        centroids = kmeans.train_kmeans(jax.random.PRNGKey(seed),
+                                        jnp.asarray(sample), n_centroids,
+                                        kmeans_iters)
+        centroids = np.asarray(centroids, np.float32)
 
-    cids, _ = kmeans.assign(jnp.asarray(flat), jnp.asarray(centroids))
-    cids = np.asarray(cids)
+        cids, _ = kmeans.assign(jnp.asarray(flat), jnp.asarray(centroids))
+        cids = np.asarray(cids)
 
-    codec = residual.fit_codec(centroids, sample,
-                               np.asarray(kmeans.assign(
-                                   jnp.asarray(sample),
-                                   jnp.asarray(centroids))[0]), nbits)
+        codec = residual.fit_codec(centroids, sample,
+                                   np.asarray(kmeans.assign(
+                                       jnp.asarray(sample),
+                                       jnp.asarray(centroids))[0]), nbits)
     packed = np.asarray(residual.encode_residuals(
         jnp.asarray(flat), jnp.asarray(cids), codec.centroids,
         codec.bucket_cutoffs, nbits))

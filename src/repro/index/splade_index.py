@@ -85,7 +85,8 @@ class SpladeIndex:
         pids, top_scores = _topk_rows(scores[None], k)
         return pids[0], top_scores[0]
 
-    def score_batch_host(self, term_ids, term_weights, k: int = 200):
+    def score_batch_host(self, term_ids, term_weights, k: int = 200,
+                         exclude=None):
         """Vectorised multi-query host scoring (the no-device/mmap tier).
 
         term_ids/term_weights: sequences of (Qt_i,) arrays (ragged fine).
@@ -96,6 +97,14 @@ class SpladeIndex:
         Peak memory is ``4·B·n_docs`` bytes (vs one (n_docs,) vector per
         query sequentially) — size ``max_batch`` accordingly on very
         large host-tier corpora.
+
+        ``exclude``: optional array of pids masked out *before* the
+        top-k (live-index tombstones). Exclusion must happen pre-top-k
+        so a tombstoned doc cannot displace a survivor from the k list
+        — that is what keeps the filtered ranking identical to an index
+        that never contained the doc. Legit scores are ≥ 0 (weights and
+        impacts are non-negative), so excluded docs are marked with a
+        negative sentinel and scrubbed to (-1, 0.0) pads afterwards.
         Returns (pids (B, k), scores (B, k)) sorted desc; -1 padded."""
         B = len(term_ids)
         scores = np.zeros((B, self.n_docs), np.float32)
@@ -138,7 +147,15 @@ class SpladeIndex:
             flat_target = np.repeat(qidx, e_lens) * self.n_docs \
                 + u_pids[e_src]
             np.add.at(scores.reshape(-1), flat_target, vals)
-        return _topk_rows(scores, k)
+        exclude = None if exclude is None else np.asarray(exclude, np.int64)
+        if exclude is not None and exclude.size:
+            scores[:, exclude] = -1.0
+        pids, top = _topk_rows(scores, k)
+        if exclude is not None and exclude.size:
+            bad = top < 0
+            pids[bad] = -1
+            top[bad] = 0.0
+        return pids, top
 
     # ------------------------------------------------------------------
     def as_padded(self, max_df: int):
@@ -187,15 +204,20 @@ class SpladeIndex:
 
 
 def build_splade_index(doc_term_ids: np.ndarray, doc_term_weights: np.ndarray,
-                       vocab: int, n_docs: int) -> SpladeIndex:
+                       vocab: int, n_docs: int,
+                       quantum: float | None = None) -> SpladeIndex:
     """doc_term_ids/weights: (n_docs, T) top-T sparse representations
-    (0-weight entries ignored)."""
+    (0-weight entries ignored). ``quantum`` pins an externally-chosen
+    quantisation step (live-index delta segments and rebuild-parity
+    oracles must quantise with the *base* index's quantum so impacts
+    stay bitwise comparable); default derives it from this corpus."""
     rows, cols = np.nonzero(doc_term_weights > 0)
     terms = doc_term_ids[rows, cols].astype(np.int64)
     weights = doc_term_weights[rows, cols].astype(np.float32)
     pids = rows.astype(np.int32)
 
-    quantum = float(weights.max()) / 255.0 if len(weights) else 1.0
+    if quantum is None:
+        quantum = float(weights.max()) / 255.0 if len(weights) else 1.0
     imps = np.clip(np.round(weights / max(quantum, 1e-9)), 1, 255).astype(np.uint8)
 
     order = np.lexsort((pids, terms))

@@ -237,6 +237,17 @@ def main():
     ap.add_argument("--replay", default=None,
                     help="replay a query-index trace file (one index "
                          "per line) instead of sampling")
+    ap.add_argument("--live", action="store_true",
+                    help="enable the mutable index: upsert/delete/"
+                         "compact ops on the TCP front (new docs land "
+                         "in an in-RAM delta segment, deletes are "
+                         "tombstones filtered at the merges; needs "
+                         "--mode mmap)")
+    ap.add_argument("--live-compact-every", type=int, default=None,
+                    help="background compaction threshold: merge the "
+                         "delta segment into a new index generation "
+                         "whenever it reaches this many docs (implies "
+                         "--live)")
     ap.add_argument("--port", type=int, default=None,
                     help="serve forever on this TCP port (0 binds an "
                          "ephemeral port and prints the real one); "
@@ -263,6 +274,13 @@ def main():
     # backend already configured (and device cache pre-materialised) via
     # MultiStageParams in build_or_load; the engine owns the retriever so
     # a process shard group's workers are reaped on every exit path
+    compactor = None
+    if args.live or args.live_compact_every is not None:
+        retr.enable_live()
+        if args.live_compact_every is not None:
+            from repro.index.live import AutoCompactor
+            compactor = AutoCompactor(retr, args.live_compact_every)
+            compactor.start()
     caches = None
     if args.cache_exact > 0 or args.cache_stage1 > 0:
         caches = CacheHierarchy(exact_entries=args.cache_exact,
@@ -381,6 +399,8 @@ def main():
         server.drain()
         server.stop()
     finally:
+        if compactor is not None:
+            compactor.stop()
         engine.close()     # stops pipelines + reaps shard workers
 
 

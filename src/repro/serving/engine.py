@@ -140,8 +140,12 @@ class ServeEngine:
     # -- pipelining ------------------------------------------------------
     @property
     def pipelined(self) -> bool:
+        # a live (mutable) retriever must stay synchronous: pipelined
+        # executors hold compiled plans across batches, and a mutation
+        # or compaction swap mid-flight would race the stage graph
         return (self.pipeline_depth > 1
-                and hasattr(self.retriever, "compile_plan"))
+                and hasattr(self.retriever, "compile_plan")
+                and getattr(self.retriever, "live", None) is None)
 
     def _pipeline(self, method: str) -> PipelineExecutor:
         """Per-method executor over the method's compiled plan, built
@@ -207,6 +211,27 @@ class ServeEngine:
         return {"depth": self.pipeline_depth,
                 "queues": {m: px.queue_depths()
                            for m, px in pipes.items()}}
+
+    # -- live index ------------------------------------------------------
+    def live_upsert(self, doc_emb, term_ids, term_weights,
+                    doc_len=None) -> int:
+        """Append one document to the retriever's delta segment; returns
+        the new global pid. Requires ``enable_live()`` on the
+        retriever."""
+        return self.retriever.live_upsert(doc_emb, term_ids, term_weights,
+                                          doc_len)
+
+    def live_delete(self, pid: int) -> bool:
+        return self.retriever.live_delete(pid)
+
+    def live_compact(self):
+        return self.retriever.compact_live()
+
+    def live_stats(self):
+        live = getattr(self.retriever, "live", None)
+        if live is None:
+            return None
+        return self.retriever.live_stats()
 
     # -- request context & caching ---------------------------------------
     def context_for(self, req: Request) -> RequestContext:

@@ -455,6 +455,11 @@ class RetrievalServer:
                 for name, r in snap["stages"].items()}
             h["overlap_fraction"] = snap["overlap_fraction"]
             h["counters"] = dict(snap.get("counters", {}))
+        live = getattr(retr, "live", None)
+        if live is not None:
+            h["live"] = (retr.live_stats() if hasattr(retr, "live_stats")
+                         else live.stats())
+            h["index_generation"] = getattr(retr, "index_generation", 0)
         if self.admission is not None:
             h["admission"] = self.admission.stats()
         caches = getattr(self.engine, "caches", None)
@@ -470,12 +475,46 @@ class RetrievalServer:
 # ---------------------------------------------------------------------------
 
 class _Handler(socketserver.StreamRequestHandler):
+    def _admin(self, msg, op):
+        """Control-plane ops share the query socket, dispatched on an
+        explicit ``op`` key so plain query lines stay wire-compatible:
+        live mutations (upsert/delete), compaction, and health/stats.
+        Mutations go through the engine pass-throughs, so they require
+        a live-enabled retriever (``--live``) and fail cleanly — as an
+        ``error`` reply, not a dropped connection — on a frozen one."""
+        rs = self.server.retrieval
+        engine = rs.engine
+        if op == "upsert":
+            pid = engine.live_upsert(
+                np.asarray(msg["doc_emb"], np.float32),
+                np.asarray(msg.get("term_ids", []), np.int32),
+                np.asarray(msg.get("term_weights", []), np.float32),
+                msg.get("doc_len"))
+            return {"ok": True, "pid": int(pid)}
+        if op == "delete":
+            return {"ok": bool(engine.live_delete(int(msg["pid"])))}
+        if op == "compact":
+            out = engine.live_compact()
+            return {"ok": True,
+                    "compacted": 0 if not out else int(out["compacted"])}
+        if op == "live_stats":
+            return {"ok": True, "live": engine.live_stats()}
+        if op == "health":
+            return {"ok": True, "health": rs.health()}
+        raise ValueError(f"unknown op {op!r}")
+
     def handle(self):
         for line in self.rfile:
             qid = None
             try:
                 msg = json.loads(line)
                 qid = msg.get("qid")
+                op = msg.get("op")
+                if op is not None:
+                    out = self._admin(msg, op)
+                    self.wfile.write((json.dumps(out) + "\n").encode())
+                    self.wfile.flush()
+                    continue
                 req = Request(
                     qid=msg["qid"], method=msg.get("method", "hybrid"),
                     q_emb=np.asarray(msg["q_emb"], np.float32)

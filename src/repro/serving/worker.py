@@ -101,6 +101,9 @@ def _handle(state: _WorkerState, op: str, payload: dict):
              "served": state.served,
              "uptime_s": time.monotonic() - state.t_start,
              "access": sr.index.store.stats.snapshot()}
+        if retr.live is not None:
+            h["live"] = retr.live.stats()
+            h["generation"] = retr.index_generation
         if state.channel is not None:
             # worker-side view of the same channel (its bytes_sent is
             # the coordinator's bytes_recv); keyed distinctly so it
@@ -165,6 +168,47 @@ def _handle(state: _WorkerState, op: str, payload: dict):
             jnp.asarray(codes), jnp.asarray(packed), jnp.asarray(valid),
             jnp.asarray(sel))
         return {"scores": np.asarray(exact)}
+
+    if op == "live_sync":
+        # full-state tombstone replication (idempotent): the worker's
+        # SPLADE stage excludes these local pids pre-top-k, exactly
+        # like the in-process thread shards' LiveViews
+        from repro.index.live import LiveView
+
+        if retr.live is None:
+            retr.live = LiveView()
+        retr.live.update(payload.get("tombstones"),
+                         generation=payload.get("generation"))
+        retr.index_generation = int(payload.get("generation") or 0)
+        return {"tombstones": int(retr.live.tombstones.size),
+                "generation": retr.live.generation}
+
+    if op == "live_reload":
+        # compaction swap: rebuild index/searcher handles from the new
+        # generation's directories and reset the tombstone view to the
+        # shard's (grown) range
+        import pathlib
+
+        from repro.core.plaid import PLAIDSearcher
+        from repro.index.builder import ColBERTIndex
+        from repro.index.live import LiveView
+        from repro.index.splade_index import SpladeIndex
+
+        mode = sr.index.store.mode
+        index = ColBERTIndex(pathlib.Path(payload["colbert_dir"]),
+                             mode=mode)
+        sidx = SpladeIndex.load(pathlib.Path(payload["splade_dir"]),
+                                mmap=(mode == "mmap"))
+        retr.splade = sidx
+        retr.searcher = PLAIDSearcher(index, sr.params)
+        with retr._lock:
+            retr._plans.clear()
+            retr._splade_device = None
+        retr.live = LiveView(payload.get("tombstones"),
+                             generation=payload.get("generation") or 0)
+        retr.index_generation = int(payload.get("generation") or 0)
+        return {"n_docs": int(sidx.n_docs),
+                "generation": retr.index_generation}
 
     raise ValueError(f"unknown RPC op {op!r}")
 
